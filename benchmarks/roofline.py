@@ -1,0 +1,139 @@
+"""Roofline report: joins dry-run artifacts with the analytic MODEL_FLOPS
+and emits the per-cell tables for EXPERIMENTS.md §Roofline, including the
+baseline-vs-optimized comparison (§Perf)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Useful flops: 6*N_active*D train, 2*N_active*D prefill; decode adds
+    the attention reads (2 * 2 * B * H * dh * S_attended per layer)."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    n_active = cfg.active_params_estimate()
+    B, S = sh["global_batch"], sh["seq_len"]
+    if sh["kind"] == "train":
+        return 6.0 * n_active * B * S
+    if sh["kind"] == "prefill":
+        return 2.0 * n_active * B * S
+    # decode: param reads + attention context reads
+    base = 2.0 * n_active * B
+    if cfg.ssm and not cfg.attn_every:
+        s_att = 0                                     # O(1) recurrent state
+    elif S >= cfg.long_context_threshold:
+        s_att = (cfg.kv_clusters + cfg.cluster_top_p * cfg.cluster_cap
+                 + cfg.cluster_ring)                  # k²-attention reads
+    else:
+        s_att = S
+    n_att_layers = cfg.n_layers if not cfg.attn_every else \
+        -(-cfg.n_layers // cfg.attn_every)
+    attn = 4.0 * B * cfg.n_heads * cfg.d_head * s_att * n_att_layers
+    return base + attn
+
+
+def load_records(path: str):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def _row(r):
+    mf = model_flops(r["arch"], r["shape"])
+    per_dev_model = mf / r["chips"]
+    terms = {"compute": r["t_compute_s"], "memory": r["t_memory_s"],
+             "collective": r["t_collective_s"]}
+    dominant = max(terms, key=terms.get)
+    step_time = max(max(terms.values()), 1e-12)
+    return {
+        "arch": r["arch"], "shape": r["shape"],
+        "t_compute": r["t_compute_s"], "t_memory": r["t_memory_s"],
+        "t_coll": r["t_collective_s"], "dominant": dominant,
+        "useful_ratio": per_dev_model / max(r["flops_per_device"], 1.0),
+        "roofline_frac": min(per_dev_model / PEAK_FLOPS_BF16 / step_time,
+                             1.0),
+        "step_bound_s": step_time,
+        "temp_gb": r["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def report(path: str = "reports/dryrun.jsonl", mesh: str = "16x16",
+           emit_markdown: bool = True):
+    recs = load_records(path)
+    rows = [_row(r) for (a, s, m), r in sorted(recs.items()) if m == mesh]
+    if emit_markdown and rows:
+        print("| arch | shape | compute s | memory s | collective s | "
+              "dominant | useful | roofline frac | temp GB |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['t_compute']:.4f} | "
+                  f"{r['t_memory']:.4f} | {r['t_coll']:.5f} | "
+                  f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+                  f"{r['roofline_frac']:.3f} | {r['temp_gb']:.1f} |")
+    return rows
+
+
+def compare(base_path="reports/dryrun.jsonl",
+            opt_path="reports/dryrun_opt.jsonl", mesh="16x16"):
+    """Baseline vs optimized per cell: dominant-term speedup."""
+    base = load_records(base_path)
+    opt = load_records(opt_path)
+    common = sorted(set(base) & set(opt))
+    if not common:
+        return []
+    print("| arch | shape | bound s (base) | bound s (opt) | speedup | "
+          "temp GB base->opt |")
+    print("|---|---|---|---|---|---|")
+    out = []
+    for key in common:
+        if key[2] != mesh:
+            continue
+        rb, ro = _row(base[key]), _row(opt[key])
+        sp = rb["step_bound_s"] / max(ro["step_bound_s"], 1e-12)
+        print(f"| {key[0]} | {key[1]} | {rb['step_bound_s']:.4f} | "
+              f"{ro['step_bound_s']:.4f} | {sp:.2f}x | "
+              f"{rb['temp_gb']:.0f} -> {ro['temp_gb']:.0f} |")
+        out.append((key, sp))
+    return out
+
+
+def run():
+    paths = [("baseline", "reports/dryrun.jsonl"),
+             ("optimized", "reports/dryrun_opt.jsonl")]
+    rows = []
+    for tag, p in paths:
+        if os.path.exists(p):
+            print(f"### {tag} ({p})")
+            rows = report(p) or rows
+            print()
+    if all(os.path.exists(p) for _, p in paths):
+        print("### baseline -> optimized")
+        compare()
+    if rows:
+        worst = sorted(rows, key=lambda r: r["roofline_frac"])[:3]
+        print("# worst roofline fractions:",
+              [(r["arch"], r["shape"], round(r["roofline_frac"], 3))
+               for r in worst])
+    return rows
+
+
+if __name__ == "__main__":
+    argp = argparse.ArgumentParser()
+    argp.add_argument("--path", default="reports/dryrun.jsonl")
+    argp.add_argument("--mesh", default="16x16")
+    argp.add_argument("--compare", action="store_true")
+    a = argp.parse_args()
+    if a.compare:
+        compare(mesh=a.mesh)
+    else:
+        report(a.path, a.mesh)

@@ -1,0 +1,53 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+Prints CSV blocks (name,value columns per table) plus summary lines.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller grids (CI mode)")
+    args, _ = ap.parse_known_args()
+
+    from . import complexity, convergence_curves, roofline, table4_init, \
+        table5_speedup
+
+    t0 = time.time()
+    print("== Table 2: per-iteration complexity (counted ops vs analytic) ==")
+    complexity.run(max_iters=12 if args.fast else 25)
+    print(f"# section time {time.time() - t0:.1f}s\n")
+
+    t0 = time.time()
+    print("== Table 4/7: initialization comparison (random / ++ / GDI) ==")
+    table4_init.run(max_iters=20 if args.fast else 40)
+    print(f"# section time {time.time() - t0:.1f}s\n")
+
+    t0 = time.time()
+    print("== Table 5 (1% target): algorithmic speedup over Lloyd++ ==")
+    table5_speedup.run(eps=0.01, max_iters=25 if args.fast else 40,
+                       datasets=("mnist50", "usps") if args.fast else None)
+    print(f"# section time {time.time() - t0:.1f}s\n")
+
+    t0 = time.time()
+    print("== Table 6 (0% target): speedup at exact Lloyd++ energy ==")
+    table5_speedup.run(eps=0.0, max_iters=25 if args.fast else 40,
+                       datasets=("mnist50", "usps"))
+    print(f"# section time {time.time() - t0:.1f}s\n")
+
+    t0 = time.time()
+    print("== Fig 2/3: convergence curves (energy vs counted ops) ==")
+    convergence_curves.run(max_iters=15 if args.fast else 30)
+    print(f"# section time {time.time() - t0:.1f}s\n")
+
+    print("== Roofline (from dry-run artifacts, if present) ==")
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""k²-attention end to end: train a small LM for a few steps, prefill a
+prompt, cluster the KV cache with k²-means, decode with cluster-restricted
+attention, and compare against exact attention.
+
+    PYTHONPATH=src python examples/lm_clustered_kv.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.data import ShardedBatcher
+from repro.launch.serve import attach_clusters, prefill_into_cache
+from repro.launch.train import make_train_step
+from repro.models import init_cache, init_params, serve_step
+from repro.optim import adamw_init
+
+
+def main():
+    cfg = get_smoke_config("qwen3-8b")
+    cfg = dataclasses.replace(cfg, kv_clusters=8, cluster_cap=32,
+                              cluster_top_p=4)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt = adamw_init(params)
+
+    # a few training steps so the KV geometry is not pure noise
+    step = jax.jit(make_train_step(cfg, q_chunk=16))
+    batcher = ShardedBatcher(4, 32, cfg.vocab, seed=0)
+    state = (params, opt)
+    for s in range(10):
+        state, metrics = step(state, batcher.batch_at(s))
+    params = state[0]
+    print(f"trained 10 steps, loss={float(metrics['loss']):.3f}")
+
+    # prefill 56 tokens, then decode 12 with full vs clustered attention
+    B, P_len, D_len = 2, 56, 12
+    S = P_len + D_len + 1
+    prompt = jax.random.randint(key, (B, P_len), 0, cfg.vocab)
+    cache = init_cache(cfg, B, S, clustered=False)
+    _, cache = prefill_into_cache(cfg, params, cache, prompt)
+
+    sstep = jax.jit(lambda p, c, t, i: serve_step(cfg, p, c, t, i))
+    def decode(c0):
+        toks, c, tok = [], c0, prompt[:, -1:]
+        for i in range(D_len):
+            logits, c = sstep(params, c, tok, jnp.int32(P_len + i))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            toks.append(np.asarray(tok[:, 0]))
+        return np.stack(toks)
+
+    full = decode(cache)
+    clustered_cache = attach_clusters(cfg, dict(cache), length=P_len)
+    clus = decode(clustered_cache)
+    agree = float((full == clus).mean())
+    reads_full = S
+    reads_clus = (cfg.kv_clusters + cfg.cluster_top_p * cfg.cluster_cap
+                  + cfg.cluster_ring)
+    prod = 2048 + 16 * 512 + 256   # production config reads at 500k
+    print(f"greedy-token agreement full vs k²-attention: {agree:.2f}")
+    print(f"attention reads/token: {reads_full} -> {reads_clus} "
+          f"(sub-quadratic decode; the production config reads "
+          f"{prod} of 524288 = {prod / 524288:.3%} at 500k context)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .checkpoint import (save_checkpoint, restore_checkpoint,
+                         latest_step, AsyncCheckpointer, reshard_restore)

@@ -1,0 +1,127 @@
+"""Checkpoint/restart without external deps (orbax-free, numpy .npz).
+
+- atomic: write to <dir>/tmp-<step> then rename (a crashed writer never
+  corrupts the latest complete checkpoint);
+- async: AsyncCheckpointer snapshots device arrays to host and writes on a
+  worker thread so the train loop never blocks on disk;
+- elastic: reshard_restore places restored host arrays with NEW shardings,
+  so a checkpoint taken on one mesh restores onto a smaller/larger mesh
+  (the elastic-scaling path; pair with ft.plan_remesh).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp-{step}")
+    final = os.path.join(ckpt_dir, f"step-{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(tree)
+
+    def to_np(x):
+        a = np.asarray(x)
+        if str(a.dtype) == "bfloat16":     # npz has no bf16: f32 escrow
+            a = a.astype(np.float32)
+        return a
+
+    arrays = {f"leaf_{i}": to_np(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves),
+                   "treedef": str(treedef)}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("-")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step-")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like_tree):
+    """Restore into the structure of like_tree (shape + dtype restored —
+    bf16 leaves round-trip through an f32 escrow)."""
+    import jax.numpy as jnp
+    path = os.path.join(ckpt_dir, f"step-{step:09d}", "arrays.npz")
+    data = np.load(path)
+    leaves, treedef = _flatten(like_tree)
+    restored = []
+    for i, want in enumerate(leaves):
+        got = data[f"leaf_{i}"]
+        assert got.shape == tuple(want.shape), (got.shape, want.shape)
+        restored.append(jnp.asarray(got).astype(want.dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def reshard_restore(ckpt_dir: str, step: int, like_tree, shardings):
+    """Elastic restore: place every leaf with the target mesh's sharding."""
+    host = restore_checkpoint(ckpt_dir, step, like_tree)
+    return jax.tree.map(
+        lambda x, s, ref: jax.device_put(
+            np.asarray(x).astype(ref.dtype), s),
+        host, shardings, like_tree)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget checkpoint writes on a worker thread."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save_checkpoint(self.ckpt_dir, step, tree)
+                self._gc()
+            except Exception as e:              # surfaced on next save/wait
+                self._err = e
+
+    def _gc(self):
+        steps = sorted(int(d.split("-")[1]) for d in os.listdir(self.ckpt_dir)
+                       if d.startswith("step-"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step-{s:09d}"),
+                          ignore_errors=True)
+
+    def save(self, step: int, tree):
+        if self._err:
+            raise self._err
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host))
+
+    def wait(self):
+        """Drain the queue and stop the worker; raises any deferred error."""
+        self._q.put(None)
+        self._t.join()
+        if self._err:
+            raise self._err

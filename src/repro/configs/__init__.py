@@ -1,0 +1,2 @@
+from .base import (ArchConfig, ARCH_IDS, SHAPES, get_config,
+                   get_smoke_config)

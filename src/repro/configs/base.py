@@ -1,0 +1,127 @@
+"""Architecture config schema + registry. One file per assigned arch."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    # --- MoE ---
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    dense_residual: bool = False    # Arctic: dense MLP parallel to MoE
+    first_dense: int = 0            # DeepSeek: first N layers use dense MLP
+    # --- MLA ---
+    mla: bool = False
+    kv_lora: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # --- SSM / hybrid ---
+    ssm: str = ""                   # "" | "rwkv6" | "mamba2"
+    ssm_state: int = 64
+    ssm_expand: int = 2
+    attn_every: int = 0             # zamba: shared attn block every N layers
+    # --- enc-dec (audio) ---
+    encoder_layers: int = 0
+    frontend_stub: bool = False     # precomputed frame/patch embeddings
+    # --- vlm ---
+    n_patches: int = 0              # prefix positions fed by patch embeds
+    # --- k²-attention (clustered KV) defaults for long-context decode ---
+    kv_clusters: int = 2048
+    cluster_cap: int = 512
+    cluster_top_p: int = 16
+    cluster_ring: int = 256      # exact recent-token buffer (read-write)
+    long_context_threshold: int = 65536   # S >= this -> clustered decode
+
+    @property
+    def d_q(self) -> int:
+        return self.n_heads * self.d_head
+
+    def params_estimate(self) -> float:
+        """Rough total param count (for 6ND model-flops accounting)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        emb = V * d
+        if self.ssm and self.attn_every == 0:        # pure SSM
+            if self.ssm == "rwkv6":
+                mix = L * (6 * d * d)
+            else:
+                d_in = self.ssm_expand * d
+                mix = L * (d * (2 * d_in + 2 * self.ssm_state + self.n_heads)
+                           + d_in * d)
+            ffn = L * 3 * d * self.d_ff if self.ssm == "rwkv6" else 0
+            return emb + mix + ffn
+        attn = d * self.d_q + 2 * d * self.n_kv_heads * self.d_head \
+            + self.d_q * d
+        if self.mla:
+            r = self.kv_lora
+            attn = (d * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                    + d * r + d * self.qk_rope_dim
+                    + r * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                    + self.n_heads * self.v_head_dim * d)
+        if self.moe:
+            dense_l = 3 * d * self.d_ff if (self.dense_residual or
+                                            self.first_dense) else 0
+            moe_l = (3 * d * self.moe_d_ff * self.n_experts
+                     + 3 * d * self.moe_d_ff * self.n_shared_experts)
+            ffn = moe_l + (3 * d * self.d_ff if self.dense_residual else 0)
+        else:
+            ffn = 3 * d * self.d_ff
+        if self.ssm and self.attn_every:             # hybrid: mamba + shared attn
+            d_in = self.ssm_expand * d
+            mix = L * (d * (2 * d_in + 2 * self.ssm_state + self.n_heads)
+                       + d_in * d)
+            return emb + mix + attn + 3 * d * self.d_ff  # one shared block
+        enc = self.encoder_layers * (attn + 3 * d * self.d_ff)
+        return emb + L * (attn + ffn) + enc
+
+    def active_params_estimate(self) -> float:
+        """Active (per-token) params — MoE uses top_k of n_experts."""
+        if not self.moe:
+            return self.params_estimate()
+        d, L = self.d_model, self.n_layers
+        total = self.params_estimate()
+        all_experts = L * 3 * d * self.moe_d_ff * self.n_experts
+        active = L * 3 * d * self.moe_d_ff * self.top_k
+        return total - all_experts + active
+
+
+# --- shape cells (identical across LM archs; see prompt) ------------------
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+ARCH_IDS = ["arctic-480b", "deepseek-v2-lite-16b", "granite-8b", "qwen3-8b",
+            "qwen3-14b", "minitron-4b", "rwkv6-3b", "internvl2-76b",
+            "zamba2-7b", "whisper-base"]
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_')}")
+    return mod.SMOKE

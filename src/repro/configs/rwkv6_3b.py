@@ -1,0 +1,13 @@
+"""RWKV6 "Finch" 3B: attention-free, data-dependent decay.
+[arXiv:2404.05892; hf]  head_size=64 -> 40 heads at d_model=2560.
+k²-means is inapplicable to the mixing layer (no KV cache) — see
+DESIGN.md §Arch-applicability; long_500k uses the native O(1) recurrence."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-3b", family="ssm", n_layers=32, d_model=2560, n_heads=40,
+    n_kv_heads=40, d_head=64, d_ff=8960, vocab=65536, ssm="rwkv6")
+
+SMOKE = ArchConfig(
+    name="rwkv6-smoke", family="ssm", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_head=16, d_ff=128, vocab=512, ssm="rwkv6")

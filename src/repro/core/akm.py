@@ -1,0 +1,128 @@
+"""Approximate k-means (AKM, Philbin et al. CVPR 2007) baseline.
+
+The original AKM accelerates the assignment step with a forest of
+randomised kd-trees over the centers (m distance checks per point).
+kd-tree traversal is pointer-chasing and hostile to TPU vector units, so —
+per the hardware-adaptation mandate (DESIGN.md §3) — we realise the same
+O(n m d) contract with the TPU-native equivalent: an IVF-style coarse
+quantiser over the centers. Each iteration:
+
+  1. group the k centers into g = ceil(k/m) groups (a few cheap Lloyd
+     iterations on k points);
+  2. route each point to its nearest group (n*g counted distances) and
+     evaluate only that group's members, padded to a static capacity
+     (~n*m counted distances), always including the point's current center
+     so the energy stays monotonically non-increasing.
+
+``m`` plays exactly the paper's role: distance evaluations per point per
+iteration, trading accuracy for speed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .distance import (pairwise_sqdist, sqnorm, clustering_energy,
+                       chunked_argmin_sqdist)
+from .lloyd import KMeansResult, update_centers
+from .opcount import OpCounter
+
+
+@functools.partial(jax.jit, static_argnames=("g", "group_iters"))
+def _group_centers(c, key, g: int, group_iters: int = 3):
+    """Cluster the k centers into g groups; returns (group_centroids, gid)."""
+    k = c.shape[0]
+    idx = jax.random.choice(key, k, shape=(g,), replace=False)
+    gc = c[idx]
+    for _ in range(group_iters):
+        gid = jnp.argmin(pairwise_sqdist(c, gc), axis=1)
+        gc = update_centers(c, gid, gc)
+    gid = jnp.argmin(pairwise_sqdist(c, gc), axis=1)
+    return gc, gid
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "chunk"))
+def _akm_assign(x, c, gc, gid, cap: int, chunk: int = 2048):
+    """Assignment via coarse routing. Returns (a_new, dmin_sq, n_member_evals)."""
+    n, d = x.shape
+    k, g = c.shape[0], gc.shape[0]
+    # Padded member table (g, cap): members sorted by group id.
+    order = jnp.argsort(gid)                       # stable
+    sorted_gid = gid[order]
+    # position of each sorted element within its group
+    pos = jnp.arange(k) - jnp.searchsorted(sorted_gid, sorted_gid, side="left")
+    # Scatter members into a padded table; overflow rows (pos >= cap) are
+    # routed to a scratch row g and sliced off (drop semantics).
+    table = jnp.full((g + 1, cap), -1, jnp.int32)
+    row = jnp.where(pos < cap, sorted_gid, g)
+    col = jnp.where(pos < cap, pos, 0)
+    table = table.at[row, col].set(order.astype(jnp.int32), mode="drop")
+    table = table[:g]
+
+    gc_sq = sqnorm(gc)
+    c_sq = sqnorm(c)
+    x_sq = sqnorm(x)
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    xsqp = jnp.pad(x_sq, (0, pad))
+
+    def body(args):
+        xb, xsqb = args
+        gdist = jnp.maximum(xsqb[:, None] - 2.0 * (xb @ gc.T) + gc_sq, 0.0)
+        grp = jnp.argmin(gdist, axis=1)
+        cand = table[grp]                          # (chunk, cap)
+        cmask = cand >= 0
+        cand_safe = jnp.maximum(cand, 0)
+        cc = c[cand_safe]
+        cross = jnp.einsum("nd,nkd->nk", xb, cc)
+        sq = jnp.maximum(xsqb[:, None] - 2.0 * cross + c_sq[cand_safe], 0.0)
+        sq = jnp.where(cmask, sq, jnp.inf)
+        j = jnp.argmin(sq, axis=1)
+        a_b = jnp.take_along_axis(cand_safe, j[:, None], 1)[:, 0]
+        d_b = jnp.take_along_axis(sq, j[:, None], 1)[:, 0]
+        return a_b, d_b, jnp.sum(cmask, axis=1)
+
+    a_new, dmin, evals = jax.lax.map(
+        body, (xp.reshape(-1, chunk, d), xsqp.reshape(-1, chunk)))
+    a_new = a_new.reshape(-1)[:n]
+    dmin = dmin.reshape(-1)[:n]
+    evals = evals.reshape(-1)[:n]
+    return a_new, dmin, jnp.sum(evals)
+
+
+def fit_akm(x: jax.Array, centers: jax.Array, key: jax.Array, *, m: int = 30,
+            max_iters: int = 100, counter: OpCounter | None = None,
+            chunk: int = 2048) -> KMeansResult:
+    counter = counter or OpCounter()
+    n, d = x.shape
+    k = centers.shape[0]
+    m = min(m, k)
+    g = max(1, -(-k // m))                  # ceil(k/m) groups
+    cap = min(k, 4 * m)
+    c = centers
+    a_prev = None
+    a = jnp.zeros((n,), jnp.int32)
+    keys = jax.random.split(key, max_iters)
+    history = []
+    it = 0
+    for it in range(1, max_iters + 1):
+        gc, gid = _group_centers(c, keys[it - 1], g)
+        counter.add_distances(3 * k * g)    # coarse-quantiser build (cheap)
+        a_cand, dmin_cand, evals = _akm_assign(x, c, gc, gid, cap, chunk)
+        # current-center fallback (exact, counted: n distances)
+        d_cur = jnp.sum(jnp.square(x - c[a]), axis=1)
+        better = dmin_cand < d_cur
+        a = jnp.where(better, a_cand, a).astype(jnp.int32)
+        counter.add_distances(n * g + int(evals) + n)
+        c = update_centers(x, a, c)
+        counter.add_additions(n)
+        energy = float(clustering_energy(x, c, a))
+        history.append((counter.snapshot(), energy))
+        a_host = jax.device_get(a)
+        if a_prev is not None and (a_host == a_prev).all():
+            break
+        a_prev = a_host
+    return KMeansResult(c, a, float(history[-1][1]), it, counter.total,
+                        history)

@@ -1,0 +1,68 @@
+"""Single entry point: ``fit(x, k, method=..., init=...)``.
+
+This is the public clustering API used by the examples, the benchmark
+harness and the LM integration (clustered-KV attention, MoE router init).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .akm import fit_akm
+from .elkan import fit_elkan
+from .gdi import gdi_init, gdi_parallel_init
+from .k2means import fit_k2means
+from .kmeanspp import assign_nearest, kmeanspp_init, random_init
+from .lloyd import KMeansResult, fit_lloyd
+from .minibatch import fit_minibatch
+from .opcount import OpCounter
+
+METHODS = ("lloyd", "elkan", "k2means", "minibatch", "akm")
+INITS = ("random", "kmeanspp", "gdi", "gdi_parallel")
+
+
+def initialize(x: jax.Array, k: int, init: str, key: jax.Array,
+               counter: OpCounter):
+    """Returns (centers, assignment_or_None)."""
+    if init == "random":
+        return random_init(x, k, key, counter), None
+    if init == "kmeanspp":
+        return kmeanspp_init(x, k, key, counter), None
+    if init == "gdi":
+        return gdi_init(x, k, key, counter=counter)
+    if init == "gdi_parallel":
+        return gdi_parallel_init(x, k, key, counter=counter)
+    raise ValueError(f"unknown init {init!r}; expected one of {INITS}")
+
+
+def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
+        key: jax.Array | None = None, max_iters: int = 100,
+        kn: int = 30, m: int = 30, batch: int = 100,
+        minibatch_iters: int | None = None,
+        counter: OpCounter | None = None, **kw: Any) -> KMeansResult:
+    """Cluster ``x`` into ``k`` clusters. The paper's method is the default."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    counter = counter or OpCounter()
+    k_init, k_fit = jax.random.split(key)
+    x = jnp.asarray(x, jnp.float32)
+
+    centers, assignment = initialize(x, k, init, k_init, counter)
+
+    if method == "lloyd":
+        return fit_lloyd(x, centers, max_iters=max_iters, counter=counter, **kw)
+    if method == "elkan":
+        return fit_elkan(x, centers, max_iters=max_iters, counter=counter, **kw)
+    if method == "k2means":
+        if assignment is None:
+            assignment = assign_nearest(x, centers, counter)
+        return fit_k2means(x, centers, assignment, kn=kn,
+                           max_iters=max_iters, counter=counter, **kw)
+    if method == "minibatch":
+        return fit_minibatch(x, centers, k_fit, batch=batch,
+                             iters=minibatch_iters, counter=counter, **kw)
+    if method == "akm":
+        return fit_akm(x, centers, k_fit, m=m, max_iters=max_iters,
+                       counter=counter, **kw)
+    raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")

@@ -1,0 +1,65 @@
+"""Squared-Euclidean distance primitives shared by every k-means variant.
+
+All distances use the MXU-friendly expansion ``||x-c||^2 = ||x||^2 - 2 x.c + ||c||^2``
+so the dominant term is a matmul. Results are clipped at 0 to absorb the
+cancellation error of the expansion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def sqnorm(x: jax.Array) -> jax.Array:
+    """Row-wise squared l2 norm: (n, d) -> (n,)."""
+    return jnp.sum(x * x, axis=-1)
+
+
+def pairwise_sqdist(x: jax.Array, c: jax.Array,
+                    x_sq: jax.Array | None = None,
+                    c_sq: jax.Array | None = None) -> jax.Array:
+    """All-pairs squared distances: (n, d) x (k, d) -> (n, k)."""
+    if x_sq is None:
+        x_sq = sqnorm(x)
+    if c_sq is None:
+        c_sq = sqnorm(c)
+    cross = x @ c.T
+    return jnp.maximum(x_sq[:, None] - 2.0 * cross + c_sq[None, :], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def chunked_argmin_sqdist(x: jax.Array, c: jax.Array, chunk: int = 4096):
+    """Nearest-center assignment without materialising the full (n, k) matrix.
+
+    Returns (assignment (n,), min_sqdist (n,)). ``chunk`` bounds transient
+    memory to chunk*k floats; n is padded up to a multiple of chunk.
+    """
+    n, d = x.shape
+    c_sq = sqnorm(c)
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+
+    def body(xb):
+        dist = pairwise_sqdist(xb, c, c_sq=c_sq)
+        return jnp.argmin(dist, axis=1), jnp.min(dist, axis=1)
+
+    a, dmin = jax.lax.map(body, xp.reshape(-1, chunk, d))
+    return a.reshape(-1)[:n], dmin.reshape(-1)[:n]
+
+
+def gather_candidate_sqdist(x: jax.Array, c: jax.Array,
+                            cand: jax.Array) -> jax.Array:
+    """Distances from each point to its own candidate list.
+
+    x: (n, d), c: (k, d), cand: (n, kn) int32 -> (n, kn) squared distances.
+    """
+    cc = c[cand]                                   # (n, kn, d) gather
+    cross = jnp.einsum("nd,nkd->nk", x, cc)
+    return jnp.maximum(sqnorm(x)[:, None] - 2.0 * cross + sqnorm(cc), 0.0)
+
+
+def clustering_energy(x: jax.Array, c: jax.Array, a: jax.Array) -> jax.Array:
+    """Total k-means energy sum_j sum_{x in X_j} ||x - c_j||^2."""
+    return jnp.sum(sqnorm(x - c[a]))

@@ -1,0 +1,180 @@
+"""Distributed k²-means via shard_map — the paper's algorithm at pod scale.
+
+Layout (DESIGN.md §3): points row-sharded over the flattened data axes
+('pod' x 'data' [x 'model' when the clustering job owns the whole mesh]);
+centers replicated. Per iteration:
+
+  1. the k_n-NN center graph is computed replicated (O(k^2 d) is tiny next
+     to O(n k_n d / P) per shard);
+  2. each shard runs the k_n-restricted bounded assignment on its rows;
+  3. the update step is a per-shard segment-sum followed by a hierarchical
+     psum (reduce within pod over ICI, then across pods over DCN — jax
+     orders the reduction by axis: psum over ('data',) then ('pod',)).
+
+The same step function drives the multi-pod dry-run (lower/compile) and the
+CI-scale correctness test (4-device debug mesh), where it must match the
+single-device k²-means step bit-for-bit on the same data.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from .distance import pairwise_sqdist, sqnorm
+
+
+def _local_candidate_assign(x, c, cand_idx, chunk=2048):
+    """k_n-restricted assignment of local rows. cand_idx: (n_loc, kn)."""
+    n, d = x.shape
+    kn = cand_idx.shape[1]
+    c_sq = sqnorm(c)
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    candp = jnp.pad(cand_idx, ((0, pad), (0, 0)))
+
+    def body(args):
+        xb, candb = args
+        cb = c[candb]
+        cross = jnp.einsum("nd,nkd->nk", xb, cb)
+        sq = jnp.maximum(sqnorm(xb)[:, None] - 2.0 * cross + c_sq[candb],
+                         0.0)
+        j = jnp.argmin(sq, 1)
+        return (jnp.take_along_axis(candb, j[:, None], 1)[:, 0],
+                jnp.take_along_axis(sq, j[:, None], 1)[:, 0])
+
+    a, dmin = jax.lax.map(body, (xp.reshape(-1, chunk, d),
+                                 candp.reshape(-1, chunk, kn)))
+    return a.reshape(-1)[:n], dmin.reshape(-1)[:n]
+
+
+def make_distributed_k2means_step(mesh, kn: int, k: int, *,
+                                  data_axes=None, chunk: int = 2048):
+    """Build the sharded step: (x_sharded, c_repl, a_sharded) ->
+    (c', a', energy). x rows sharded over data_axes; c replicated."""
+    data_axes = data_axes or tuple(
+        a for a in mesh.axis_names if a in ("pod", "data"))
+    xspec = P(data_axes, None)
+    aspec = P(data_axes)
+    rep = P()
+
+    def step(x, c, a):
+        # 1. replicated center kNN graph (self-inclusive)
+        cc = pairwise_sqdist(c, c)
+        _, neighbors = jax.lax.top_k(-cc, kn)              # (k, kn)
+        # 2. local restricted assignment
+        cand = neighbors[a]                                # (n_loc, kn)
+        a_new, dmin = _local_candidate_assign(x, c, cand, chunk)
+        # 3. hierarchical mean update: local segment sums + cross-shard psum
+        sums = jax.ops.segment_sum(x, a_new, num_segments=k)
+        counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype),
+                                     a_new, num_segments=k)
+        energy = jnp.sum(dmin)
+        for ax in reversed(data_axes):                     # ICI first, DCN last
+            sums = jax.lax.psum(sums, ax)
+            counts = jax.lax.psum(counts, ax)
+            energy = jax.lax.psum(energy, ax)
+        c_new = jnp.where(counts[:, None] > 0,
+                          sums / jnp.maximum(counts, 1.0)[:, None], c)
+        return c_new, a_new.astype(jnp.int32), energy
+
+    return shard_map(step, mesh=mesh,
+                     in_specs=(xspec, rep, aspec),
+                     out_specs=(rep, aspec, rep))
+
+
+def make_distributed_lloyd_step(mesh, k: int, *, data_axes=None,
+                                chunk: int = 2048):
+    """Sharded full-assignment Lloyd step (baseline for the benchmarks)."""
+    data_axes = data_axes or tuple(
+        a for a in mesh.axis_names if a in ("pod", "data"))
+    xspec = P(data_axes, None)
+    rep = P()
+
+    def step(x, c):
+        n, d = x.shape
+        c_sq = sqnorm(c)
+        pad = (-n) % chunk
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+
+        def body(xb):
+            sq = jnp.maximum(sqnorm(xb)[:, None] - 2.0 * (xb @ c.T) + c_sq,
+                             0.0)
+            return jnp.argmin(sq, 1), jnp.min(sq, 1)
+
+        a, dmin = jax.lax.map(body, xp.reshape(-1, chunk, d))
+        a = a.reshape(-1)[:n]
+        dmin = dmin.reshape(-1)[:n]
+        sums = jax.ops.segment_sum(x, a, num_segments=k)
+        counts = jax.ops.segment_sum(jnp.ones((n,), x.dtype), a,
+                                     num_segments=k)
+        energy = jnp.sum(dmin)
+        for ax in reversed(data_axes):
+            sums = jax.lax.psum(sums, ax)
+            counts = jax.lax.psum(counts, ax)
+            energy = jax.lax.psum(energy, ax)
+        c_new = jnp.where(counts[:, None] > 0,
+                          sums / jnp.maximum(counts, 1.0)[:, None], c)
+        return c_new, a.astype(jnp.int32), energy
+
+    return shard_map(step, mesh=mesh, in_specs=(xspec, rep),
+                     out_specs=(rep, P(data_axes), rep))
+
+
+def make_distributed_assign(mesh, k: int, *, data_axes=None,
+                            chunk: int = 2048):
+    """Sharded full assignment (no update) — seeds k²-means so the
+    distributed trajectory matches the single-device one exactly."""
+    data_axes = data_axes or tuple(
+        a for a in mesh.axis_names if a in ("pod", "data"))
+
+    def assign(x, c):
+        n, d = x.shape
+        c_sq = sqnorm(c)
+        pad = (-n) % chunk
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+
+        def body(xb):
+            sq = jnp.maximum(sqnorm(xb)[:, None] - 2.0 * (xb @ c.T) + c_sq,
+                             0.0)
+            return jnp.argmin(sq, 1)
+
+        a = jax.lax.map(body, xp.reshape(-1, chunk, d)).reshape(-1)[:n]
+        return a.astype(jnp.int32)
+
+    return shard_map(assign, mesh=mesh, in_specs=(P(data_axes, None), P()),
+                     out_specs=P(data_axes))
+
+
+def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
+                            max_iters: int = 50, init_centers=None):
+    """Host-loop driver around the sharded step. x_global is placed
+    sharded; centers replicated. Returns (centers, assignment, history).
+    Trajectory-equivalent to the single-device fit_k2means from the same
+    init (seeded by assignment only, no update)."""
+    n, d = x_global.shape
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    xsh = NamedSharding(mesh, P(data_axes, None))
+    rep = NamedSharding(mesh, P())
+    x = jax.device_put(x_global, xsh)
+    if init_centers is None:
+        idx = jax.random.choice(key, n, shape=(k,), replace=False)
+        init_centers = x_global[idx]
+    c = jax.device_put(init_centers, rep)
+    # assignment-only seeding, then restricted iterations
+    assign0 = jax.jit(make_distributed_assign(mesh, k))
+    k2 = jax.jit(make_distributed_k2means_step(mesh, kn, k))
+    a = assign0(x, c)
+    history = []
+    prev = None
+    for _ in range(max_iters):
+        c, a, e = k2(x, c, a)
+        history.append(float(e))
+        a_host = jax.device_get(a)
+        if prev is not None and (a_host == prev).all():
+            break
+        prev = a_host
+    return c, a, history

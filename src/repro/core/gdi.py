@@ -1,0 +1,197 @@
+"""Greedy Divisive Initialization (GDI) — the paper's Algorithm 2 + 3.
+
+TPU adaptation (see DESIGN.md §3): ProjectiveSplit runs over the *full*
+(n, d) array with a membership mask so every split reuses one fixed-shape
+XLA program. Lemma 1's incremental energy update becomes a vectorised
+cumulative-sum identity:
+
+    phi(prefix_l) = cumsum(||x||^2)_l - ||cumsum(x)_l||^2 / l
+
+which yields every candidate split energy of the scanned hyperplane in a
+single pass, exactly matching the paper's O(|X_j|) per-iteration cost in
+counted vector ops (members only are charged).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .opcount import OpCounter
+
+_INF = jnp.inf
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def projective_split(x: jax.Array, mask: jax.Array, key: jax.Array,
+                     iters: int = 2):
+    """Min-energy split of the masked subset along the c_a - c_b direction.
+
+    Returns (mask_a, mask_b, c_a, c_b, phi_a, phi_b).
+    """
+    n, d = x.shape
+    fmask = mask.astype(x.dtype)
+    m = jnp.sum(fmask)
+
+    # Two random member samples as the initial centers (Algorithm 3 line 2).
+    p = fmask / jnp.maximum(m, 1.0)
+    k1, k2 = jax.random.split(key)
+    i_a = jax.random.choice(k1, n, p=p)
+    # Draw the second sample excluding the first (approximate distinctness —
+    # identical duplicates are harmless, the scan still yields a valid split).
+    p2 = p.at[i_a].set(0.0)
+    p2 = p2 / jnp.maximum(jnp.sum(p2), 1e-30)
+    i_b = jax.random.choice(k2, n, p=p2)
+    c_a, c_b = x[i_a], x[i_b]
+
+    x_sq = jnp.sum(x * x, axis=-1)
+
+    def body(carry, _):
+        c_a, c_b = carry
+        direction = c_a - c_b
+        proj = x @ direction
+        sort_key = jnp.where(mask, proj, _INF)
+        order = jnp.argsort(sort_key)
+        xs = x[order]
+        ms = fmask[order]
+        xs_sq = x_sq[order] * ms
+        xs_m = xs * ms[:, None]
+
+        csum = jnp.cumsum(xs_m, axis=0)              # (n, d) running sums
+        qsum = jnp.cumsum(xs_sq)                     # (n,)  running sq-norms
+        cnt = jnp.cumsum(ms)                         # (n,)  running counts
+        tot_s, tot_q, tot_c = csum[-1], qsum[-1], cnt[-1]
+
+        phi_p = qsum - jnp.sum(csum * csum, axis=-1) / jnp.maximum(cnt, 1.0)
+        sc = tot_c - cnt
+        sfx = tot_s[None, :] - csum
+        phi_s = (tot_q - qsum) - jnp.sum(sfx * sfx, axis=-1) / jnp.maximum(sc, 1.0)
+        score = phi_p + phi_s
+        valid = (cnt >= 1.0) & (sc >= 1.0) & (ms > 0)
+        score = jnp.where(valid, score, _INF)
+        l = jnp.argmin(score)
+
+        c_a_new = csum[l] / jnp.maximum(cnt[l], 1.0)
+        c_b_new = (tot_s - csum[l]) / jnp.maximum(tot_c - cnt[l], 1.0)
+        # Membership of the A side, scattered back to original order.
+        in_a_sorted = (jnp.arange(n) <= l) & (ms > 0)
+        mask_a = jnp.zeros((n,), bool).at[order].set(in_a_sorted)
+        return (c_a_new, c_b_new), (mask_a, phi_p[l], phi_s[l])
+
+    (c_a, c_b), (masks_a, phis_a, phis_b) = jax.lax.scan(
+        body, (c_a, c_b), None, length=iters)
+    mask_a = masks_a[-1]
+    mask_b = mask & ~mask_a
+    return mask_a, mask_b, c_a, c_b, phis_a[-1], phis_b[-1]
+
+
+def gdi_init(x: jax.Array, k: int, key: jax.Array, *,
+             split_iters: int = 2,
+             counter: OpCounter | None = None):
+    """Algorithm 2: greedy divisive initialization.
+
+    Returns (centers (k, d), assignment (n,)).
+    """
+    counter = counter or OpCounter()
+    n, d = x.shape
+    assert 1 <= k <= n
+
+    mu = jnp.mean(x, axis=0)
+    centers = [mu]
+    energies = [float(jnp.sum(jnp.square(x - mu)))]
+    masks = [jnp.ones((n,), bool)]
+    sizes = [n]
+    counter.add_additions(n)  # initial mean
+
+    keys = jax.random.split(key, k)
+    while len(centers) < k:
+        j = int(max(range(len(energies)), key=lambda i: energies[i]))
+        if sizes[j] < 2:  # cannot split a singleton; fall back to largest
+            j = int(max(range(len(sizes)), key=lambda i: sizes[i]))
+            if sizes[j] < 2:
+                break
+        mask_a, mask_b, c_a, c_b, phi_a, phi_b = projective_split(
+            x, masks[j], keys[len(centers)], iters=split_iters)
+        m = sizes[j]
+        # Paper §2.2 accounting per ProjectiveSplit iteration on X_j:
+        # |X_j| inner products + |X_j| incremental mean/energy updates
+        # + the sort charged as |X_j| log2 |X_j| / d vector ops.
+        counter.add_inner(split_iters * m)
+        counter.add_additions(split_iters * m)
+        for _ in range(split_iters):
+            counter.add_sort(m, d)
+        sa = int(jnp.sum(mask_a))
+        masks[j] = mask_a
+        centers[j] = c_a
+        energies[j] = float(phi_a)
+        sizes[j] = sa
+        masks.append(mask_b)
+        centers.append(c_b)
+        energies.append(float(phi_b))
+        sizes.append(m - sa)
+
+    centers_arr = jnp.stack(centers)
+    if len(centers) < k:  # pathological tiny-n fallback: pad with copies
+        reps = k - len(centers)
+        centers_arr = jnp.concatenate(
+            [centers_arr, jnp.tile(centers_arr[-1:], (reps, 1))])
+    assignment = jnp.zeros((n,), jnp.int32)
+    for j, mk in enumerate(masks):
+        assignment = jnp.where(mk, j, assignment)
+    return centers_arr, assignment
+
+
+def gdi_parallel_init(x: jax.Array, k: int, key: jax.Array, *,
+                      split_iters: int = 2,
+                      counter: OpCounter | None = None):
+    """Round-parallel divisive variant (paper footnote 2): every round splits
+    all current leaves at once — O(log2 k) rounds — the scalable flavour used
+    by the distributed clustering path. k must be a power of two; otherwise
+    we round up and keep the k highest-energy leaves.
+    """
+    counter = counter or OpCounter()
+    n, d = x.shape
+    rounds = math.ceil(math.log2(k)) if k > 1 else 0
+    masks = [jnp.ones((n,), bool)]
+    keys = jax.random.split(key, max(rounds, 1))
+    for r in range(rounds):
+        new_masks = []
+        subkeys = jax.random.split(keys[r], len(masks))
+        for mk, sk in zip(masks, subkeys):
+            m = int(jnp.sum(mk))
+            if m < 2:
+                new_masks.append(mk)
+                continue
+            mask_a, mask_b, *_ = projective_split(x, mk, sk, iters=split_iters)
+            counter.add_inner(split_iters * m)
+            counter.add_additions(split_iters * m)
+            for _ in range(split_iters):
+                counter.add_sort(m, d)
+            new_masks += [mask_a, mask_b]
+        masks = new_masks
+    # Keep the k highest-energy leaves; merge the rest into nearest kept leaf.
+    stats = []
+    for mk in masks:
+        fm = mk.astype(x.dtype)[:, None]
+        cnt = jnp.maximum(jnp.sum(fm), 1.0)
+        mu = jnp.sum(x * fm, axis=0) / cnt
+        phi = jnp.sum(jnp.square(x - mu) * fm)
+        stats.append((mk, mu, float(phi)))
+    stats.sort(key=lambda t: -t[2])
+    kept = stats[:k]
+    centers = jnp.stack([s[1] for s in kept])
+    assignment = jnp.zeros((n,), jnp.int32)
+    for j, (mk, _, _) in enumerate(kept):
+        assignment = jnp.where(mk, j, assignment)
+    # Points in dropped leaves -> nearest kept center.
+    if len(stats) > k:
+        from .distance import chunked_argmin_sqdist
+        dropped = jnp.zeros((n,), bool)
+        for mk, _, _ in stats[k:]:
+            dropped = dropped | mk
+        near, _ = chunked_argmin_sqdist(x, centers)
+        counter.add_distances(int(jnp.sum(dropped)) * k)
+        assignment = jnp.where(dropped, near, assignment)
+    return centers, assignment

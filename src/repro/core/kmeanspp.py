@@ -1,0 +1,57 @@
+"""k-means++ seeding (Arthur & Vassilvitskii 2007) — the paper's init baseline.
+
+O(nkd): each of the k draws computes n distances to the newly added center.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .distance import pairwise_sqdist, sqnorm
+from .opcount import OpCounter
+
+
+@jax.jit
+def _ppp_update(x, x_sq, dmin, new_center):
+    d_new = jnp.maximum(
+        x_sq - 2.0 * (x @ new_center) + jnp.sum(new_center * new_center), 0.0)
+    return jnp.minimum(dmin, d_new)
+
+
+def kmeanspp_init(x: jax.Array, k: int, key: jax.Array,
+                  counter: OpCounter | None = None) -> jax.Array:
+    """Sample k centers with D^2 weighting. Returns (k, d) centers."""
+    counter = counter or OpCounter()
+    n, d = x.shape
+    keys = jax.random.split(key, k)
+    first = jax.random.randint(keys[0], (), 0, n)
+    centers = [x[first]]
+    x_sq = sqnorm(x)
+    dmin = _ppp_update(x, x_sq, jnp.full((n,), jnp.inf, x.dtype), centers[0])
+    counter.add_distances(n)
+    for j in range(1, k):
+        p = dmin / jnp.maximum(jnp.sum(dmin), 1e-30)
+        idx = jax.random.choice(keys[j], n, p=p)
+        c = x[idx]
+        centers.append(c)
+        dmin = _ppp_update(x, x_sq, dmin, c)
+        counter.add_distances(n)
+    return jnp.stack(centers)
+
+
+def random_init(x: jax.Array, k: int, key: jax.Array,
+                counter: OpCounter | None = None) -> jax.Array:
+    """Uniform sample of k distinct points (no distance computations)."""
+    idx = jax.random.choice(key, x.shape[0], shape=(k,), replace=False)
+    return x[idx]
+
+
+def assign_nearest(x: jax.Array, centers: jax.Array,
+                   counter: OpCounter | None = None) -> jax.Array:
+    from .distance import chunked_argmin_sqdist
+    a, _ = chunked_argmin_sqdist(x, centers)
+    if counter is not None:
+        counter.add_distances(x.shape[0] * centers.shape[0])
+    return a

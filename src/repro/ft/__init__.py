@@ -1,0 +1,2 @@
+from .runtime import (HeartbeatMonitor, StragglerPolicy, plan_remesh,
+                      FaultTolerantLoop)

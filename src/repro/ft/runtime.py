@@ -1,0 +1,122 @@
+"""Fault-tolerance runtime: heartbeats, straggler mitigation, elastic
+remesh planning, and a restart-safe training loop wrapper.
+
+On a real multi-host deployment the heartbeat transport is the cluster
+orchestrator (GKE/Borg liveness) and jax.distributed's coordination
+service; here the mechanism is host-local but the *policy* layer — what to
+do when a step is slow or a host vanishes — is the production logic and is
+what the tests exercise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+import time
+from typing import Callable
+
+import jax
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Detect slow steps (stragglers) from the step-time stream.
+
+    slack: a step slower than slack * rolling-median is flagged.
+    window: median window.  patience: consecutive flags before escalation
+    (production: trigger checkpoint + cordon the slow host; here: callback).
+    """
+    slack: float = 2.0
+    window: int = 20
+    patience: int = 3
+
+    def __post_init__(self):
+        self.times: list[float] = []
+        self.flags = 0
+        self.escalations = 0
+
+    def observe(self, step_time: float) -> str:
+        self.times.append(step_time)
+        hist = self.times[-self.window:]
+        if len(hist) < 5:
+            return "ok"
+        med = statistics.median(hist[:-1])
+        if step_time > self.slack * med:
+            self.flags += 1
+            if self.flags >= self.patience:
+                self.flags = 0
+                self.escalations += 1
+                return "escalate"
+            return "straggler"
+        self.flags = 0
+        return "ok"
+
+
+class HeartbeatMonitor:
+    """Per-host liveness from step-completion timestamps. A host missing
+    for timeout seconds is declared dead -> the loop checkpoints and the
+    remesh planner computes the survivor topology."""
+
+    def __init__(self, hosts: list[str], timeout: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        self.last = {h: self.clock() for h in hosts}
+
+    def beat(self, host: str):
+        self.last[host] = self.clock()
+
+    def dead_hosts(self) -> list[str]:
+        now = self.clock()
+        return [h for h, t in self.last.items() if now - t > self.timeout]
+
+
+def plan_remesh(n_alive_chips: int, *, model_parallel: int = 16):
+    """Elastic remesh: largest (data, model) grid that fits the survivors.
+
+    Keeps the TP degree fixed (weights are sharded that way) and shrinks
+    the data axis to the largest power of two that fits — the batch is
+    re-sharded, the global batch size is preserved by raising the
+    per-host accumulation factor."""
+    if n_alive_chips < model_parallel:
+        raise RuntimeError(
+            f"cannot keep model_parallel={model_parallel} with only "
+            f"{n_alive_chips} chips: checkpoint and relaunch smaller")
+    data = n_alive_chips // model_parallel
+    data = 2 ** int(math.log2(data))
+    return {"data": data, "model": model_parallel,
+            "chips": data * model_parallel,
+            "accum_factor_vs": lambda old_data: max(1, old_data // data)}
+
+
+class FaultTolerantLoop:
+    """Restart-safe step loop: deterministic data replay from the step
+    index (data.ShardedBatcher), periodic async checkpoints, straggler
+    monitoring, and simulated preemption for tests (fail_at_step)."""
+
+    def __init__(self, step_fn, batcher, checkpointer, *,
+                 ckpt_every: int = 50, policy: StragglerPolicy | None = None,
+                 fail_at_step: int | None = None):
+        self.step_fn = step_fn
+        self.batcher = batcher
+        self.ckpt = checkpointer
+        self.ckpt_every = ckpt_every
+        self.policy = policy or StragglerPolicy()
+        self.fail_at_step = fail_at_step
+        self.events: list[tuple[int, str]] = []
+
+    def run(self, state, start_step: int, num_steps: int):
+        step = start_step
+        for step in range(start_step, start_step + num_steps):
+            if self.fail_at_step is not None and step == self.fail_at_step:
+                raise RuntimeError(f"simulated preemption at step {step}")
+            t0 = time.perf_counter()
+            batch = self.batcher.batch_at(step)
+            state = self.step_fn(state, batch)
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+            verdict = self.policy.observe(time.perf_counter() - t0)
+            if verdict != "ok":
+                self.events.append((step, verdict))
+            if (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(step + 1, state)
+        return state, step + 1

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: k_n-restricted assignment — the k²-means hotspot.
+
+Contract: points are pre-grouped so that every point block (bn points)
+shares one candidate list of k_n center indices (ops.group_by_cluster builds
+this layout from the current assignment: points sorted by cluster, clusters
+padded to block multiples). The candidate table rides in scalar-prefetch
+SMEM, and the *center BlockSpec index_map reads it* — Pallas streams exactly
+the k_n candidate rows per block HBM→VMEM, which is the TPU-native
+realisation of "only look at the k_n nearest clusters".
+
+Triangle-inequality adaptation (DESIGN.md §3): a per-block skip flag (from
+the Hamerly-style bounds) gates the whole compute with @pl.when — an entire
+(bn, k_n) distance tile is elided when no point in the block can change
+assignment. Tile-level pruning is the TPU analogue of Elkan's per-point
+branch; the flag also suppresses the candidate-row DMA via a zero index.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cand_ref, skip_ref,                      # scalar prefetch (SMEM)
+            x_ref, c_ref, csq_ref, prev_a_ref, prev_d_ref,
+            a_ref, d_ref,
+            best_d, best_a, xsq):
+    i, j = pl.program_id(0), pl.program_id(1)
+    kn = pl.num_programs(1)
+    skipped = skip_ref[i] != 0
+
+    @pl.when(j == 0)
+    def _init():
+        best_d[...] = jnp.full_like(best_d, jnp.inf)
+        best_a[...] = jnp.zeros_like(best_a)
+        xsq[...] = jnp.sum(x_ref[...] * x_ref[...], axis=-1)
+
+    @pl.when(jnp.logical_not(skipped))
+    def _compute():
+        x = x_ref[...]                               # (bn, d)
+        c = c_ref[...]                               # (1, d) candidate row
+        cross = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        dist = jnp.maximum(xsq[...] - 2.0 * cross[:, 0] + csq_ref[0, 0], 0.0)
+        cidx = cand_ref[i, j]
+        better = dist < best_d[...]
+        best_d[...] = jnp.where(better, dist, best_d[...])
+        best_a[...] = jnp.where(better, cidx, best_a[...])
+
+    @pl.when(j == kn - 1)
+    def _flush():
+        a_ref[...] = jnp.where(skipped, prev_a_ref[...], best_a[...])
+        d_ref[...] = jnp.where(skipped, prev_d_ref[...], best_d[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def candidate_assign(x: jax.Array, c: jax.Array, cand: jax.Array,
+                     skip: jax.Array, prev_a: jax.Array, prev_d: jax.Array,
+                     *, bn: int = 256, interpret: bool = False):
+    """k_n-restricted assignment.
+
+    x: (n, d) points, grouped so block b (rows b*bn:(b+1)*bn) shares
+       candidate list cand[b].
+    c: (k, d) centers.  cand: (n//bn, kn) int32.  skip: (n//bn,) int32.
+    prev_a/prev_d: fallbacks for skipped blocks, (n,).
+    Returns (assignment int32 (n,), sqdist f32 (n,)).
+    """
+    n, d = x.shape
+    assert n % bn == 0
+    nb, kn = cand.shape
+    assert nb == n // bn
+    csq = jnp.sum(c * c, axis=-1)[None, :]
+
+    grid = (nb, kn)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j, cand, skip: (i, 0)),
+            # the gather: candidate row j of block i, DMA'd by index_map
+            pl.BlockSpec((1, d),
+                         lambda i, j, cand, skip: (cand[i, j] * (1 - skip[i]), 0)),
+            pl.BlockSpec((1, 1),
+                         lambda i, j, cand, skip: (0, cand[i, j] * (1 - skip[i]))),
+            pl.BlockSpec((bn,), lambda i, j, cand, skip: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, cand, skip: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j, cand, skip: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, cand, skip: (i,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn,), jnp.float32),
+            pltpu.VMEM((bn,), jnp.int32),
+            pltpu.VMEM((bn,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cand, skip, x, c, csq, prev_a, prev_d)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: k x k center distance matrix (for the k_n-NN graph).
+
+The O(k^2 d) term of k²-means. Plain tiled matmul-style kernel; the top-k_n
+selection stays in XLA (lax.top_k lowers to an efficient TPU sort network
+and is not a hotspot at k <= a few thousand).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, bsq_ref, o_ref):
+    a = a_ref[...]                                   # (bi, d)
+    b = b_ref[...]                                   # (bj, d)
+    cross = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    asq = jnp.sum(a * a, axis=-1, keepdims=True)
+    o_ref[...] = jnp.maximum(asq - 2.0 * cross + bsq_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "interpret"))
+def _center_sqdist_padded(c: jax.Array, bi: int, bj: int,
+                          interpret: bool) -> jax.Array:
+    k, d = c.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(k // bi, k // bj),
+        in_specs=[
+            pl.BlockSpec((bi, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bj, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bj), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        interpret=interpret,
+    )(c, c, jnp.sum(c * c, axis=-1)[None, :])
+
+
+def center_sqdist(c: jax.Array, *, bi: int = 128, bj: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """(k, d) -> (k, k) squared distances; k auto-padded to the blocks
+    (padding rows are far sentinels and sliced off)."""
+    k, d = c.shape
+    bi, bj = min(bi, max(8, k)), min(bj, max(8, k))
+    pad = (-k) % max(bi, bj)
+    if pad:
+        cp = jnp.concatenate(
+            [c, jnp.full((pad, d), 1e15, c.dtype)], axis=0)
+    else:
+        cp = c
+    sq = _center_sqdist_padded(cp, bi, bj, interpret)
+    return sq[:k, :k]
+
+
+def center_knn(c: jax.Array, kn: int, *, interpret: bool = False,
+               bi: int = 128, bj: int = 128) -> jax.Array:
+    """Self-inclusive k_n-NN graph over centers: (k, d) -> (k, kn) int32."""
+    sq = center_sqdist(c, bi=bi, bj=bj, interpret=interpret)
+    _, idx = jax.lax.top_k(-sq, kn)
+    return idx.astype(jnp.int32)

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: k²-attention decode over a cluster-major KV cache.
+
+Co-design with the paper's data structure: the KV cache is stored *sorted
+by k²-means cluster* — member rows of each cluster are contiguous, padded
+to a fixed capacity, i.e. the cache IS the (kc, cap, dh) member table.
+"Attend to the top-p clusters" then becomes p *block* DMAs per head whose
+addresses come from a scalar-prefetched cluster-id table (the same
+BlockSpec-index-map gather trick as candidate_assign.py) — no row-gather
+ever touches HBM, and the softmax is accumulated online (flash-style)
+across the p cluster blocks.
+
+Grid: (B*H, p). Per step: one (cap, dh) K block + V block + validity row
+stream through VMEM; scratch carries (running max, running sum, weighted
+accumulator) per query head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(sel_ref,                                  # scalar prefetch
+            q_ref, k_ref, v_ref, valid_ref,
+            o_ref,
+            m_ref, l_ref, acc_ref):
+    j = pl.program_id(1)
+    p = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                                    # (1, dh)
+    k = k_ref[0]                                      # (cap, dh)
+    v = v_ref[0]
+    ok = valid_ref[0] > 0                             # (cap,)
+    dh = q.shape[-1]
+    logits = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())))[0] * dh ** -0.5     # (cap,)
+    logits = jnp.where(ok, logits, -jnp.inf)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits))
+    # guard fully-masked blocks (all -inf): keep previous stats
+    m_new = jnp.where(jnp.isfinite(m_new), m_new, m_prev)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    w = jnp.where(ok, jnp.exp(logits - m_new), 0.0)   # (cap,)
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(w)
+    acc_ref[...] = acc_ref[...] * corr + (
+        w[None, :] @ v.astype(jnp.float32))
+    m_ref[0, 0] = m_new
+
+    @pl.when(j == p - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cluster_attend(q, k_table, v_table, valid, sel, *,
+                   interpret: bool = False):
+    """q: (BH, dh) one row per (batch, q-head); k_table/v_table:
+    (BHkv*kc, cap, dh) cluster-major cache; valid: (BHkv*kc, cap) int32;
+    sel: (BH, p) int32 — flat cluster ids (already offset by kv-head).
+    Returns (BH, dh) attention outputs."""
+    BH, dh = q.shape
+    _, cap, _ = k_table.shape
+    p = sel.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, p),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda i, j, sel: (i, 0)),
+            pl.BlockSpec((1, cap, dh), lambda i, j, sel: (sel[i, j], 0, 0)),
+            pl.BlockSpec((1, cap, dh), lambda i, j, sel: (sel[i, j], 0, 0)),
+            pl.BlockSpec((1, cap), lambda i, j, sel: (sel[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda i, j, sel: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, dh), q.dtype),
+        interpret=interpret,
+    )(sel, q, k_table, v_table, valid)
+
+
+def cluster_major_pack(k, v, members, member_mask):
+    """Repack a flat (B, Hkv, S, dh) cache into the cluster-major layout:
+    (B*Hkv*kc, cap, dh) tables + (B*Hkv*kc, cap) validity. A serving
+    runtime does this once at prefill (and incrementally on append)."""
+    B, Hkv, S, dh = k.shape
+    kc, cap = members.shape[2], members.shape[3]
+    kt = jnp.take_along_axis(k[:, :, None], members[..., None], axis=3)
+    vt = jnp.take_along_axis(v[:, :, None], members[..., None], axis=3)
+    kt = (kt * member_mask[..., None]).reshape(B * Hkv * kc, cap, dh)
+    vt = (vt * member_mask[..., None]).reshape(B * Hkv * kc, cap, dh)
+    return kt, vt, member_mask.reshape(B * Hkv * kc, cap).astype(jnp.int32)
+
+
+def select_clusters(q, centroids, top_p: int):
+    """Per-q-head top-p nearest clusters, flattened to table row ids.
+    q: (B, H, dh); centroids: (B, Hkv, kc, dh) -> (B*H, p) int32."""
+    B, H, dh = q.shape
+    Hkv, kc = centroids.shape[1], centroids.shape[2]
+    g = H // Hkv
+    qr = q.reshape(B, Hkv, g, dh)
+    d2 = (jnp.sum(qr * qr, -1)[..., None]
+          - 2.0 * jnp.einsum("bhgd,bhkd->bhgk", qr, centroids)
+          + jnp.sum(centroids * centroids, -1)[:, :, None, :])
+    _, top = jax.lax.top_k(-d2, top_p)                # (B, Hkv, g, p)
+    base = (jnp.arange(B)[:, None, None] * Hkv
+            + jnp.arange(Hkv)[None, :, None]) * kc    # (B, Hkv, 1)
+    flat = top + base[..., None]
+    return flat.reshape(B * H, top_p).astype(jnp.int32)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused pairwise-distance + running argmin.
+
+The Lloyd/GDI hotspot. Never materialises the (n, k) distance matrix in
+HBM: the grid is (n/bn, k/bk) with the k-axis minor, so a VMEM scratch
+carries the running (min, argmin) for a point block while center blocks
+stream through. The -2*X@C^T term hits the MXU; block shapes default to
+MXU-aligned (128-multiples on the contracted/lane dims).
+
+VMEM budget per step ~ bn*d + bk*d + 2*bn*bk floats; callers shrink bn for
+very large d (e.g. yale's d=32256) — see ops.choose_blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, c_ref, csq_ref, a_ref, d_ref, best_d, best_a):
+    j = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_d[...] = jnp.full_like(best_d, jnp.inf)
+        best_a[...] = jnp.zeros_like(best_a)
+
+    x = x_ref[...]                                   # (bn, d)
+    c = c_ref[...]                                   # (bk, d)
+    cross = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    xsq = jnp.sum(x * x, axis=-1, keepdims=True)     # (bn, 1)
+    dist = jnp.maximum(xsq - 2.0 * cross + csq_ref[...], 0.0)   # (bn, bk)
+
+    loc = jnp.argmin(dist, axis=1)                   # (bn,)
+    dmin = jnp.min(dist, axis=1)
+    bk = c.shape[0]
+    glob = (j * bk + loc).astype(jnp.int32)
+    better = dmin < best_d[...]
+    best_d[...] = jnp.where(better, dmin, best_d[...])
+    best_a[...] = jnp.where(better, glob, best_a[...])
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        a_ref[...] = best_a[...]
+        d_ref[...] = best_d[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "interpret"))
+def distance_argmin(x: jax.Array, c: jax.Array, *, bn: int = 256,
+                    bk: int = 128, interpret: bool = False):
+    """Nearest center per point. Returns (assignment int32 (n,), sqdist (n,)).
+
+    n must be a multiple of bn and k of bk (ops.py pads).
+    """
+    n, d = x.shape
+    k = c.shape[0]
+    assert n % bn == 0 and k % bk == 0, (n, bn, k, bk)
+    csq = jnp.sum(c * c, axis=-1)[None, :]           # (1, k)
+
+    grid = (n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn,), jnp.float32),
+            pltpu.VMEM((bn,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, c, csq)

@@ -1,0 +1,109 @@
+"""jit'd public wrappers around the Pallas kernels: padding, block-size
+selection (VMEM budget), cluster-grouped layout construction, and CPU
+fallback (interpret=True) so the same call sites run in this container and
+on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .candidate_assign import candidate_assign
+from .cluster_attend import (cluster_attend, cluster_major_pack,
+                             select_clusters)
+from .center_knn import center_knn, center_sqdist
+from .distance_argmin import distance_argmin
+
+_ON_TPU = jax.default_backend() == "tpu"
+_VMEM_BUDGET = 12 * 2 ** 20 // 4          # ~12 MiB of f32 working set
+
+
+def choose_blocks(d: int, k: int):
+    """Pick (bn, bk) so bn*d + bk*d + 2*bn*bk floats fit the VMEM budget,
+    keeping MXU-aligned multiples of 128 where possible; very large d
+    (e.g. yale's 32256) shrinks both block dims."""
+    for bk in (128, 64, 32, 16, 8):
+        if k < 128 and bk > max(8, k):
+            continue
+        for bn in (512, 256, 128, 64, 32, 16, 8):
+            if bn * d + bk * d + 2 * bn * bk <= _VMEM_BUDGET:
+                return bn, bk
+    return 8, 8
+
+
+def _pad_rows(x, mult):
+    n = x.shape[0]
+    pad = (-n) % mult
+    return (jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)), n)
+
+
+def assign_nearest_pallas(x: jax.Array, c: jax.Array,
+                          interpret: bool | None = None):
+    """Drop-in fused assignment: (n,d),(k,d) -> (a (n,), sqdist (n,))."""
+    interpret = (not _ON_TPU) if interpret is None else interpret
+    n, d = x.shape
+    k = c.shape[0]
+    bn, bk = choose_blocks(d, k)
+    xp, n0 = _pad_rows(x, bn)
+    cp, k0 = _pad_rows(c, bk)
+    if k0 < cp.shape[0]:  # pad centers far away so they never win
+        cp = cp.at[k0:].set(jnp.full((cp.shape[0] - k0, d), 1e30, cp.dtype))
+    a, dist = distance_argmin(xp, cp, bn=bn, bk=bk, interpret=interpret)
+    return a[:n0], dist[:n0]
+
+
+def group_by_cluster(a: np.ndarray, k: int, bn: int):
+    """Host-side layout pass: sort point ids by cluster, pad every cluster to
+    a bn multiple. Returns (perm (n_pad,) int32 with -1 padding,
+    block2cluster (nb,) int32). Runs on host between device steps (its cost
+    is the paper's O(n) bookkeeping, not a distance computation)."""
+    order = np.argsort(a, kind="stable")
+    sizes = np.bincount(a, minlength=k)
+    perm_blocks, block2cluster = [], []
+    off = 0
+    for j in range(k):
+        sz = int(sizes[j])
+        if sz == 0:
+            continue
+        ids = order[off:off + sz]
+        off += sz
+        pad = (-sz) % bn
+        ids = np.concatenate([ids, np.full(pad, -1, np.int64)])
+        perm_blocks.append(ids)
+        block2cluster += [j] * (len(ids) // bn)
+    perm = np.concatenate(perm_blocks).astype(np.int32)
+    return perm, np.asarray(block2cluster, np.int32)
+
+
+def k2_assign_grouped(x: jax.Array, c: jax.Array, neighbors: jax.Array,
+                      perm: jax.Array, block2cluster: jax.Array,
+                      skip: jax.Array, prev_a: jax.Array, prev_d: jax.Array,
+                      bn: int = 128, interpret: bool | None = None):
+    """Full k²-means assignment through the Pallas kernel.
+
+    perm/block2cluster from group_by_cluster; -1 entries of perm are padding
+    (they replicate point 0 but are masked out of the scatter-back).
+    Returns updated (a, sqdist) in original point order.
+    """
+    interpret = (not _ON_TPU) if interpret is None else interpret
+    n = x.shape[0]
+    safe_perm = jnp.maximum(perm, 0)
+    xg = x[safe_perm]
+    pa = prev_a[safe_perm]
+    pd = prev_d[safe_perm]
+    cand = neighbors[block2cluster]                  # (nb, kn)
+    a_g, d_g = candidate_assign(xg, c, cand, skip, pa, pd, bn=bn,
+                                interpret=interpret)
+    valid = perm >= 0
+    a_new = prev_a.at[safe_perm].set(jnp.where(valid, a_g, pa))
+    d_new = prev_d.at[safe_perm].set(jnp.where(valid, d_g, pd))
+    return a_new, d_new
+
+
+__all__ = ["assign_nearest_pallas", "candidate_assign", "center_knn",
+           "cluster_attend", "cluster_major_pack", "select_clusters",
+           "center_sqdist", "choose_blocks", "distance_argmin",
+           "group_by_cluster", "k2_assign_grouped"]

@@ -1,0 +1,303 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+MUST set XLA_FLAGS before any other import (jax locks the device count on
+first init). Do not copy this env hack anywhere else — smoke tests and
+benchmarks are supposed to see ONE device.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_XLA_EXTRA", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from repro.launch import sharding as shr  # noqa: E402
+from repro.launch.mesh import (DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)  # noqa: E402
+from repro.models import cache_shapes, param_shapes  # noqa: E402
+from repro.models.model import (forward_prefill, forward_train,  # noqa: E402
+                                serve_step)  # noqa: E402
+from repro.optim import adamw_update, clip_by_global_norm, init_opt_shapes  # noqa: E402
+
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+          "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+_COLL_RE = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result bytes of every collective op in the optimized HLO,
+    bucketed by op kind. '-done' ops are skipped (their '-start' twin was
+    already counted)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if "-done(" in m.group(0):
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] = out.get(kind, 0) + n * _BYTES.get(dtype, 4)
+    return out
+
+
+# --------------------------------------------------------------------------
+# input specs per (arch, shape)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    i32 = jnp.int32
+    if sh["kind"] in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16)
+        if cfg.n_patches:
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against an S-slot cache. k²-attention for the
+    # attention-family archs; pure SSM uses O(1) recurrence, and HYBRIDS
+    # keep the flat S-sharded cache — with only L/attn_every shared-attn
+    # applications the flat path is already cheap and the cluster tables
+    # don't pay for themselves (§Perf refutation: zamba long_500k 0.14x).
+    clustered = S >= cfg.long_context_threshold and not cfg.ssm
+    cache = cache_shapes(cfg, B, S, clustered=clustered)
+    return {"cache": cache,
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def make_train_step(cfg, remat: str = "dots", q_chunk: int = 512,
+                    unroll: int = 1, seq_shard: bool = False):
+    def train_step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: forward_train(cfg, p, batch, remat=remat,
+                                    q_chunk=q_chunk, unroll=unroll,
+                                    seq_shard=seq_shard),
+            has_aux=True)(params)
+        grads, gn = clip_by_global_norm(grads)
+        params, opt = adamw_update(grads, opt, params)
+        metrics = dict(metrics, grad_norm=gn)
+        return params, opt, metrics
+    return train_step
+
+
+def make_prefill_fn(cfg, q_chunk: int = 512, unroll: int = 1,
+                    seq_shard: bool = False):
+    """Prefill = full-sequence forward, logits for the LAST position only
+    (production prefill; the all-position unembed belongs to train_step).
+    Audio (enc-dec) keeps the train forward (encoder + decoder pass)."""
+    if cfg.family == "audio":
+        def prefill(params, batch):
+            loss, _ = forward_train(cfg, params, batch, remat="none",
+                                    q_chunk=q_chunk, unroll=unroll)
+            return loss
+        return prefill
+
+    def prefill(params, batch):
+        return forward_prefill(cfg, params, batch, q_chunk=q_chunk,
+                               unroll=unroll, seq_shard=seq_shard)
+    return prefill
+
+
+def make_serve_step(cfg, unroll: int = 1):
+    def step(params, cache, tokens, pos):
+        return serve_step(cfg, params, cache, tokens, pos, unroll=unroll)
+    return step
+
+
+# --------------------------------------------------------------------------
+# one cell
+# --------------------------------------------------------------------------
+
+def _compile_cell(cfg, shape_name, mesh, remat, q_chunk, unroll,
+                  fsdp=True, seq_shard=False):
+    sh = SHAPES[shape_name]
+    pshape = param_shapes(cfg)
+    # inference cells can disable FSDP (weights fit TP-only and the
+    # per-layer weight all-gathers disappear) — a §Perf lever
+    pspec = shr.param_specs(cfg, pshape, mesh, fsdp=fsdp)
+    pnamed = shr.to_named(pspec, mesh)
+    with mesh:
+        if sh["kind"] == "train":
+            oshape = init_opt_shapes(pshape)
+            ospec = shr.opt_specs(cfg, pshape, mesh)
+            onamed = shr.to_named(ospec, mesh)
+            bnamed = shr.to_named(shr.batch_specs(cfg, mesh, "train"), mesh)
+            batch = input_specs(cfg, shape_name)
+            fn = jax.jit(make_train_step(cfg, remat, q_chunk, unroll,
+                                         seq_shard),
+                         in_shardings=(pnamed, onamed, bnamed),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(pshape, oshape, batch)
+        elif sh["kind"] == "prefill":
+            bnamed = shr.to_named(shr.batch_specs(cfg, mesh, "prefill"),
+                                  mesh)
+            batch = input_specs(cfg, shape_name)
+            fn = jax.jit(make_prefill_fn(cfg, q_chunk, unroll, seq_shard),
+                         in_shardings=(pnamed, bnamed))
+            lowered = fn.lower(pshape, batch)
+        else:  # decode
+            spec = input_specs(cfg, shape_name)
+            cspec = shr.cache_specs(cfg, spec["cache"], mesh,
+                                    sh["global_batch"])
+            cnamed = shr.to_named(cspec, mesh)
+            fn = jax.jit(make_serve_step(cfg, unroll),
+                         in_shardings=(pnamed, cnamed,
+                                       NamedSharding(mesh, P()),
+                                       NamedSharding(mesh, P())),
+                         donate_argnums=(1,))
+            lowered = fn.lower(pshape, spec["cache"], spec["tokens"],
+                               spec["pos"])
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "compiled": compiled,
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             remat: str = "dots", q_chunk: int = 512, unroll: int = 0,
+             fsdp="auto", seq_shard: bool = False,
+             verbose: bool = True):
+    """Two-point cost extraction: XLA's cost_analysis counts a while-loop
+    body ONCE regardless of trip count, so we compile with unroll=1 and
+    unroll=2 and extrapolate: per-layer = f(2) - f(1);
+    total = f(1) + (L-1) * per-layer. Memory analysis (loop-aware) and the
+    compile-proof come from the unroll=1 artifact. Passing --unroll N > 0
+    skips extrapolation and unrolls N layers directly (slow, exact)."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    L = max(cfg.n_layers, 1)
+    if fsdp == "auto":
+        # prefill wants TP-only weights (params read once per 32k tokens,
+        # the per-layer all-gathers dominate); decode re-reads the params
+        # every token so sharded weights + cheap ICI gathers win (§Perf
+        # refutation: no-fsdp regressed deepseek decode_32k 0.69x);
+        # training always uses FSDP+ZeRO.
+        fits = cfg.params_estimate() * 2 / mesh.shape["model"] < 12e9
+        fsdp = not (sh["kind"] == "prefill" and fits)
+    t0 = time.time()
+
+    if unroll > 0:
+        r1 = _compile_cell(cfg, shape_name, mesh, remat, q_chunk, unroll,
+                           fsdp, seq_shard)
+        flops, bytes_acc, coll = r1["flops"], r1["bytes"], r1["coll"]
+    else:
+        r1 = _compile_cell(cfg, shape_name, mesh, remat, q_chunk, 1,
+                           fsdp, seq_shard)
+        r2 = _compile_cell(cfg, shape_name, mesh, remat, q_chunk, 2,
+                           fsdp, seq_shard)
+        scale = lambda a, b: a + (L - 1) * max(b - a, 0.0)
+        flops = scale(r1["flops"], r2["flops"])
+        bytes_acc = scale(r1["bytes"], r2["bytes"])
+        kinds = set(r1["coll"]) | set(r2["coll"])
+        coll = {k: scale(float(r1["coll"].get(k, 0)),
+                         float(r2["coll"].get(k, 0))) for k in kinds}
+    compiled = r1["compiled"]
+    mem = compiled.memory_analysis()
+    coll_total = float(sum(coll.values()))
+
+    # terms (seconds). cost_analysis is per-device post-partitioning.
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_acc / HBM_BW
+    link = ICI_BW if not multi_pod else ICI_BW  # DCN term reported separately
+    t_coll = coll_total / link
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": sh["kind"], "flops_per_device": flops,
+        "bytes_per_device": bytes_acc, "collective_bytes": coll,
+        "collective_total": coll_total,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": max([("compute", t_compute), ("memory", t_memory),
+                           ("collective", t_coll)], key=lambda kv: kv[1])[0],
+        "memory_analysis": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)},
+        "model_flops_global": 0.0,   # filled by benchmarks/roofline.py
+        "compile_s": round(time.time() - t0, 1),
+        "remat": remat, "q_chunk": q_chunk, "unroll": unroll,
+        "fsdp": fsdp, "seq_shard": seq_shard,
+    }
+    if verbose:
+        print(json.dumps(rec))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--unroll", type=int, default=0)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--fsdp-auto", action="store_true",
+                    help="train: FSDP on; inference: off when weights fit")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun.jsonl")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    ok = fail = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    try:
+                        rec = run_cell(arch, shape, multi_pod=mp,
+                                       remat=args.remat,
+                                       q_chunk=args.q_chunk,
+                                       unroll=args.unroll,
+                                       fsdp=("auto" if args.fsdp_auto
+                                             else not args.no_fsdp),
+                                       seq_shard=args.seq_shard)
+                        f.write(json.dumps(rec) + "\n")
+                        f.flush()
+                        ok += 1
+                    except Exception:
+                        fail += 1
+                        print(f"FAIL {arch} {shape} multi_pod={mp}")
+                        traceback.print_exc()
+    print(f"dry-run cells: {ok} ok, {fail} failed")
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Sharding rules: param -> PartitionSpec (TP + FSDP), optimizer-state
+extension (ZeRO-1), batch and cache specs.
+
+Rules (DESIGN.md §6):
+- tensor parallel: fan-out projections column-sharded, fan-in row-sharded,
+  MoE experts sharded on the expert axis (EP), embedding vocab-sharded;
+- FSDP: every large leaf additionally shards one remaining dimension over
+  the 'data' axis when divisible (params are bf16 and gathered per layer by
+  GSPMD; optimizer states inherit the same extension = ZeRO-1);
+- anything not divisible stays replicated — correctness never depends on a
+  rule firing, only the roofline does.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+TP = "model"
+# fan-out (column) sharded projection names; fan-in (row) sharded names
+_COL = {"wq", "wk", "wv", "wi", "wg", "wuk", "wuv", "in_proj", "w2"}
+_ROW = {"wo", "out_proj"}
+_STACKED = {"stack", "prefix", "enc"}
+
+
+def _leaf_spec(path, shape, tp_size: int) -> P:
+    names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+    stacked = bool(names) and names[0] in _STACKED
+    base = names[-2] if len(names) >= 2 else ""      # {"w": ...} parent name
+    dims = list(shape)
+    spec = [None] * len(dims)
+    body = 1 if stacked else 0                       # skip the layer axis
+
+    if names[-1] == "embed":
+        if dims[0] % tp_size == 0:
+            spec[0] = TP          # vocab-sharded
+        elif dims[1] % tp_size == 0:
+            spec[1] = TP          # odd vocab (whisper 51865): shard d_model
+        return P(*spec)
+    if len(dims) - body == 3 and base in {"", None}:
+        pass
+    if names[-1] in {"wi", "wg", "wo"} and len(dims) - body == 3:
+        spec[body] = TP                              # MoE expert axis (EP)
+        return P(*spec)
+    if base in _COL and len(dims) - body == 2:
+        if dims[-1] % tp_size == 0:
+            spec[-1] = TP
+        return P(*spec)
+    if base in _ROW and len(dims) - body == 2:
+        if dims[-2] % tp_size == 0:
+            spec[-2] = TP
+        return P(*spec)
+    return P(*spec)
+
+
+def _extend_dp(spec: P, shape, dp: tuple, dp_size: int, stacked: bool) -> P:
+    """FSDP/ZeRO extension: shard one free dim over the data axes."""
+    if dp_size <= 1:
+        return spec
+    s = list(spec) + [None] * (len(shape) - len(spec))
+    start = 1 if stacked else 0
+    for i in range(start, len(shape)):
+        if s[i] is None and shape[i] % dp_size == 0 and shape[i] >= dp_size:
+            s[i] = dp if len(dp) > 1 else dp[0]
+            break
+    return P(*s)
+
+
+def param_specs(cfg, params_shape, mesh, *, fsdp: bool = True):
+    """PartitionSpec pytree matching the params pytree."""
+    tp = mesh.shape[TP]
+    dp = dp_axes(mesh)
+    dsz = 1
+    for a in dp:
+        dsz *= mesh.shape[a]
+
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        spec = _leaf_spec(path, leaf.shape, tp)
+        if fsdp and leaf.size * 2 >= (1 << 22):      # only big leaves
+            spec = _extend_dp(spec, leaf.shape, dp, dsz,
+                              bool(names) and names[0] in _STACKED)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_specs(cfg, params_shape, mesh):
+    """Optimizer-state specs: same as params (m and v mirror the FSDP/ZeRO
+    layout; the scalar step count is replicated)."""
+    ps = param_specs(cfg, params_shape, mesh, fsdp=True)
+    return {"m": ps, "v": ps, "step": P()}
+
+
+def batch_specs(cfg, mesh, kind: str):
+    dp = dp_axes(mesh)
+    dpx = dp if len(dp) > 1 else dp[0]
+    s = {"tokens": P(dpx, None), "labels": P(dpx, None)}
+    if cfg.family == "audio":
+        s["frames"] = P(dpx, None, None)
+    if cfg.n_patches:
+        s["patches"] = P(dpx, None, None)
+    return s
+
+
+def cache_specs(cfg, cache_shape, mesh, batch: int):
+    """Decode-cache specs. Batch axis shards over dp when divisible; the
+    B=1 long-context cells shard the *sequence* axis instead (context
+    parallelism); head/cluster axes shard over TP when divisible."""
+    dp = dp_axes(mesh)
+    dsz = 1
+    for a in dp:
+        dsz *= mesh.shape[a]
+    dpx = dp if len(dp) > 1 else dp[0]
+    tp = mesh.shape[TP]
+
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        shape = leaf.shape
+        stacked = names[0] in {"stack", "prefix"} or \
+            (names[0] == "shared" and len(shape) >= 4)
+        b_axis = 1 if stacked else 0
+        spec = [None] * len(shape)
+        leaf_name = names[-1]
+        if leaf_name in ("kt", "vt", "sizes"):
+            # cluster-major tables: shard the CLUSTER axis over dp so the
+            # shard_map attention's top-p reads stay shard-local
+            kc_axis = (b_axis + 2) if leaf_name in ("kt", "vt") \
+                else (b_axis + 2)
+            if shape[kc_axis] % dsz == 0:
+                spec[kc_axis] = dpx
+            return P(*spec)
+        if leaf_name in ("cent", "ring_k", "ring_v", "ring_fill"):
+            return P(*spec)       # replicated: selection + recent ring
+        if shape[b_axis] % dsz == 0:
+            spec[b_axis] = dpx
+        else:
+            # long-context: shard the largest remaining axis (sequence)
+            rest = [(shape[i], i) for i in range(b_axis + 1, len(shape))]
+            if rest:
+                mx, mi = max(rest)
+                if mx % dsz == 0 and mx >= 4 * dsz:
+                    spec[mi] = dpx
+        # TP on a head/cluster/feature axis if cleanly divisible
+        for i in range(b_axis + 1, len(shape)):
+            if spec[i] is None and shape[i] % tp == 0 and shape[i] >= tp \
+                    and shape[i] > 8:
+                spec[i] = TP
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,3 @@
+from .model import (init_params, param_shapes, forward_train, serve_step,
+                    init_cache, cache_shapes)
+from .kv_cluster import build_kv_clusters, cluster_append

@@ -1,0 +1,200 @@
+"""k²-means over the KV cache — the paper's technique as a serving feature.
+
+``build_kv_clusters`` is a fully jittable clustering pipeline (static
+shapes) used at prefill->decode transition: random-member init, two Lloyd
+sweeps, then k_n-restricted k²-means refinement sweeps (the paper's
+Algorithm 1 with a fixed iteration budget — data-dependent convergence
+loops don't belong inside a serving step). ``cluster_append`` maintains the
+structure online as tokens decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _sqdist(a, b):
+    """(..., m, d) x (..., k, d) -> (..., m, k)"""
+    return jnp.maximum(
+        jnp.sum(a * a, -1)[..., :, None]
+        - 2.0 * jnp.einsum("...md,...kd->...mk", a, b)
+        + jnp.sum(b * b, -1)[..., None, :], 0.0)
+
+
+def _update(keys, a, kc):
+    """Segment-mean update, batched over leading dims of keys (..., S, d)."""
+    onehot = jax.nn.one_hot(a, kc, dtype=keys.dtype)          # (..., S, kc)
+    sums = jnp.einsum("...sk,...sd->...kd", onehot, keys)
+    counts = jnp.sum(onehot, axis=-2)                          # (..., kc)
+    return sums / jnp.maximum(counts[..., None], 1.0), counts
+
+
+@functools.partial(jax.jit, static_argnames=("kc", "cap", "lloyd_iters",
+                                             "k2_iters", "kn"))
+def build_kv_clusters(keys: jax.Array, kc: int, cap: int,
+                      lloyd_iters: int = 2, k2_iters: int = 4, kn: int = 8):
+    """keys: (B, Hkv, S, d) -> (centroids (B,Hkv,kc,d),
+    members (B,Hkv,kc,cap) int32, member_mask bool, sizes (B,Hkv,kc))."""
+    B, H, S, d = keys.shape
+    kf = keys.astype(jnp.float32)
+    # init: evenly strided samples (deterministic, jit-friendly)
+    idx = jnp.linspace(0, S - 1, kc).astype(jnp.int32)
+    cent = jnp.take(kf, idx, axis=2)                           # (B,H,kc,d)
+    a = jnp.argmin(_sqdist(kf, cent), -1)
+    for _ in range(lloyd_iters):
+        cent, _ = _update(kf, a, kc)
+        a = jnp.argmin(_sqdist(kf, cent), -1)
+    # k²-means refinement: k_n-restricted assignment sweeps
+    knn = min(kn, kc)
+    for _ in range(k2_iters):
+        cc = _sqdist(cent, cent)                               # (B,H,kc,kc)
+        _, nb = jax.lax.top_k(-cc, knn)                        # (B,H,kc,kn)
+        cand = jnp.take_along_axis(
+            nb, a[..., None], axis=2)                          # (B,H,S,kn)
+        cand_cent = jnp.take_along_axis(
+            cent[:, :, None], cand[..., None], axis=3)         # (B,H,S,kn,d)
+        dist = jnp.maximum(
+            jnp.sum(kf * kf, -1)[..., None]
+            - 2.0 * jnp.einsum("bhsd,bhskd->bhsk", kf, cand_cent)
+            + jnp.sum(cand_cent * cand_cent, -1), 0.0)
+        loc = jnp.argmin(dist, -1)
+        a = jnp.take_along_axis(cand, loc[..., None], -1)[..., 0]
+        cent, _ = _update(kf, a, kc)
+    # member table: sort token ids by cluster, scatter positions < cap
+    order = jnp.argsort(a, axis=-1)                            # (B,H,S)
+    a_s = jnp.take_along_axis(a, order, -1)
+    first = jax.vmap(jax.vmap(
+        lambda row: jnp.searchsorted(row, row, side="left")))(a_s)
+    pos = jnp.arange(S)[None, None] - first
+    row = jnp.where(pos < cap, a_s, kc)
+    col = jnp.where(pos < cap, pos, 0)
+    members = jnp.zeros((B, H, kc + 1, cap), jnp.int32)
+    mask = jnp.zeros((B, H, kc + 1, cap), bool)
+    bi = jnp.arange(B)[:, None, None]
+    hi = jnp.arange(H)[None, :, None]
+    members = members.at[bi, hi, row, col].set(
+        order.astype(jnp.int32), mode="drop")[:, :, :kc]
+    mask = mask.at[bi, hi, row, col].set(True, mode="drop")[:, :, :kc]
+    sizes = jnp.sum(mask, -1).astype(jnp.int32)
+    return cent.astype(keys.dtype), members, mask, sizes
+
+
+@functools.partial(jax.jit, static_argnames=("kc", "cap", "lloyd_iters",
+                                             "k2_iters", "kn"))
+def build_cluster_major(keys: jax.Array, values: jax.Array, kc: int,
+                        cap: int, **kw):
+    """Cluster-major KV tables: run k²-means over the keys and REPACK the
+    cache so each cluster's members are contiguous — the cache IS the
+    member table. keys/values: (B, Hkv, S, d) ->
+    (kt (B,Hkv,kc,cap,d), vt same, centroids (B,Hkv,kc,d),
+    sizes (B,Hkv,kc) int32).
+
+    This layout is the beyond-paper serving optimisation (§Perf): "attend
+    to the top-p clusters" becomes p contiguous block reads, sharded by
+    cluster over the data axis — no gather ever crosses shards."""
+    cent, members, mask, sizes = build_kv_clusters(keys, kc, cap, **kw)
+    kt = jnp.take_along_axis(keys[:, :, None], members[..., None], axis=3)
+    vt = jnp.take_along_axis(values[:, :, None], members[..., None], axis=3)
+    kt = kt * mask[..., None].astype(kt.dtype)
+    vt = vt * mask[..., None].astype(vt.dtype)
+    return kt, vt, cent, sizes
+
+
+@jax.jit
+def recluster_ring(kt, vt, centroids, sizes, ring_k, ring_v, fill):
+    """Maintenance op (runs every ~R decode steps, off the critical path):
+    absorb the recent-token ring into the cluster-major tables — each ring
+    row appends to its nearest cluster (k²-means assignment), centroids
+    drift by the running mean, and the ring resets. Decode steps themselves
+    never write the tables (see gqa_decode_cluster_major)."""
+    B, H, kc, cap, d = kt.shape
+    R = ring_k.shape[2]
+
+    def insert_one(carry, r):
+        kt, vt, cent, sizes = carry
+        krow = ring_k[:, :, r]                         # (B, H, d)
+        vrow = ring_v[:, :, r]
+        live = r < jnp.minimum(fill, R)
+        d2 = _sqdist(krow[:, :, None], cent)[:, :, 0]
+        c = jnp.argmin(d2, -1)
+        bi = jnp.arange(B)[:, None]
+        hi = jnp.arange(H)[None, :]
+        slot = jnp.minimum(sizes[bi, hi, c], cap - 1)
+        ok = (sizes[bi, hi, c] < cap) & live
+        kt = kt.at[bi, hi, c, slot].set(
+            jnp.where(ok[..., None], krow.astype(kt.dtype),
+                      kt[bi, hi, c, slot]))
+        vt = vt.at[bi, hi, c, slot].set(
+            jnp.where(ok[..., None], vrow.astype(vt.dtype),
+                      vt[bi, hi, c, slot]))
+        sizes = sizes.at[bi, hi, c].add(ok.astype(jnp.int32))
+        n = sizes[bi, hi, c].astype(jnp.float32)[..., None]
+        cent = cent.at[bi, hi, c].set(jnp.where(
+            ok[..., None],
+            cent[bi, hi, c] + (krow.astype(cent.dtype) - cent[bi, hi, c])
+            / jnp.maximum(n, 1.0).astype(cent.dtype),
+            cent[bi, hi, c]))
+        return (kt, vt, cent, sizes), None
+
+    (kt, vt, centroids, sizes), _ = jax.lax.scan(
+        insert_one, (kt, vt, centroids, sizes), jnp.arange(R))
+    return (kt, vt, centroids, sizes,
+            jnp.zeros_like(ring_k), jnp.zeros_like(ring_v),
+            jnp.zeros_like(fill))
+
+
+@jax.jit
+def cluster_major_append(kt, vt, centroids, sizes, k_new, v_new,
+                         ema: float = 0.05):
+    """Online insert into the cluster-major tables: the decoded token's K/V
+    row is written at (nearest cluster, its size) — contiguous append, no
+    index table. Full clusters drop the insert (recluster() refreshes)."""
+    B, H, kc, cap, d = kt.shape
+    d2 = _sqdist(k_new[:, :, None], centroids)[:, :, 0]
+    c = jnp.argmin(d2, -1)                                     # (B, H)
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(H)[None, :]
+    slot = jnp.minimum(sizes[bi, hi, c], cap - 1)
+    ok = sizes[bi, hi, c] < cap
+    krow = jnp.where(ok[..., None], k_new.astype(kt.dtype),
+                     kt[bi, hi, c, slot])
+    vrow = jnp.where(ok[..., None], v_new.astype(vt.dtype),
+                     vt[bi, hi, c, slot])
+    kt = kt.at[bi, hi, c, slot].set(krow)
+    vt = vt.at[bi, hi, c, slot].set(vrow)
+    sizes = sizes.at[bi, hi, c].add(ok.astype(jnp.int32))
+    old = centroids[bi, hi, c]
+    centroids = centroids.at[bi, hi, c].set(
+        old + ema * (k_new.astype(centroids.dtype) - old))
+    return kt, vt, centroids, sizes
+
+
+@jax.jit
+def cluster_append(centroids, members, member_mask, sizes, k_new, pos,
+                   ema: float = 0.05):
+    """Online insert of one decoded token's key into the cluster structure.
+
+    centroids: (B,H,kc,d); members/(mask): (B,H,kc,cap); sizes: (B,H,kc);
+    k_new: (B,H,d); pos: scalar token index. Returns updated structures.
+    Overflowing clusters drop the insert (the token remains in the flat KV
+    cache; recluster() refreshes the structure periodically)."""
+    B, H, kc, cap = members.shape
+    d2 = _sqdist(k_new[:, :, None], centroids)[:, :, 0]        # (B,H,kc)
+    c = jnp.argmin(d2, -1)                                     # (B,H)
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(H)[None, :]
+    slot = sizes[bi, hi, c]                                    # (B,H)
+    ok = slot < cap
+    members = members.at[bi, hi, c, jnp.minimum(slot, cap - 1)].set(
+        jnp.where(ok, pos, members[bi, hi, c, jnp.minimum(slot, cap - 1)]))
+    member_mask = member_mask.at[bi, hi, c, jnp.minimum(slot, cap - 1)].set(
+        jnp.where(ok, True, member_mask[bi, hi, c,
+                                        jnp.minimum(slot, cap - 1)]))
+    sizes = sizes.at[bi, hi, c].add(ok.astype(jnp.int32))
+    # EMA drift of the winning centroid toward the new key
+    old = centroids[bi, hi, c]
+    centroids = centroids.at[bi, hi, c].set(
+        old + ema * (k_new.astype(centroids.dtype) - old))
+    return centroids, members, member_mask, sizes

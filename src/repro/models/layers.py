@@ -1,0 +1,108 @@
+"""Shared neural building blocks (pure JAX, param pytrees, no framework)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict of arrays
+
+DP = ("pod", "data")      # flattened data-parallel axes (multi-pod aware)
+TP = "model"
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+                  * scale).astype(dtype)}
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["w"]
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"]
+
+
+def swiglu_init(key, d: int, f: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, d, f, dtype),
+            "wg": dense_init(k2, d, f, dtype),
+            "wo": dense_init(k3, f, d, dtype)}
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    return dense(p["wo"], jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x))
+
+
+def rope_freqs(dh: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sanitize_spec(spec: P) -> P | None:
+    """Drop axes absent from the ambient mesh (e.g. 'pod' on a single-pod
+    mesh) so one set of constraints serves every production mesh."""
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return None
+    names = set(mesh.axis_names)
+    clean = []
+    for e in spec:
+        if e is None or isinstance(e, str):
+            clean.append(e if e in names else None)
+        else:
+            t = tuple(a for a in e if a in names)
+            clean.append(t if t else None)
+    return P(*clean)
+
+
+def shard(x: jax.Array, spec: P) -> jax.Array:
+    """Activation sharding hint; a no-op outside a mesh context."""
+    clean = sanitize_spec(spec)
+    if clean is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, clean)
+
+
+def head_spec(n_heads: int, tp_size: int = 16) -> P:
+    """Shard the head axis only when it divides the TP axis (DESIGN.md §6)."""
+    if n_heads % tp_size == 0:
+        return P(DP, None, TP, None)
+    return P(DP, None, None, None)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-mean cross entropy; logits float32 (B, S, V), labels (B, S).
+
+    The gold logit is selected with an iota-compare mask rather than
+    take_along_axis so the reduction stays sharded when V is vocab-
+    partitioned over the TP axis (a gather would all-gather the logits)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+              == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)

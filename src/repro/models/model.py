@@ -1,0 +1,285 @@
+"""Top-level model: config -> params / train forward / serve step / caches.
+
+All entry points are pure functions of (cfg, params, ...) so launch/dryrun
+can lower them against ShapeDtypeStruct stand-ins without allocating.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import transformer as tf
+from .kv_cluster import build_kv_clusters
+from .layers import DP, TP, dense, rmsnorm, rmsnorm_init, shard, softmax_xent
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(cfg, key) -> Params:
+    ks = jax.random.split(key, 6)
+    d, v = cfg.d_model, cfg.vocab
+    emb_scale = d ** -0.5
+    params = {
+        "embed": (jax.random.normal(ks[0], (v, d), jnp.float32)
+                  * emb_scale).astype(jnp.bfloat16),
+        "out_norm": rmsnorm_init(d),
+    }
+    if cfg.family == "audio":
+        params["enc"] = tf.stack_init(cfg, ks[1], tf.dense_layer_init,
+                                      cfg.encoder_layers)
+        params["enc_norm"] = rmsnorm_init(d)
+        params["stack"] = tf.stack_init(cfg, ks[2], tf.cross_layer_init,
+                                        cfg.n_layers)
+        return params
+    n_main = cfg.n_layers - cfg.first_dense
+    if cfg.first_dense:
+        params["prefix"] = tf.stack_init(cfg, ks[3], tf.dense_layer_init,
+                                         cfg.first_dense)
+    params["stack"] = tf.stack_init(cfg, ks[1], tf.layer_init, n_main)
+    if cfg.attn_every:
+        params["shared"] = tf.shared_attn_init(cfg, ks[4])
+    return params
+
+
+def param_shapes(cfg):
+    """ShapeDtypeStruct pytree of the params — dry-run stand-in."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding
+# --------------------------------------------------------------------------
+
+def embed_tokens(cfg, params, tokens, patches=None):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.n_patches and patches is not None:
+        # VLM stub frontend: patch embeddings replace the first n_patches
+        # positions (precomputed by the vision tower, see DESIGN.md §5).
+        pos = jnp.arange(h.shape[1])[None, :, None]
+        pad = h.shape[1] - cfg.n_patches
+        patches_full = jnp.pad(patches.astype(h.dtype),
+                               ((0, 0), (0, pad), (0, 0)))
+        h = jnp.where(pos < cfg.n_patches, patches_full, h)
+    return shard(h, P(DP, None, None))
+
+
+def unembed(cfg, params, h):
+    logits = h.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return shard(logits, P(DP, None, TP))
+
+
+# --------------------------------------------------------------------------
+# training forward
+# --------------------------------------------------------------------------
+
+def forward_train(cfg, params, batch, *, remat: str = "dots",
+                  q_chunk: int = 512, unroll: int = 1,
+                  seq_shard: bool = False):
+    """Returns (loss, metrics). batch: tokens/labels (+frames|patches)."""
+    tokens = batch["tokens"]
+    if cfg.family == "audio":
+        # stub conv frontend: precomputed frame embeddings (B, S_enc, d)
+        enc_h = batch["frames"].astype(jnp.bfloat16)
+        enc_h = shard(enc_h, P(DP, None, None))
+
+        def enc_body(h, p):
+            return tf.encoder_layer_fwd(cfg, p, h, q_chunk=q_chunk), None
+        enc_body = jax.checkpoint(enc_body, prevent_cse=False)
+        enc_h, _ = jax.lax.scan(enc_body, enc_h, params["enc"],
+                                unroll=min(unroll, cfg.encoder_layers))
+        enc_out = rmsnorm(params["enc_norm"], enc_h)
+
+        h = embed_tokens(cfg, params, tokens)
+
+        def dec_body(h, p):
+            return tf.cross_layer_fwd(cfg, p, h, enc_out,
+                                      q_chunk=q_chunk), None
+        dec_body = jax.checkpoint(dec_body, prevent_cse=False)
+        h, _ = jax.lax.scan(dec_body, h, params["stack"],
+                            unroll=min(unroll, cfg.n_layers))
+        aux = 0.0
+    else:
+        h = embed_tokens(cfg, params, tokens, batch.get("patches"))
+        if cfg.first_dense:
+            dense_cfg = dataclasses.replace(cfg, moe=False, mla=False)
+
+            def pre_body(h, p):
+                return tf.decoder_layer_fwd(dense_cfg, p, h,
+                                            q_chunk=q_chunk)[0], None
+            h, _ = jax.lax.scan(pre_body, h, params["prefix"],
+                                unroll=min(unroll, cfg.first_dense))
+        h, aux = tf.run_stack(cfg, params["stack"], h,
+                              shared_p=params.get("shared"), remat=remat,
+                              q_chunk=q_chunk, unroll=unroll,
+                              seq_shard=seq_shard)
+    h = rmsnorm(params["out_norm"], h)
+    logits = unembed(cfg, params, h)
+    loss = softmax_xent(logits, batch["labels"])
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def forward_prefill(cfg, params, batch, *, q_chunk: int = 512,
+                    unroll: int = 1, seq_shard: bool = False):
+    """Prefill forward: hidden states for the whole prompt but logits for
+    the LAST position only — production prefill never unembeds all S
+    positions (that is a train-step cost; §Perf lever for prefill cells)."""
+    tokens = batch["tokens"]
+    h = embed_tokens(cfg, params, tokens, batch.get("patches"))
+    if cfg.first_dense:
+        dense_cfg = dataclasses.replace(cfg, moe=False, mla=False)
+
+        def pre_body(h, p):
+            return tf.decoder_layer_fwd(dense_cfg, p, h,
+                                        q_chunk=q_chunk)[0], None
+        h, _ = jax.lax.scan(pre_body, h, params["prefix"],
+                            unroll=min(unroll, cfg.first_dense))
+    h, _ = tf.run_stack(cfg, params["stack"], h,
+                        shared_p=params.get("shared"), remat="none",
+                        q_chunk=q_chunk, unroll=unroll, seq_shard=seq_shard)
+    h_last = rmsnorm(params["out_norm"], h[:, -1:])
+    return unembed(cfg, params, h_last)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# caches + serving
+# --------------------------------------------------------------------------
+
+def _layer_cache_shape(cfg, B, S, clustered: bool):
+    dh, hkv = cfg.d_head, cfg.n_kv_heads
+    if cfg.ssm == "rwkv6":
+        dhead = cfg.d_model // cfg.n_heads
+        return {"state": jnp.zeros((B, cfg.n_heads, dhead, dhead),
+                                   jnp.float32),
+                "xprev": jnp.zeros((B, 1, cfg.d_model), jnp.bfloat16)}
+    if cfg.ssm == "mamba2":
+        d_in = cfg.ssm_expand * cfg.d_model
+        return {"state": jnp.zeros((B, cfg.n_heads, d_in // cfg.n_heads,
+                                    cfg.ssm_state), jnp.float32)}
+    if cfg.mla:
+        return {"lat": jnp.zeros((B, S, cfg.kv_lora + cfg.qk_rope_dim),
+                                 jnp.bfloat16)}
+    if clustered:
+        # cluster-major cache (§Perf layout lever, beyond-paper): the cache
+        # IS the k²-means member table — no flat K/V, the kc axis shards
+        # over the data axes and top-p reads never cross shards
+        kc, cap = cfg.kv_clusters, cfg.cluster_cap
+        R = cfg.cluster_ring
+        return {"kt": jnp.zeros((B, hkv, kc, cap, dh), jnp.bfloat16),
+                "vt": jnp.zeros((B, hkv, kc, cap, dh), jnp.bfloat16),
+                "cent": jnp.zeros((B, hkv, kc, dh), jnp.bfloat16),
+                "sizes": jnp.zeros((B, hkv, kc), jnp.int32),
+                "ring_k": jnp.zeros((B, hkv, R, dh), jnp.bfloat16),
+                "ring_v": jnp.zeros((B, hkv, R, dh), jnp.bfloat16),
+                "ring_fill": jnp.zeros((), jnp.int32)}
+    # decode-native layout (B, Hkv, S, dh): gathers and positional writes
+    # touch contiguous rows, never a transpose of the cache (§Perf lever)
+    return {"k": jnp.zeros((B, hkv, S, dh), jnp.bfloat16),
+            "v": jnp.zeros((B, hkv, S, dh), jnp.bfloat16)}
+
+
+def init_cache(cfg, B: int, S: int, *, clustered: bool | None = None,
+               enc_len: int = 1500):
+    """Zero-initialised decode cache pytree (stacked over layers)."""
+    if clustered is None:
+        clustered = S >= cfg.long_context_threshold and not cfg.ssm
+    n_main = cfg.n_layers - cfg.first_dense
+
+    def stack(shape_fn, n):
+        one = shape_fn()
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape),
+                            one)
+
+    cache = {"stack": stack(lambda: _layer_cache_shape(cfg, B, S, clustered),
+                            n_main)}
+    if cfg.family == "audio":
+        hkv, dh = cfg.n_kv_heads, cfg.d_head
+        cache["stack"] = stack(
+            lambda: {**_layer_cache_shape(cfg, B, S, clustered),
+                     "xk": jnp.zeros((B, hkv, enc_len, dh), jnp.bfloat16),
+                     "xv": jnp.zeros((B, hkv, enc_len, dh), jnp.bfloat16)},
+            cfg.n_layers)
+    if cfg.first_dense:
+        cache["prefix"] = stack(
+            lambda: {"k": jnp.zeros((B, cfg.n_kv_heads, S, cfg.d_head),
+                                    jnp.bfloat16),
+                     "v": jnp.zeros((B, cfg.n_kv_heads, S, cfg.d_head),
+                                    jnp.bfloat16)}, cfg.first_dense)
+    if cfg.attn_every:
+        napps = -(-(cfg.n_layers) // cfg.attn_every)
+        sc = {"k": jnp.zeros((napps, B, cfg.n_kv_heads, S, cfg.d_head),
+                             jnp.bfloat16),
+              "v": jnp.zeros((napps, B, cfg.n_kv_heads, S, cfg.d_head),
+                             jnp.bfloat16)}
+        if clustered:
+            kc, cap = cfg.kv_clusters, cfg.cluster_cap
+            hkv, dh = cfg.n_kv_heads, cfg.d_head
+            R = cfg.cluster_ring
+            sc = {"kt": jnp.zeros((napps, B, hkv, kc, cap, dh),
+                                  jnp.bfloat16),
+                  "vt": jnp.zeros((napps, B, hkv, kc, cap, dh),
+                                  jnp.bfloat16),
+                  "cent": jnp.zeros((napps, B, hkv, kc, dh), jnp.bfloat16),
+                  "sizes": jnp.zeros((napps, B, hkv, kc), jnp.int32),
+                  "ring_k": jnp.zeros((napps, B, hkv, R, dh), jnp.bfloat16),
+                  "ring_v": jnp.zeros((napps, B, hkv, R, dh), jnp.bfloat16),
+                  "ring_fill": jnp.zeros((napps,), jnp.int32)}
+        cache["shared"] = sc
+    return cache
+
+
+def cache_shapes(cfg, B, S, **kw):
+    return jax.eval_shape(lambda: init_cache(cfg, B, S, **kw))
+
+
+def serve_step(cfg, params, cache, tokens, pos, unroll: int = 1):
+    """Decode one token. tokens: (B, 1) int32; pos: scalar int32 (slot).
+
+    Returns (logits (B, vocab), new_cache). Whether attention is full or
+    clustered (k²-attention) is decided by the cache contents — caches built
+    with clustered=True carry centroid/member structures."""
+    h = embed_tokens(cfg, params, tokens)
+    new_cache = dict(cache)
+    if cfg.family == "audio":
+        h, nc, _ = tf.run_stack_decode(cfg, params["stack"], cache["stack"],
+                                       h, pos,
+                                       layer_decode_fn=tf.cross_layer_decode,
+                                       unroll=unroll)
+        new_cache["stack"] = nc
+    else:
+        if cfg.first_dense:
+            dense_cfg = dataclasses.replace(cfg, moe=False, mla=False)
+            h, nc, _ = tf.run_stack_decode(dense_cfg, params["prefix"],
+                                           cache["prefix"], h, pos,
+                                           unroll=unroll)
+            new_cache["prefix"] = nc
+        h, nc, sc = tf.run_stack_decode(
+            cfg, params["stack"], cache["stack"], h, pos,
+            shared_p=params.get("shared"), shared_cache=cache.get("shared"),
+            unroll=unroll)
+        new_cache["stack"] = nc
+        if sc is not None:
+            new_cache["shared"] = sc
+    h = rmsnorm(params["out_norm"], h)
+    logits = unembed(cfg, params, h)[:, 0]
+    return logits, new_cache
+
+
+def prefill_and_cluster(cfg, params, cache, tokens):
+    """Prefill path used by examples/smoke tests: run the train forward to
+    populate K/V caches layer by layer, then build k²-means clusters over
+    the keys (build_kv_clusters). Not used by the dry-run (which takes the
+    cache as an input spec)."""
+    raise NotImplementedError(
+        "examples/lm_clustered_kv.py wires prefill manually; the dry-run "
+        "takes caches as input specs")

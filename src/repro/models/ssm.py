@@ -1,0 +1,186 @@
+"""Attention-free mixers: RWKV6 ("Finch", data-dependent decay) and Mamba2
+(SSD recurrence). Both expose a scan-over-time training path and an O(1)
+single-token decode path (their long-context advantage: state, not cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+
+# --------------------------------------------------------------------------
+# RWKV6 time mixing
+# --------------------------------------------------------------------------
+
+def rwkv6_init(key, d: int, n_heads: int, lora: int = 64,
+               dtype=jnp.bfloat16):
+    dh = d // n_heads
+    ks = jax.random.split(key, 10)
+    mix = lambda k: (jax.random.uniform(k, (5, d), jnp.float32)).astype(dtype)
+    return {
+        "mu": mix(ks[0]),                        # token-shift lerp for r,k,v,w,g
+        "wr": dense_init(ks[1], d, d, dtype),
+        "wk": dense_init(ks[2], d, d, dtype),
+        "wv": dense_init(ks[3], d, d, dtype),
+        "wg": dense_init(ks[4], d, d, dtype),
+        "wo": dense_init(ks[5], d, d, dtype),
+        "w0": (jax.random.normal(ks[6], (d,), jnp.float32) * 0.1 - 6.0
+               ).astype(jnp.float32),            # decay bias (slow decay init)
+        "w1": dense_init(ks[7], d, lora, dtype),
+        "w2": dense_init(ks[8], lora, d, dtype),
+        "u": (jax.random.normal(ks[9], (n_heads, dh), jnp.float32) * 0.1
+              ).astype(jnp.float32),             # bonus for current token
+        "ln": rmsnorm_init(d, dtype),
+    }
+
+
+def _rwkv6_inputs(p, xt, x_prev, n_heads):
+    """Per-token projections with data-dependent token shift."""
+    d = xt.shape[-1]
+    dh = d // n_heads
+    mu = p["mu"].astype(jnp.float32)
+    xf, pf = xt.astype(jnp.float32), x_prev.astype(jnp.float32)
+    mixed = [pf + mu[i] * (xf - pf) for i in range(5)]
+    xr, xk, xv, xw, xg = [m.astype(xt.dtype) for m in mixed]
+    r = dense(p["wr"], xr)
+    k = dense(p["wk"], xk)
+    v = dense(p["wv"], xv)
+    g = jax.nn.silu(dense(p["wg"], xg))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(xw W1) W2))
+    w = jnp.exp(-jnp.exp(p["w0"] + dense(
+        p["w2"], jnp.tanh(dense(p["w1"], xw))).astype(jnp.float32)))
+    shp = (-1, n_heads, dh)
+    return (r.reshape(*xt.shape[:-1], n_heads, dh),
+            k.reshape(*xt.shape[:-1], n_heads, dh),
+            v.reshape(*xt.shape[:-1], n_heads, dh),
+            w.reshape(*xt.shape[:-1], n_heads, dh), g)
+
+
+def rwkv6_apply(p, x, *, n_heads: int):
+    """Training path. x: (B, S, d) -> (B, S, d); scan over time with per-head
+    state S (B, H, dh, dh)."""
+    B, S, d = x.shape
+    dh = d // n_heads
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g = _rwkv6_inputs(p, x, x_prev, n_heads)
+    u = p["u"]
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                          # (B, H, dh)
+        kv = kt[..., :, None] * vt[..., None, :]      # (B, H, dh, dh)
+        out = jnp.einsum("bhi,bhij->bhj", rt,
+                         state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, out
+
+    state0 = jnp.zeros((B, n_heads, dh, dh), jnp.float32)
+    xs = (jnp.moveaxis(r, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(w, 1, 0))
+    _, outs = jax.lax.scan(step, state0, xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    out = rmsnorm(p["ln"], out) * g
+    return dense(p["wo"], out)
+
+
+def rwkv6_decode(p, xt, x_prev, state, *, n_heads: int):
+    """O(1) decode. xt, x_prev: (B, 1, d); state: (B, H, dh, dh) f32.
+    Returns (out (B, 1, d), new_state, xt as next x_prev)."""
+    B, _, d = xt.shape
+    dh = d // n_heads
+    r, k, v, w, g = _rwkv6_inputs(p, xt[:, 0], x_prev[:, 0], n_heads)
+    kv = k[..., :, None].astype(jnp.float32) * v[..., None, :].astype(jnp.float32)
+    out = jnp.einsum("bhi,bhij->bhj", r.astype(jnp.float32),
+                     state + p["u"][None, :, :, None] * kv)
+    state = w[..., :, None] * state + kv
+    out = out.reshape(B, 1, d).astype(xt.dtype)
+    out = rmsnorm(p["ln"], out) * g[:, None]
+    return dense(p["wo"], out), state, xt
+
+
+# --------------------------------------------------------------------------
+# Mamba2 (SSD) — scalar per-head decay, (P x N) state
+# --------------------------------------------------------------------------
+
+def mamba2_init(key, d: int, n_heads: int, d_state: int, expand: int = 2,
+                dtype=jnp.bfloat16):
+    d_in = expand * d
+    dh = d_in // n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * d_state + n_heads,
+                              dtype),
+        "out_proj": dense_init(ks[1], d_in, d, dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "ln": rmsnorm_init(d_in, dtype),
+    }
+
+
+def _mamba2_dims(p, n_heads):
+    """Derive (d_in, dh, N) from param shapes (kept out of the pytree)."""
+    d_in = p["out_proj"]["w"].shape[0]
+    total = p["in_proj"]["w"].shape[1]
+    N = (total - 2 * d_in - n_heads) // 2
+    return d_in, d_in // n_heads, N
+
+
+def _mamba2_inputs(p, x, n_heads):
+    d_in, dh, N = _mamba2_dims(p, n_heads)
+    zxbcdt = dense(p["in_proj"], x)
+    z = zxbcdt[..., :d_in]
+    xin = zxbcdt[..., d_in:2 * d_in]
+    Bm = zxbcdt[..., 2 * d_in:2 * d_in + N].astype(jnp.float32)
+    Cm = zxbcdt[..., 2 * d_in + N:2 * d_in + 2 * N].astype(jnp.float32)
+    dt = jax.nn.softplus(zxbcdt[..., 2 * d_in + 2 * N:].astype(jnp.float32)
+                         + p["dt_bias"])                       # (..., H)
+    return z, xin, Bm, Cm, dt
+
+
+def mamba2_apply(p, x, *, n_heads: int):
+    """Training path. x: (B, S, d)."""
+    B, S, d = x.shape
+    d_in, dh, N = _mamba2_dims(p, n_heads)
+    z, xin, Bm, Cm, dt = _mamba2_inputs(p, x, n_heads)
+    xh = xin.reshape(B, S, n_heads, dh).astype(jnp.float32)
+    decay = jnp.exp(-jnp.exp(p["A_log"]) * dt)                  # (B, S, H)
+
+    def step(state, inp):
+        xt, bt, ct, dect, dtt = inp
+        # state: (B, H, dh, N)
+        upd = (dtt[..., None, None] * xt[..., :, None]
+               * bt[:, None, None, :])
+        state = dect[..., None, None] * state + upd
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    state0 = jnp.zeros((B, n_heads, dh, N), jnp.float32)
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(Bm, 1, 0),
+          jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(decay, 1, 0),
+          jnp.moveaxis(dt, 1, 0))
+    _, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                  # (B, S, H, dh)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(p["ln"], y) * jax.nn.silu(z)
+    return dense(p["out_proj"], y)
+
+
+def mamba2_decode(p, xt, state, *, n_heads: int):
+    """O(1) decode. xt: (B, 1, d); state: (B, H, dh, N) f32."""
+    B, _, d = xt.shape
+    d_in, dh, N = _mamba2_dims(p, n_heads)
+    z, xin, Bm, Cm, dt = _mamba2_inputs(p, xt[:, 0], n_heads)
+    xh = xin.reshape(B, n_heads, dh).astype(jnp.float32)
+    decay = jnp.exp(-jnp.exp(p["A_log"]) * dt)                  # (B, H)
+    upd = dt[..., None, None] * xh[..., :, None] * Bm[:, None, None, :]
+    state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(xt.dtype)
+    y = rmsnorm(p["ln"], y) * jax.nn.silu(z)[:, None]
+    return dense(p["out_proj"], y), state

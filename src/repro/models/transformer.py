@@ -1,0 +1,407 @@
+"""Layer-stack assembly for every assigned family.
+
+Layer params are stacked on a leading axis and the stack runs under
+``jax.lax.scan`` with activation checkpointing — HLO size stays O(1) in
+depth, which keeps the 80-layer dry-run cells compilable, and remat policy
+is configurable per run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (DP, TP, dense, rmsnorm, rmsnorm_init, shard, swiglu,
+                     swiglu_init)
+
+REMAT_POLICIES = {
+    "none": None,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "full": jax.checkpoint_policies.nothing_saveable,
+}
+
+
+# --------------------------------------------------------------------------
+# per-layer init
+# --------------------------------------------------------------------------
+
+def _attn_init(cfg, key):
+    if cfg.mla:
+        dims = attn.MLADims(cfg.kv_lora, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                            cfg.v_head_dim)
+        return attn.mla_init(key, cfg.d_model, cfg.n_heads, dims)
+    return attn.gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.d_head, cfg.qk_norm)
+
+
+def _mlp_init(cfg, key):
+    if cfg.moe:
+        return moe_mod.moe_init(key, cfg.d_model, cfg.moe_d_ff,
+                                cfg.n_experts, cfg.n_shared_experts)
+    return swiglu_init(key, cfg.d_model, cfg.d_ff)
+
+
+def layer_init(cfg, key):
+    """One decoder layer's params, by family."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    if cfg.ssm == "rwkv6":
+        return {"ln1": rmsnorm_init(d), "mix": ssm_mod.rwkv6_init(
+                    k1, d, cfg.n_heads),
+                "ln2": rmsnorm_init(d), "mlp": swiglu_init(k2, d, cfg.d_ff)}
+    if cfg.ssm == "mamba2":       # zamba2 hybrid: mamba layers; shared attn
+        return {"ln1": rmsnorm_init(d), "mix": ssm_mod.mamba2_init(
+                    k1, d, cfg.n_heads, cfg.ssm_state, cfg.ssm_expand)}
+    p = {"ln1": rmsnorm_init(d), "attn": _attn_init(cfg, k1),
+         "ln2": rmsnorm_init(d), "mlp": _mlp_init(cfg, k2)}
+    if cfg.moe and cfg.dense_residual:
+        p["dense_mlp"] = swiglu_init(k3, d, cfg.d_ff)
+    return p
+
+
+def dense_layer_init(cfg, key):
+    """Plain dense layer (DeepSeek first_dense prefix; whisper encoder)."""
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {"ln1": rmsnorm_init(d), "attn": attn.gqa_init(
+                k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.qk_norm),
+            "ln2": rmsnorm_init(d), "mlp": swiglu_init(k2, d, cfg.d_ff)}
+
+
+def shared_attn_init(cfg, key):
+    """Zamba2's shared attention+MLP block (one set of weights)."""
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {"ln1": rmsnorm_init(d), "attn": attn.gqa_init(
+                k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, False),
+            "ln2": rmsnorm_init(d), "mlp": swiglu_init(k2, d, cfg.d_ff)}
+
+
+def cross_layer_init(cfg, key):
+    """Whisper decoder layer: self-attn + cross-attn + MLP."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"ln1": rmsnorm_init(d), "attn": attn.gqa_init(
+                k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, False),
+            "lnx": rmsnorm_init(d), "xattn": attn.gqa_init(
+                k2, d, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, False),
+            "ln2": rmsnorm_init(d), "mlp": swiglu_init(k3, d, cfg.d_ff)}
+
+
+def stack_init(cfg, key, init_fn, n_layers: int):
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: init_fn(cfg, k))(keys)
+
+
+# --------------------------------------------------------------------------
+# forward bodies (train / prefill)
+# --------------------------------------------------------------------------
+
+def _mlp_apply(cfg, p, h):
+    if cfg.moe:
+        dense_fn = (lambda xf: swiglu(p["dense_mlp"], xf)) \
+            if cfg.dense_residual else None
+        y, aux = moe_mod.moe_apply(p["mlp"], h, top_k=cfg.top_k,
+                                   dense_residual_fn=dense_fn)
+        return y, aux
+    return swiglu(p["mlp"], h), 0.0
+
+
+def _attn_apply(cfg, p, h, q_chunk):
+    if cfg.mla:
+        dims = attn.MLADims(cfg.kv_lora, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                            cfg.v_head_dim)
+        out, _ = attn.mla_apply(p["attn"], h, n_heads=cfg.n_heads, dims=dims,
+                                rope_theta=cfg.rope_theta, q_chunk=q_chunk)
+        return out
+    out, _ = attn.gqa_apply(p["attn"], h, n_heads=cfg.n_heads,
+                            n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                            rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                            q_chunk=q_chunk)
+    return out
+
+
+def decoder_layer_fwd(cfg, p, h, shared_p=None, layer_idx=None,
+                      q_chunk: int = 512):
+    """One decoder layer, training path. Returns (h, aux_loss)."""
+    if cfg.ssm == "rwkv6":
+        h = h + ssm_mod.rwkv6_apply(p["mix"], rmsnorm(p["ln1"], h),
+                                    n_heads=cfg.n_heads)
+        h = h + swiglu(p["mlp"], rmsnorm(p["ln2"], h))
+        return h, 0.0
+    if cfg.ssm == "mamba2":
+        h = h + ssm_mod.mamba2_apply(p["mix"], rmsnorm(p["ln1"], h),
+                                     n_heads=cfg.n_heads)
+        if cfg.attn_every and shared_p is not None:
+            def shared_block(hh):
+                o, _ = attn.gqa_apply(
+                    shared_p["attn"], rmsnorm(shared_p["ln1"], hh),
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    d_head=cfg.d_head, rope_theta=cfg.rope_theta,
+                    q_chunk=q_chunk)
+                hh = hh + o
+                return hh + swiglu(shared_p["mlp"],
+                                   rmsnorm(shared_p["ln2"], hh))
+            h = jax.lax.cond(layer_idx % cfg.attn_every == 0,
+                             shared_block, lambda hh: hh, h)
+        return h, 0.0
+    h = h + _attn_apply(cfg, p, rmsnorm(p["ln1"], h), q_chunk)
+    y, aux = _mlp_apply(cfg, p, rmsnorm(p["ln2"], h))
+    return h + y, aux
+
+
+def run_stack(cfg, stacked, h, shared_p=None, remat: str = "dots",
+              q_chunk: int = 512, unroll: int = 1,
+              seq_shard: bool = False):
+    """scan the stacked decoder layers over h. Returns (h, total_aux).
+
+    seq_shard=True applies sequence parallelism to the residual stream at
+    layer boundaries (P(dp, TP, None)): the saved remat residuals and the
+    layer-boundary carry are TP-sharded, cutting per-device activation
+    memory ~tp_size x at the cost of an all-gather entering attention and
+    a reduce-scatter leaving the MLP (XLA inserts them)."""
+    policy = REMAT_POLICIES[remat]
+    from jax.sharding import PartitionSpec as P_
+    # REFUTED for SSM archs (§Perf): their mixers scan over TIME, and a
+    # sequence-sharded residual forces a reshard every layer (rwkv6 train
+    # regressed 0.66x) — disable rather than pay it.
+    seq_shard = seq_shard and not cfg.ssm
+
+    def body(carry, inp):
+        h, aux = carry
+        idx, p = inp
+        if seq_shard:
+            h = shard(h, P_(DP, TP, None))
+        h, a = decoder_layer_fwd(cfg, p, h, shared_p=shared_p,
+                                 layer_idx=idx, q_chunk=q_chunk)
+        if seq_shard:
+            h = shard(h, P_(DP, TP, None))
+        return (h, aux + a), None
+
+    if remat != "none":
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    (h, aux), _ = jax.lax.scan(body, (h, 0.0),
+                               (jnp.arange(n_layers), stacked),
+                               unroll=min(unroll, n_layers))
+    return h, aux
+
+
+def encoder_layer_fwd(cfg, p, h, q_chunk: int = 512):
+    """Whisper encoder layer: bidirectional (non-causal) attention."""
+    hn = rmsnorm(p["ln1"], h)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = attn.gqa_project(p["attn"], hn, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.d_head, positions, cfg.rope_theta, False)
+    o = attn.causal_attention(q, k, v, causal=False, q_chunk=q_chunk)
+    h = h + dense(p["attn"]["wo"], o.reshape(B, S, -1))
+    return h + swiglu(p["mlp"], rmsnorm(p["ln2"], h))
+
+
+def cross_layer_fwd(cfg, p, h, enc_out, q_chunk: int = 512):
+    """Whisper decoder layer (train): causal self + chunked cross + MLP."""
+    h = h + _attn_apply_plain(cfg, p["attn"], rmsnorm(p["ln1"], h), q_chunk)
+    # cross attention: queries from h, keys/values from encoder output
+    B, S, d = h.shape
+    hn = rmsnorm(p["lnx"], h)
+    q = dense(p["xattn"]["wq"], hn).reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = dense(p["xattn"]["wk"], enc_out).reshape(
+        B, -1, cfg.n_kv_heads, cfg.d_head)
+    v = dense(p["xattn"]["wv"], enc_out).reshape(
+        B, -1, cfg.n_kv_heads, cfg.d_head)
+    o = attn.causal_attention(q, k, v, causal=False, q_chunk=q_chunk)
+    h = h + dense(p["xattn"]["wo"], o.reshape(B, S, -1))
+    return h + swiglu(p["mlp"], rmsnorm(p["ln2"], h))
+
+
+def _attn_apply_plain(cfg, p, h, q_chunk):
+    out, _ = attn.gqa_apply(p, h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                            d_head=cfg.d_head, rope_theta=cfg.rope_theta,
+                            qk_norm=False, q_chunk=q_chunk)
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode bodies (one token, positional KV caches)
+# --------------------------------------------------------------------------
+
+def _clusters_of(cache_l):
+    if "mem" in cache_l:
+        return (cache_l["cent"], cache_l["mem"], cache_l["mmask"])
+    return None
+
+
+def decoder_layer_decode(cfg, p, cache_l, h, pos):
+    """One-token decode through one layer. cache_l holds this layer's state.
+    Returns (h, new_cache_l)."""
+    new = dict(cache_l)
+    if cfg.ssm == "rwkv6":
+        o, state, xprev = ssm_mod.rwkv6_decode(
+            p["mix"], rmsnorm(p["ln1"], h), cache_l["xprev"],
+            cache_l["state"], n_heads=cfg.n_heads)
+        h = h + o
+        h = h + swiglu(p["mlp"], rmsnorm(p["ln2"], h))
+        new.update(state=state, xprev=xprev)
+        return h, new
+    if cfg.ssm == "mamba2":
+        o, state = ssm_mod.mamba2_decode(p["mix"], rmsnorm(p["ln1"], h),
+                                         cache_l["state"], n_heads=cfg.n_heads)
+        h = h + o
+        new.update(state=state)
+        return h, new
+    if cfg.mla:
+        dims = attn.MLADims(cfg.kv_lora, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                            cfg.v_head_dim)
+        o, lat = attn.mla_decode(p["attn"], rmsnorm(p["ln1"], h),
+                                 cache_l["lat"], pos, n_heads=cfg.n_heads,
+                                 dims=dims, rope_theta=cfg.rope_theta)
+        h = h + o
+        new.update(lat=lat)
+    elif "kt" in cache_l:
+        # cluster-major k²-attention (long-context decode, §Perf layout);
+        # kt/vt/cent/sizes are READ-ONLY here — dropping them from the
+        # returned update keeps them out of the scan outputs, so the big
+        # tables are never copied (the decisive §Perf memory lever)
+        o, upd = attn.gqa_decode_cluster_major(
+            p["attn"], rmsnorm(p["ln1"], h), cache_l, pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+            rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+            top_p=cfg.cluster_top_p)
+        h = h + o
+        new = {k: v for k, v in new.items()
+               if k not in ("kt", "vt", "cent", "sizes")}
+        new.update(**upd)
+    else:
+        o, ck, cv, k_new = attn.gqa_decode(
+            p["attn"], rmsnorm(p["ln1"], h), cache_l["k"], cache_l["v"],
+            pos, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+            rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+            clusters=_clusters_of(cache_l), top_p=cfg.cluster_top_p)
+        h = h + o
+        new.update(k=ck, v=cv)
+        if "cent" in cache_l:
+            from .kv_cluster import cluster_append
+            cent, mem, mmask, sizes = cluster_append(
+                cache_l["cent"], cache_l["mem"], cache_l["mmask"],
+                cache_l["sizes"], k_new, pos)
+            new.update(cent=cent, mem=mem, mmask=mmask, sizes=sizes)
+    y, _ = _mlp_apply(cfg, p, rmsnorm(p["ln2"], h))
+    return h + y, new
+
+
+def cross_layer_decode(cfg, p, cache_l, h, pos):
+    """Whisper decoder layer decode: self-attn (positional cache, or
+    cluster-major for long contexts) + cross attention against precomputed
+    encoder K/V in the cache."""
+    new = dict(cache_l)
+    if "kt" in cache_l:
+        o, upd = attn.gqa_decode_cluster_major(
+            p["attn"], rmsnorm(p["ln1"], h), cache_l, pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+            rope_theta=cfg.rope_theta, top_p=cfg.cluster_top_p)
+        h = h + o
+        new = {k: v for k, v in new.items()
+               if k not in ("kt", "vt", "cent", "sizes")}
+        new.update(**upd)
+    else:
+        o, ck, cv, _ = attn.gqa_decode(
+            p["attn"], rmsnorm(p["ln1"], h), cache_l["k"], cache_l["v"],
+            pos, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            d_head=cfg.d_head, rope_theta=cfg.rope_theta,
+            clusters=_clusters_of(cache_l), top_p=cfg.cluster_top_p)
+        h = h + o
+        new.update(k=ck, v=cv)
+    B = h.shape[0]
+    hn = rmsnorm(p["lnx"], h)
+    q = dense(p["xattn"]["wq"], hn).reshape(B, cfg.n_heads, cfg.d_head)
+    o = attn.decode_attention(q, cache_l["xk"], cache_l["xv"])
+    h = h + dense(p["xattn"]["wo"], o.reshape(B, 1, -1))
+    return h + swiglu(p["mlp"], rmsnorm(p["ln2"], h)), new
+
+
+def run_stack_decode(cfg, stacked, cache, h, pos, shared_p=None,
+                     shared_cache=None, layer_decode_fn=None,
+                     unroll: int = 1):
+    """scan decode over the layer stack with per-layer caches.
+
+    Zamba2's shared attention block keeps its own per-application cache
+    (napps, B, S, Hkv, dh) carried through the scan; layer i applies the
+    block when i % attn_every == 0 using slot i // attn_every."""
+    fn = layer_decode_fn or decoder_layer_decode
+    n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    # the shared attention block's cluster tables are read-only during
+    # decode: hoist them out of the scan/cond carry (a carried table is
+    # copied by every cond — the zamba long_500k 0.14x regression)
+    shared_tables = None
+    if shared_cache is not None and "kt" in shared_cache:
+        shared_tables = {f: shared_cache[f]
+                         for f in ("kt", "vt", "cent", "sizes")}
+        shared_cache = {f: v for f, v in shared_cache.items()
+                        if f not in shared_tables}
+
+    def body(carry, inp):
+        h, sc = carry
+        idx, p, cache_l = inp
+        h, new_cache = fn(cfg, p, cache_l, h, pos)
+        if cfg.attn_every and shared_p is not None:
+            def with_attn(args):
+                h, sc = args
+                app = idx // cfg.attn_every
+                if shared_tables is not None:
+                    cache_l = {f: jax.lax.dynamic_index_in_dim(
+                        shared_tables[f], app, keepdims=False)
+                        for f in ("kt", "vt", "cent", "sizes")}
+                    cache_l.update({f: jax.lax.dynamic_index_in_dim(
+                        sc[f], app, keepdims=False)
+                        for f in ("ring_k", "ring_v", "ring_fill")})
+                    o, upd = attn.gqa_decode_cluster_major(
+                        shared_p["attn"], rmsnorm(shared_p["ln1"], h),
+                        cache_l, pos, n_heads=cfg.n_heads,
+                        n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                        rope_theta=cfg.rope_theta,
+                        top_p=cfg.cluster_top_p)
+                    h = h + o
+                    h = h + swiglu(shared_p["mlp"],
+                                   rmsnorm(shared_p["ln2"], h))
+                    sc = dict(sc)
+                    for f, val in upd.items():   # ring fields only
+                        sc[f] = jax.lax.dynamic_update_index_in_dim(
+                            sc[f], val, app, 0)
+                    return h, sc
+                ck = jax.lax.dynamic_index_in_dim(sc["k"], app, keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(sc["v"], app, keepdims=False)
+                o, ck, cv, k_new = attn.gqa_decode(
+                    shared_p["attn"], rmsnorm(shared_p["ln1"], h), ck, cv,
+                    pos, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    d_head=cfg.d_head, rope_theta=cfg.rope_theta,
+                    clusters=None, top_p=cfg.cluster_top_p)
+                h = h + o
+                h = h + swiglu(shared_p["mlp"], rmsnorm(shared_p["ln2"], h))
+                sc = dict(sc)
+                sc["k"] = jax.lax.dynamic_update_index_in_dim(sc["k"], ck,
+                                                              app, 0)
+                sc["v"] = jax.lax.dynamic_update_index_in_dim(sc["v"], cv,
+                                                              app, 0)
+                return h, sc
+            h, sc = jax.lax.cond(idx % cfg.attn_every == 0, with_attn,
+                                 lambda args: args, (h, sc))
+        return (h, sc), new_cache
+
+    (h, shared_cache), new_cache = jax.lax.scan(
+        body, (h, shared_cache), (jnp.arange(n_layers), stacked, cache),
+        unroll=min(unroll, n_layers))
+    if isinstance(cache, dict) and "kt" in cache:
+        # read-only cluster tables pass through unchanged (never copied)
+        new_cache = dict(new_cache, **{f: cache[f] for f in
+                                       ("kt", "vt", "cent", "sizes")})
+    if shared_tables is not None:
+        shared_cache = dict(shared_cache, **shared_tables)
+    return h, new_cache, shared_cache

@@ -1,0 +1,3 @@
+from .adamw import (adamw_init, adamw_update, cosine_schedule,
+                    clip_by_global_norm, init_opt_shapes)
+from .compress import compress_int8, decompress_int8, compressed_grads

@@ -1,0 +1,66 @@
+"""AdamW + cosine schedule + global-norm clipping (pure JAX).
+
+Optimizer moments are f32 and follow the ZeRO-1 sharding extension
+(launch/sharding.opt_specs); params stay bf16 with f32 master semantics
+folded into the update (moments carry the precision).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr=3e-4, warmup=200, total=10000,
+                    min_frac=0.1):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(step < warmup, warm, cos)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def init_opt_shapes(params_shape):
+    return jax.eval_shape(adamw_init, params_shape)
+
+
+def clip_by_global_norm(grads, max_norm: float = 1.0):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, opt, params, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, lr_fn=cosine_schedule):
+    step = opt["step"] + 1
+    lr = lr_fn(step)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return newp, m, v
+
+    flat = jax.tree.map(upd, grads, opt["m"], opt["v"], params)
+    params_new = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return params_new, {"m": m_new, "v": v_new, "step": step}

@@ -1,0 +1,40 @@
+"""Gradient compression for the cross-pod reduction.
+
+Int8 block quantisation with per-block scales (errors bounded by 1/127 of
+the block max). With GSPMD the all-reduce itself is XLA-inserted, so the
+jit path applies quantise->dequantise *before* the optimizer (the paper's
+counted-op discipline: the compression error is explicit and testable);
+the shard_map training path (launch/train.py --compress) reduces the int8
+payload over the 'pod' axis directly, cutting DCN bytes 4x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def compress_int8(g: jax.Array):
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(flat / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale, g.shape
+
+
+def decompress_int8(q, scale, shape):
+    flat = q.astype(jnp.float32) * scale
+    n = 1
+    for s in shape:
+        n *= s
+    return flat.reshape(-1)[:n].reshape(shape)
+
+
+def compressed_grads(grads):
+    """Quantise->dequantise every gradient leaf (jit path semantics)."""
+    def one(g):
+        q, s, shp = compress_int8(g)
+        return decompress_int8(q, s, shp).astype(g.dtype)
+    return jax.tree.map(one, grads)

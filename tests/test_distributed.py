@@ -1,0 +1,64 @@
+"""Distributed (shard_map) k²-means correctness on a multi-device debug
+mesh. Needs >1 host-platform devices, so it runs in a subprocess with
+XLA_FLAGS set (the main pytest process must keep 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.distributed import fit_distributed_k2means, \
+    make_distributed_k2means_step
+from repro.core import fit_k2means, assign_nearest, OpCounter
+from repro.data import gmm_blobs
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+key = jax.random.PRNGKey(0)
+x = gmm_blobs(key, 1024, 16, true_k=10)
+k, kn = 16, 6
+idx = jax.random.choice(key, 1024, shape=(k,), replace=False)
+init = x[idx]
+
+# distributed run
+c_d, a_d, hist = fit_distributed_k2means(x, k, kn, mesh, key,
+                                         max_iters=20, init_centers=init)
+
+# single-device reference: same init, same algorithm
+a0 = assign_nearest(x, init)
+r = fit_k2means(x, init, a0, kn=kn, max_iters=20)
+
+out = {
+  "dist_energy": float(hist[-1]),
+  "ref_energy": float(r.energy),
+  "monotone": bool(all(b <= a + 1e-2 for a, b in zip(hist, hist[1:]))),
+  "centers_close": bool(np.allclose(np.asarray(c_d), np.asarray(r.centers),
+                                    rtol=1e-2, atol=1e-2)),
+}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_k2means_matches_reference():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, proc.stdout
+    out = json.loads(line[0][len("RESULT "):])
+    assert out["monotone"]
+    # same init + same candidate rule -> same trajectory (fp tolerance)
+    assert abs(out["dist_energy"] - out["ref_energy"]) \
+        / out["ref_energy"] < 1e-3
+    assert out["centers_close"]

@@ -1,0 +1,79 @@
+"""Property-based tests (hypothesis) for the paper's invariants."""
+import hypothesis
+from hypothesis import given, settings, strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projective_split, gdi_init, clustering_energy
+from repro.core.distance import pairwise_sqdist, sqnorm
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def _phi(x):
+    mu = x.mean(0)
+    return float(((x - mu) ** 2).sum())
+
+
+@given(st.integers(2, 60), st.integers(1, 8), st.integers(0, 10_000))
+def test_lemma1_identity(n, d, seed):
+    """Lemma 1 (Kanungo): sum ||x-z||^2 = phi(S) + |S| ||z - mu||^2."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, d).astype(np.float32)
+    z = rng.randn(d).astype(np.float32)
+    lhs = ((x - z) ** 2).sum()
+    mu = x.mean(0)
+    rhs = _phi(x) + n * ((z - mu) ** 2).sum()
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-4)
+
+
+@given(st.integers(4, 50), st.integers(1, 6), st.integers(0, 10_000))
+def test_projective_split_partitions_and_reduces_energy(n, d, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    mask = jnp.ones((n,), bool)
+    ma, mb, ca, cb, pa, pb = projective_split(x, mask,
+                                              jax.random.PRNGKey(seed))
+    ma, mb = np.asarray(ma), np.asarray(mb)
+    # valid partition
+    assert (ma | mb).all() and not (ma & mb).any()
+    assert ma.sum() >= 1 and mb.sum() >= 1
+    # returned centers are the means of the halves
+    np.testing.assert_allclose(np.asarray(ca), np.asarray(x)[ma].mean(0),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(cb), np.asarray(x)[mb].mean(0),
+                               rtol=2e-3, atol=2e-3)
+    # split energy never exceeds the unsplit energy
+    xa, xb = np.asarray(x)[ma], np.asarray(x)[mb]
+    assert _phi(xa) + _phi(xb) <= _phi(np.asarray(x)) + 1e-2
+    # reported energies match the actual split energies
+    np.testing.assert_allclose(float(pa), _phi(xa), rtol=5e-3, atol=5e-2)
+    np.testing.assert_allclose(float(pb), _phi(xb), rtol=5e-3, atol=5e-2)
+
+
+@given(st.integers(8, 64), st.integers(2, 6), st.integers(2, 8),
+       st.integers(0, 1000))
+def test_gdi_produces_valid_clustering(n, d, k, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    centers, a = gdi_init(x, k, jax.random.PRNGKey(seed))
+    assert centers.shape == (k, d)
+    a = np.asarray(a)
+    assert a.min() >= 0 and a.max() < k
+    assert np.isfinite(np.asarray(centers)).all()
+
+
+@given(st.integers(2, 40), st.integers(1, 6), st.integers(1, 12),
+       st.integers(0, 1000))
+def test_pairwise_sqdist_nonneg_and_exact(n, d, k, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, d).astype(np.float32)
+    c = rng.randn(k, d).astype(np.float32)
+    got = np.asarray(pairwise_sqdist(jnp.asarray(x), jnp.asarray(c)))
+    want = ((x[:, None] - c[None, :]) ** 2).sum(-1)
+    assert (got >= 0).all()
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,158 @@
+"""Per-kernel allclose sweeps (interpret=True) against the ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.candidate_assign import candidate_assign
+from repro.kernels.center_knn import center_knn, center_sqdist
+from repro.kernels.distance_argmin import distance_argmin
+from repro.kernels.ops import (assign_nearest_pallas, choose_blocks,
+                               group_by_cluster, k2_assign_grouped)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("n,k,d,bn,bk", [
+    (256, 128, 32, 64, 64),
+    (512, 128, 96, 128, 128),
+    (128, 256, 17, 32, 128),     # non-aligned d
+    (1024, 64, 256, 256, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_distance_argmin_sweep(n, k, d, bn, bk, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n + k + d))
+    x = jax.random.normal(k1, (n, d), dtype)
+    c = jax.random.normal(k2, (k, d), dtype)
+    a, dist = distance_argmin(x.astype(jnp.float32), c.astype(jnp.float32),
+                              bn=bn, bk=bk, interpret=True)
+    ar, dr = ref.distance_argmin_ref(x.astype(jnp.float32),
+                                     c.astype(jnp.float32))
+    assert (np.asarray(a) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(dr),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,k,d,kn,bn", [
+    (256, 64, 48, 8, 64),
+    (512, 128, 16, 16, 128),
+    (128, 32, 200, 4, 32),
+])
+def test_candidate_assign_sweep(n, k, d, kn, bn):
+    ks = jax.random.split(jax.random.PRNGKey(n * k), 4)
+    x = jax.random.normal(ks[0], (n, d))
+    c = jax.random.normal(ks[1], (k, d))
+    cand = jax.random.randint(ks[2], (n // bn, kn), 0, k, jnp.int32)
+    skip = (jax.random.uniform(ks[3], (n // bn,)) < 0.3).astype(jnp.int32)
+    prev_a = jnp.zeros((n,), jnp.int32)
+    prev_d = jnp.full((n,), 7.0)
+    a, dist = candidate_assign(x, c, cand, skip, prev_a, prev_d, bn=bn,
+                               interpret=True)
+    ar, dr = ref.candidate_assign_ref(x, c, cand, skip, prev_a, prev_d, bn)
+    assert (np.asarray(a) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(dr),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("k,d", [(128, 32), (256, 64), (128, 300)])
+def test_center_sqdist_sweep(k, d):
+    c = jax.random.normal(KEY, (k, d))
+    got = center_sqdist(c, interpret=True)
+    want = ref.center_sqdist_ref(c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_center_knn_self_inclusive():
+    c = jax.random.normal(KEY, (128, 16))
+    nb = center_knn(c, 8, interpret=True)
+    assert (np.asarray(nb[:, 0]) == np.arange(128)).all()
+
+
+def test_grouped_k2_assign_end_to_end():
+    """kernel pipeline == unrestricted candidate oracle, incl. scatter-back."""
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (500, 32))
+    c = jax.random.normal(ks[1], (64, 32))
+    a0, d0 = ref.distance_argmin_ref(x, c)
+    nb = center_knn(c, 8, interpret=True)
+    perm, b2c = group_by_cluster(np.asarray(a0), 64, bn=32)
+    skip = jnp.zeros((len(b2c),), jnp.int32)
+    a1, d1 = k2_assign_grouped(x, c, nb, jnp.asarray(perm),
+                               jnp.asarray(b2c), skip, a0, d0, bn=32,
+                               interpret=True)
+    from repro.core.distance import gather_candidate_sqdist
+    cand_pt = nb[a0]
+    sq = gather_candidate_sqdist(x, c, cand_pt)
+    a_ref = jnp.take_along_axis(cand_pt, jnp.argmin(sq, 1)[:, None], 1)[:, 0]
+    assert (np.asarray(a1) == np.asarray(a_ref)).all()
+
+
+def test_assign_nearest_pallas_padding():
+    """odd n and k exercise the pad + mask path."""
+    x = jax.random.normal(KEY, (333, 20))
+    c = jax.random.normal(jax.random.PRNGKey(1), (45, 20))
+    a, d = assign_nearest_pallas(x, c, interpret=True)
+    ar, dr = ref.distance_argmin_ref(x, c)
+    assert (np.asarray(a) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_choose_blocks_vmem_budget():
+    for d in (50, 784, 3072, 32256):
+        bn, bk = choose_blocks(d, 1000)
+        assert bn * d + bk * d + 2 * bn * bk <= 12 * 2 ** 20 // 4
+
+
+# --------------------------------------------------------------------------
+# cluster_attend: k²-attention decode kernel (cluster-major KV layout)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hkv,g,S,dh,kc,cap,p", [
+    (2, 2, 2, 128, 32, 8, 64, 4),
+    (1, 4, 1, 64, 16, 4, 32, 2),
+    (2, 1, 4, 96, 64, 6, 32, 3),
+])
+def test_cluster_attend_matches_jnp(B, Hkv, g, S, dh, kc, cap, p):
+    from repro.kernels.cluster_attend import (cluster_attend,
+                                              cluster_major_pack,
+                                              select_clusters)
+    from repro.models.kv_cluster import build_kv_clusters
+    from repro.models.attention import clustered_decode_attention
+    H = Hkv * g
+    ks = jax.random.split(jax.random.PRNGKey(B * S + dh), 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, Hkv, S, dh))
+    v = jax.random.normal(ks[2], (B, Hkv, S, dh))
+    cent, mem, mmask, _ = build_kv_clusters(k, kc, cap)
+    kt, vt, valid = cluster_major_pack(k, v, mem, mmask)
+    sel = select_clusters(q, cent, p)
+    out = cluster_attend(q.reshape(B * H, dh), kt, vt, valid, sel,
+                         interpret=True).reshape(B, H, dh)
+    ref_out = clustered_decode_attention(q, k, v, cent, mem, mmask, top_p=p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_cluster_attend_full_coverage_exact():
+    from repro.kernels.cluster_attend import (cluster_attend,
+                                              cluster_major_pack,
+                                              select_clusters)
+    from repro.models.kv_cluster import build_kv_clusters
+    from repro.models.attention import decode_attention
+    B, Hkv, g, S, dh, kc, cap = 2, 2, 2, 64, 16, 4, 64
+    H = Hkv * g
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, Hkv, S, dh))
+    v = jax.random.normal(ks[2], (B, Hkv, S, dh))
+    cent, mem, mmask, _ = build_kv_clusters(k, kc, cap)
+    kt, vt, valid = cluster_major_pack(k, v, mem, mmask)
+    sel = select_clusters(q, cent, kc)
+    out = cluster_attend(q.reshape(B * H, dh), kt, vt, valid, sel,
+                         interpret=True).reshape(B, H, dh)
+    exact = decode_attention(q, k, v, valid=jnp.ones((S,), bool))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exact),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,128 @@
+"""k²-attention (clustered-KV) correctness: full-coverage equivalence with
+exact attention, cluster structure invariants, and online append."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (clustered_decode_attention,
+                                    decode_attention)
+from repro.models.kv_cluster import build_kv_clusters, cluster_append
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(B=2, H=2, S=64, dh=16, kc=8, cap=32):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    # decode-native cache layout (B, Hkv, S, dh)
+    k = jax.random.normal(ks[1], (B, H, S, dh))
+    v = jax.random.normal(ks[2], (B, H, S, dh))
+    cent, mem, mmask, sizes = build_kv_clusters(k, kc, cap)
+    return q, k, v, cent, mem, mmask, sizes
+
+
+def test_build_covers_every_token():
+    _, _, _, _, mem, mmask, sizes = _setup(cap=64)   # cap >= S: no overflow
+    B, H, kc, cap = mem.shape
+    for b in range(B):
+        for h in range(H):
+            toks = np.asarray(mem[b, h])[np.asarray(mmask[b, h])]
+            assert sorted(toks.tolist()) == list(range(64))
+    assert int(sizes.sum()) == B * H * 64
+
+
+def test_full_coverage_matches_exact_attention():
+    """top_p == kc and cap >= S: clustered attention must equal the exact
+    masked attention (the restriction is the only approximation)."""
+    q, k, v, cent, mem, mmask, _ = _setup(kc=8, cap=64)
+    out_c = clustered_decode_attention(q, k, v, cent, mem, mmask, top_p=8)
+    out_f = decode_attention(q, k, v, valid=jnp.ones((64,), bool))
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_f),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_partial_coverage_close_to_exact():
+    """top-half of clusters should reconstruct most of the attention mass
+    (keys are clustered by the same metric the query scores with)."""
+    q, k, v, cent, mem, mmask, _ = _setup(kc=8, cap=64)
+    out_c = clustered_decode_attention(q, k, v, cent, mem, mmask, top_p=6)
+    out_f = decode_attention(q, k, v, valid=jnp.ones((64,), bool))
+    err = np.linalg.norm(np.asarray(out_c) - np.asarray(out_f)) / \
+        np.linalg.norm(np.asarray(out_f))
+    assert err < 0.5
+
+
+def test_cluster_append_inserts_and_drifts():
+    q, k, v, cent, mem, mmask, sizes = _setup(kc=8, cap=64)
+    k_new = jax.random.normal(jax.random.PRNGKey(9), (2, 2, 16))
+    c2, m2, mm2, s2 = cluster_append(cent, mem, mmask, sizes, k_new,
+                                     jnp.int32(64))
+    assert int(s2.sum()) == int(sizes.sum()) + 2 * 2
+    # the inserted position is present exactly once per (b, h)
+    for b in range(2):
+        for h in range(2):
+            toks = np.asarray(m2[b, h])[np.asarray(mm2[b, h])]
+            assert (toks == 64).sum() == 1
+    assert not np.allclose(np.asarray(c2), np.asarray(cent))
+
+
+def test_append_respects_capacity():
+    q, k, v, cent, mem, mmask, sizes = _setup(kc=2, cap=32)  # 64 keys, 2x32
+    # all clusters full -> insert must drop, sizes unchanged
+    full_sizes = jnp.full_like(sizes, 32)
+    mm_full = jnp.ones_like(mmask)
+    k_new = jax.random.normal(jax.random.PRNGKey(3), (2, 2, 16))
+    _, _, mm2, s2 = cluster_append(cent, mem, mm_full, full_sizes, k_new,
+                                   jnp.int32(64))
+    assert (np.asarray(s2) == 32).all()
+    assert np.asarray(mm2).all()
+
+
+def test_cluster_major_roundtrip_and_recluster():
+    """build_cluster_major covers every token; recluster_ring absorbs the
+    ring rows into the nearest clusters and resets the ring."""
+    from repro.models.kv_cluster import (build_cluster_major,
+                                         recluster_ring)
+    B, H, S, dh, kc, cap, R = 2, 2, 64, 16, 4, 64, 8
+    ks = jax.random.split(KEY, 4)
+    k = jax.random.normal(ks[0], (B, H, S, dh))
+    v = jax.random.normal(ks[1], (B, H, S, dh))
+    kt, vt, cent, sizes = build_cluster_major(k, v, kc, cap)
+    assert int(sizes.sum()) == B * H * S
+    ring_k = jax.random.normal(ks[2], (B, H, R, dh))
+    ring_v = jax.random.normal(ks[3], (B, H, R, dh))
+    fill = jnp.int32(5)                  # only 5 of 8 ring slots live
+    kt2, vt2, cent2, sizes2, rk2, rv2, fill2 = recluster_ring(
+        kt, vt, cent, sizes, ring_k, ring_v, fill)
+    assert int(sizes2.sum()) == B * H * (S + 5)
+    assert int(fill2) == 0
+    assert not np.allclose(np.asarray(cent2), np.asarray(cent))
+    assert np.asarray(rk2).sum() == 0
+
+
+def test_ring_decode_matches_flat_reference():
+    """A clustered serve step with tokens in the RING must weight them
+    exactly (the ring is exact attention, not approximated)."""
+    from repro.models.attention import cluster_major_decode_attention, \
+        decode_attention
+    from repro.models.kv_cluster import build_cluster_major
+    B, H, S, dh, kc, cap, R = 1, 2, 32, 16, 4, 32, 8
+    ks = jax.random.split(KEY, 5)
+    k = jax.random.normal(ks[0], (B, H, S, dh))
+    v = jax.random.normal(ks[1], (B, H, S, dh))
+    kt, vt, cent, sizes = build_cluster_major(k, v, kc, cap)
+    ring_k = jax.random.normal(ks[2], (B, H, R, dh))
+    ring_v = jax.random.normal(ks[3], (B, H, R, dh))
+    fill = jnp.int32(3)
+    q = jax.random.normal(ks[4], (B, H, dh))
+    out = cluster_major_decode_attention(
+        q, kt, vt, cent, sizes, top_p=kc,
+        ring=(ring_k, ring_v, fill))
+    # oracle: exact attention over all S tokens + 3 live ring tokens
+    k_all = jnp.concatenate([k, ring_k[:, :, :3]], axis=2)
+    v_all = jnp.concatenate([v, ring_v[:, :, :3]], axis=2)
+    ref_out = decode_attention(q, k_all, v_all,
+                               valid=jnp.ones((S + 3,), bool))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,88 @@
+"""End-to-end serving integration: prefill -> cluster -> decode consistency,
+and elastic reshard-restore on a multi-device mesh (subprocess)."""
+import json
+import os
+import subprocess
+import sys
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.launch.serve import attach_clusters, prefill_into_cache
+from repro.models import init_cache, init_params, serve_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_clustered_decode_consistent_with_full_at_high_coverage():
+    """With top_p = kc and cap >= S the k²-attention serve path must agree
+    with exact attention through the whole stack (logits close)."""
+    cfg = get_smoke_config("granite-8b")
+    cfg = dataclasses.replace(cfg, kv_clusters=4, cluster_cap=64,
+                              cluster_top_p=4, cluster_ring=8)
+    params = init_params(cfg, KEY)
+    B, P_len, S = 2, 24, 32
+    prompt = jax.random.randint(KEY, (B, P_len), 0, cfg.vocab)
+    cache = init_cache(cfg, B, S, clustered=False)
+    _, cache = prefill_into_cache(cfg, params, cache, prompt)
+
+    step = jax.jit(lambda p, c, t, i: serve_step(cfg, p, c, t, i))
+    tok = prompt[:, -1:]
+    logits_full, _ = step(params, cache, tok, jnp.int32(P_len))
+
+    clustered = attach_clusters(cfg, dict(cache), length=P_len)
+    logits_clus, new_cache = step(params, clustered, tok, jnp.int32(P_len))
+    # full coverage -> same distribution up to clustering fp noise
+    pf = jax.nn.softmax(logits_full, -1)
+    pc = jax.nn.softmax(logits_clus, -1)
+    tv = 0.5 * float(jnp.abs(pf - pc).sum(-1).max())
+    assert tv < 0.05, f"total variation {tv}"
+    # ring got the decoded token; tables untouched
+    assert int(new_cache["stack"]["ring_fill"].sum()) == cfg.n_layers
+    np.testing.assert_array_equal(np.asarray(new_cache["stack"]["kt"]),
+                                  np.asarray(clustered["stack"]["kt"]))
+
+
+_ELASTIC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import save_checkpoint, reshard_restore
+
+# train-like state on an 8-chip (4,2) mesh
+mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+w = jnp.arange(64.0).reshape(8, 8)
+sh_a = NamedSharding(mesh_a, P("data", "model"))
+state = {"w": jax.device_put(w, sh_a)}
+save_checkpoint("/tmp/elastic_ckpt", 3, state)
+
+# "two hosts died": restore onto a (2,2) mesh using the first 4 devices
+mesh_b = jax.sharding.Mesh(
+    np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+sh_b = NamedSharding(mesh_b, P("data", "model"))
+restored = reshard_restore("/tmp/elastic_ckpt", 3, state, {"w": sh_b})
+ok = bool(np.allclose(np.asarray(restored["w"]), np.asarray(w)))
+ndev = len(restored["w"].sharding.device_set)
+print("RESULT " + json.dumps({"ok": ok, "ndev": ndev}))
+"""
+
+
+@pytest.mark.slow
+def test_elastic_reshard_restore_across_meshes():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", _ELASTIC], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    out = json.loads(line[0][len("RESULT "):])
+    assert out["ok"] and out["ndev"] == 4
