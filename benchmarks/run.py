@@ -1,52 +1,92 @@
 """Benchmark entry point — one section per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--fast]``
-Prints CSV blocks (name,value columns per table) plus summary lines.
+``PYTHONPATH=src python -m benchmarks.run [--fast] [--perf-out PATH]``
+Prints CSV blocks (name,value columns per table) plus summary lines, and
+writes a machine-readable BENCH_perf.json (per-section wall-clock + each
+section's summary payload + the run's counted-op totals) so future PRs can
+compare against this baseline.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+
+
+def _jsonable(v):
+    """Best-effort coercion of section return values for the perf report.
+    Numpy scalars become numbers (not strings) so the baselines stay
+    machine-comparable."""
+    try:
+        json.dumps(v)
+        return v
+    except TypeError:
+        if isinstance(v, dict):
+            return {str(k): _jsonable(x) for k, x in v.items()}
+        if isinstance(v, (list, tuple)):
+            return [_jsonable(x) for x in v]
+        if hasattr(v, "item"):
+            try:
+                return _jsonable(v.item())
+            except (TypeError, ValueError):
+                pass
+        return str(v)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller grids (CI mode)")
+    ap.add_argument("--perf-out", default="BENCH_perf.json",
+                    help="machine-readable per-section report path")
     args, _ = ap.parse_known_args()
 
     from . import complexity, convergence_curves, roofline, table4_init, \
         table5_speedup
 
-    t0 = time.time()
-    print("== Table 2: per-iteration complexity (counted ops vs analytic) ==")
-    complexity.run(max_iters=12 if args.fast else 25)
-    print(f"# section time {time.time() - t0:.1f}s\n")
+    sections = [
+        ("table2_complexity",
+         "Table 2: per-iteration complexity (counted ops vs analytic)",
+         lambda: complexity.run(max_iters=12 if args.fast else 25)),
+        ("table4_init",
+         "Table 4/7: initialization comparison (random / ++ / GDI)",
+         lambda: table4_init.run(max_iters=20 if args.fast else 40)),
+        ("table5_speedup_1pct",
+         "Table 5 (1% target): algorithmic speedup over Lloyd++",
+         lambda: table5_speedup.run(
+             eps=0.01, max_iters=25 if args.fast else 40,
+             datasets=("mnist50", "usps") if args.fast else None)),
+        ("table6_speedup_0pct",
+         "Table 6 (0% target): speedup at exact Lloyd++ energy",
+         lambda: table5_speedup.run(eps=0.0,
+                                    max_iters=25 if args.fast else 40,
+                                    datasets=("mnist50", "usps"))),
+        ("fig23_convergence",
+         "Fig 2/3: convergence curves (energy vs counted ops)",
+         lambda: convergence_curves.run(max_iters=15 if args.fast else 30)),
+        ("roofline",
+         "Roofline (from dry-run artifacts, if present)",
+         lambda: roofline.run()),
+    ]
 
-    t0 = time.time()
-    print("== Table 4/7: initialization comparison (random / ++ / GDI) ==")
-    table4_init.run(max_iters=20 if args.fast else 40)
-    print(f"# section time {time.time() - t0:.1f}s\n")
+    report = {"fast": args.fast, "sections": []}
+    wall0 = time.time()
+    for key, title, fn in sections:
+        t0 = time.time()
+        print(f"== {title} ==")
+        result = fn()
+        wall = time.time() - t0
+        print(f"# section time {wall:.1f}s\n")
+        report["sections"].append({
+            "section": key,
+            "wall_s": round(wall, 3),
+            "summary": _jsonable(result),
+        })
+    report["total_wall_s"] = round(time.time() - wall0, 3)
 
-    t0 = time.time()
-    print("== Table 5 (1% target): algorithmic speedup over Lloyd++ ==")
-    table5_speedup.run(eps=0.01, max_iters=25 if args.fast else 40,
-                       datasets=("mnist50", "usps") if args.fast else None)
-    print(f"# section time {time.time() - t0:.1f}s\n")
-
-    t0 = time.time()
-    print("== Table 6 (0% target): speedup at exact Lloyd++ energy ==")
-    table5_speedup.run(eps=0.0, max_iters=25 if args.fast else 40,
-                       datasets=("mnist50", "usps"))
-    print(f"# section time {time.time() - t0:.1f}s\n")
-
-    t0 = time.time()
-    print("== Fig 2/3: convergence curves (energy vs counted ops) ==")
-    convergence_curves.run(max_iters=15 if args.fast else 30)
-    print(f"# section time {time.time() - t0:.1f}s\n")
-
-    print("== Roofline (from dry-run artifacts, if present) ==")
-    roofline.run()
+    with open(args.perf_out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {args.perf_out}")
 
 
 if __name__ == "__main__":

@@ -42,7 +42,13 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
         kn: int = 30, m: int = 30, batch: int = 100,
         minibatch_iters: int | None = None,
         counter: OpCounter | None = None, **kw: Any) -> KMeansResult:
-    """Cluster ``x`` into ``k`` clusters. The paper's method is the default."""
+    """Cluster ``x`` into ``k`` clusters. The paper's method is the default.
+
+    Extra keywords flow to the method's fit function — notably
+    ``backend="pallas"`` selects the fused k²-means device step
+    (kernels + DESIGN.md §3) and ``monitor_every=<m>`` defers its
+    energy/op-count host reads.
+    """
     key = key if key is not None else jax.random.PRNGKey(0)
     counter = counter or OpCounter()
     k_init, k_fit = jax.random.split(key)

@@ -18,6 +18,26 @@ candidate list of its cluster changed — both exact conditions, so k²-means
 assignments here match the bound-free reference exactly. Counted vector ops
 charge only recomputed points, reproducing the paper's empirical decay of the
 O(n k_n d) term towards O(n d) at convergence.
+
+Two backends execute the iteration (``fit_k2means(..., backend=...)``):
+
+``"xla"``
+    Pure-XLA ``lax.map`` over candidate gathers; the portable reference.
+
+``"pallas"``
+    One jitted device step chains center_knn -> cluster-grouped tiled
+    candidate assignment (kernels.candidate_assign) -> segment-sum center
+    update -> Hamerly bound adjustment, with the cluster-grouped layout
+    built on device (kernels.ops.group_by_cluster_device) so no host
+    roundtrip happens between iterations. Energy / op-count host reads are
+    deferred to every ``monitor_every`` iterations. Assignments match the
+    xla backend exactly (both recompute under the same exact conditions;
+    the pallas path recomputes whole bn-point blocks, which can only
+    tighten bounds, never change an assignment). Caveat: the backends
+    build the center k_n-NN graph with different distance implementations
+    (Pallas MXU kernel vs XLA einsum), so exact parity is conditional on
+    both ranking near-tied k_n-th neighbours identically — measure-zero
+    on real data, but not guaranteed on adversarial ties (DESIGN.md §3.1).
 """
 from __future__ import annotations
 
@@ -29,6 +49,31 @@ import jax.numpy as jnp
 from .distance import pairwise_sqdist, sqnorm, clustering_energy
 from .lloyd import KMeansResult, update_centers
 from .opcount import OpCounter
+
+
+def _update_and_adjust(x, c, a, a_new, neighbors, u_new, lo_new):
+    """Shared tail of both backends: mean update, then the Hamerly bound
+    adjustment for the next iteration (u += delta[a'], l -= max neighbourhood
+    movement). Returns (c_next, u_adj, lo_adj, changed)."""
+    c_next = update_centers(x, a_new, c)
+    delta = jnp.sqrt(jnp.maximum(sqnorm(c_next - c), 0.0))   # (k,) movements
+    delta_nb = jnp.max(delta[neighbors], axis=1)             # per-neighbourhood
+    u_adj = u_new + delta[a_new]
+    lo_adj = lo_new - delta_nb[a_new]
+    changed = jnp.sum(a_new != a)
+    return c_next, u_adj, lo_adj, changed
+
+
+def _init_state(x, centers, assignment, kn: int):
+    """Loop state shared by both backends: stale-zero bounds (`first` forces
+    a full recompute on iteration 1) and an all-invalid neighbor graph."""
+    n = x.shape[0]
+    k = centers.shape[0]
+    a = assignment.astype(jnp.int32)
+    u = jnp.zeros((n,), x.dtype)
+    lo = jnp.zeros((n,), x.dtype)
+    prev_nb = jnp.full((k, kn), -1, jnp.int32)
+    return a, u, lo, prev_nb, jnp.array(True)
 
 
 @functools.partial(jax.jit, static_argnames=("kn", "chunk"))
@@ -78,35 +123,147 @@ def k2means_step(x, c, a, u, lo, prev_neighbors, first, kn: int,
     n_computed = jnp.sum(need)
 
     # --- 3. update step + bound adjustment for the next iteration ---------
-    c_next = update_centers(x, a_new, c)
-    delta = jnp.sqrt(jnp.maximum(sqnorm(c_next - c), 0.0))   # (k,) movements
-    delta_nb = jnp.max(delta[neighbors], axis=1)             # per-neighbourhood
-    u_adj = u_new + delta[a_new]
-    lo_adj = lo_new - delta_nb[a_new]
-    changed = jnp.sum(a_new != a)
+    c_next, u_adj, lo_adj, changed = _update_and_adjust(
+        x, c, a, a_new, neighbors, u_new, lo_new)
     return c_next, a_new, u_adj, lo_adj, neighbors, (n_computed, changed)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kn", "bn", "bkn", "interpret"))
+def k2means_pallas_step(x, c, a, u, lo, prev_neighbors, first, kn: int,
+                        bn: int, bkn: int, interpret: bool):
+    """One fused k²-means iteration on the Pallas fast path.
+
+    Chains the whole iteration into one device step: center k_n-NN graph
+    (Pallas center_sqdist + top_k), device-side cluster grouping, the tiled
+    candidate-assignment kernel with per-block Hamerly skip flags,
+    segment-sum center update, and the bound adjustment for the next
+    iteration. Returns (c', a', u', lo', neighbors, stats) with stats a
+    device tuple (n_need, changed, energy) — nothing here forces a host
+    sync; the fit loop reads stats every ``monitor_every`` iterations.
+    """
+    from ..kernels.center_knn import center_sqdist
+    from ..kernels.ops import (group_by_cluster_device, k2_assign_grouped,
+                               scatter_from_grouped)
+
+    n, d = x.shape
+    k = c.shape[0]
+
+    # --- 1. k_n-NN graph over centers (self-inclusive: d(c,c)=0 wins) -----
+    cc_sq = center_sqdist(c, interpret=interpret)
+    _, neighbors = jax.lax.top_k(-cc_sq, kn)                 # (k, kn)
+    neighbors = neighbors.astype(jnp.int32)
+    list_changed = jnp.any(neighbors != prev_neighbors, axis=1)   # (k,)
+
+    # --- 2. grouped, tiled, bound-gated assignment ------------------------
+    need = (u >= lo) | list_changed[a] | first               # (n,) bool
+    perm, b2c = group_by_cluster_device(a, k, bn)
+    valid = perm >= 0
+    safe_perm = jnp.maximum(perm, 0)
+    needp = need[safe_perm] & valid
+    nb = perm.shape[0] // bn
+    # a block is skipped iff no point in it needs recomputation; trailing
+    # all-padding capacity blocks are skipped for free (needp all False)
+    skip = (~jnp.any(needp.reshape(nb, bn), axis=1)).astype(jnp.int32)
+    a_new, d1_sq, d2_sq = k2_assign_grouped(
+        x, c, neighbors, perm, b2c, skip, a, u * u, lo * lo,
+        bn=bn, bkn=bkn, interpret=interpret)
+    # points in non-skipped blocks got exact distances; keep the stale (but
+    # valid) bounds elsewhere instead of a sqrt(u^2) roundtrip
+    fresh = scatter_from_grouped(perm, jnp.repeat(skip == 0, bn),
+                                 jnp.zeros((n,), bool))
+    u_new = jnp.where(fresh, jnp.sqrt(d1_sq), u)
+    lo_new = jnp.where(fresh, jnp.sqrt(d2_sq), lo)
+    n_need = jnp.sum(need)
+
+    # --- 3. update step + bound adjustment for the next iteration ---------
+    c_next, u_adj, lo_adj, changed = _update_and_adjust(
+        x, c, a, a_new, neighbors, u_new, lo_new)
+    energy = clustering_energy(x, c_next, a_new)
+    return c_next, a_new, u_adj, lo_adj, neighbors, (n_need, changed, energy)
+
+
+def _fit_k2means_pallas(x, centers, assignment, *, kn, max_iters, counter,
+                        monitor_every, bn, bkn, interpret):
+    from ..kernels.ops import choose_group_bn
+
+    n, d = x.shape
+    k = centers.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bn = bn or choose_group_bn(n, k)
+    c = centers
+    a, u, lo, prev_nb, first = _init_state(x, centers, assignment, kn)
+    history = []
+    pending = []          # device-side stats; host-read every monitor_every
+    it_done = 0
+    converged = False
+
+    def flush():
+        nonlocal it_done, converged
+        for n_need, changed, energy in jax.device_get(pending):
+            it_done += 1
+            counter.add_distances(k * k + int(n_need) * kn + k)
+            counter.add_additions(n)
+            history.append((counter.snapshot(), float(energy)))
+            if it_done > 1 and int(changed) == 0:
+                converged = True   # fixed point: later pending iterations
+                break              # are identical states, drop them
+        pending.clear()
+
+    for it in range(1, max_iters + 1):
+        c, a, u, lo, prev_nb, stats = k2means_pallas_step(
+            x, c, a, u, lo, prev_nb, first, kn, bn, bkn, interpret)
+        first = jnp.array(False)
+        pending.append(stats)
+        if it % monitor_every == 0 or it == max_iters:
+            flush()
+            if converged:
+                break
+    # history[-1] already holds the energy of the final recorded state (any
+    # post-convergence pending iterations were identical fixed points)
+    energy = history[-1][1] if history else \
+        float(clustering_energy(x, c, a))
+    return KMeansResult(c, a, energy, it_done, counter.total, history)
 
 
 def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
                 kn: int = 30, max_iters: int = 100,
                 counter: OpCounter | None = None,
-                chunk: int = 2048) -> KMeansResult:
+                chunk: int = 2048, backend: str = "xla",
+                monitor_every: int = 1, bn: int | None = None,
+                bkn: int = 8,
+                interpret: bool | None = None) -> KMeansResult:
     """Run k²-means from an initialisation (centers + assignments).
 
     GDI provides assignments for free; for other inits pass
     ``assign_nearest(x, centers)`` (and charge it to the counter yourself,
     as the benchmark harness does).
+
+    backend: "xla" (portable lax.map reference) or "pallas" (fused device
+    step through the tiled candidate-assignment kernel; see module
+    docstring). Both produce identical assignments. monitor_every defers
+    the pallas backend's energy/op-count host reads (and hence its
+    convergence check) to every that-many iterations; bn/bkn pick the
+    point-block and candidate-tile sizes (bn=None auto-selects from n/k);
+    interpret=None runs the kernels in interpret mode off-TPU.
     """
     counter = counter or OpCounter()
     n, d = x.shape
     k = centers.shape[0]
     kn = min(kn, k)
+    if monitor_every < 1:
+        raise ValueError(f"monitor_every must be >= 1, got {monitor_every}")
+    if backend == "pallas":
+        return _fit_k2means_pallas(
+            x, centers, assignment, kn=kn, max_iters=max_iters,
+            counter=counter, monitor_every=monitor_every, bn=bn, bkn=bkn,
+            interpret=interpret)
+    if backend != "xla":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'xla' or 'pallas'")
     c = centers
-    a = assignment.astype(jnp.int32)
-    u = jnp.zeros((n,), x.dtype)            # stale; `first` forces recompute
-    lo = jnp.zeros((n,), x.dtype)
-    prev_nb = jnp.full((k, kn), -1, jnp.int32)
-    first = jnp.array(True)
+    a, u, lo, prev_nb, first = _init_state(x, centers, assignment, kn)
     history = []
     it = 0
     for it in range(1, max_iters + 1):

@@ -1,18 +1,34 @@
-"""Pallas TPU kernel: k_n-restricted assignment — the k²-means hotspot.
+"""Pallas TPU kernels: k_n-restricted assignment — the k²-means hotspot.
 
-Contract: points are pre-grouped so that every point block (bn points)
-shares one candidate list of k_n center indices (ops.group_by_cluster builds
-this layout from the current assignment: points sorted by cluster, clusters
-padded to block multiples). The candidate table rides in scalar-prefetch
-SMEM, and the *center BlockSpec index_map reads it* — Pallas streams exactly
-the k_n candidate rows per block HBM→VMEM, which is the TPU-native
-realisation of "only look at the k_n nearest clusters".
+Two generations of the kernel live here (DESIGN.md §3):
+
+``candidate_assign`` (tiled, the fast path)
+    Candidates are processed ``bkn`` at a time: grid ``(nb, kn_pad/bkn)``
+    instead of the per-row ``(nb, kn)``.  Each grid step DMAs one
+    ``(bkn, d)`` slab of a *neighbor-center table* — candidate centers
+    pre-gathered contiguously per candidate-list row — and issues one
+    MXU-shaped ``(bn, d) x (d, bkn)`` matmul.  The slab to fetch is picked
+    by the BlockSpec index_map reading the scalar-prefetched ``rowsel``
+    array (block -> table row), so Pallas streams exactly the candidate
+    rows each block needs, ``bkn`` per DMA, instead of issuing ``kn``
+    single-row DMAs and ``(bn, d) x (d, 1)`` dots that waste the MXU.
+    The kernel tracks the best *and second-best* squared distance per
+    point, which feeds the Hamerly-style lower bound directly.
+
+``candidate_assign_rowwise`` (legacy, one candidate row per grid step)
+    Kept as the comparison baseline for ``benchmarks/assign_bench.py``
+    and as the simplest correct realisation of the layout contract.
+
+Contract (both): points are pre-grouped so that every point block (bn
+points) shares one candidate list of k_n center indices
+(ops.group_by_cluster_device builds this layout from the current
+assignment: points sorted by cluster, clusters padded to block multiples).
 
 Triangle-inequality adaptation (DESIGN.md §3): a per-block skip flag (from
 the Hamerly-style bounds) gates the whole compute with @pl.when — an entire
 (bn, k_n) distance tile is elided when no point in the block can change
 assignment. Tile-level pruning is the TPU analogue of Elkan's per-point
-branch; the flag also suppresses the candidate-row DMA via a zero index.
+branch; the flag also suppresses the candidate-slab DMA via a zero index.
 """
 from __future__ import annotations
 
@@ -23,11 +39,189 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Padded candidate columns carry this squared "distance" so they never win
+# an argmin; finite (not inf) so no inf-inf NaNs can appear downstream.
+PAD_SQDIST = 1e30
 
-def _kernel(cand_ref, skip_ref,                      # scalar prefetch (SMEM)
-            x_ref, c_ref, csq_ref, prev_a_ref, prev_d_ref,
-            a_ref, d_ref,
-            best_d, best_a, xsq):
+
+def pad_candidates(cand: jax.Array, bkn: int) -> jax.Array:
+    """Pad candidate lists (rows, kn) -> (rows, kn_pad) with -1 sentinels so
+    kn divides into bkn tiles. -1 columns are masked to PAD_SQDIST."""
+    kn = cand.shape[-1]
+    pad = (-kn) % bkn
+    if pad == 0:
+        return cand
+    return jnp.pad(cand, ((0, 0), (0, pad)), constant_values=-1)
+
+
+def candidate_tables(c: jax.Array, cidx: jax.Array):
+    """Gather the candidate-center table for ``candidate_assign_tiled``.
+
+    c: (k, d) centers; cidx: (T, kn_pad) int32 candidate ids (-1 = padding).
+    Returns (ctab (T, kn_pad, d), csqtab (T, kn_pad)) where padded columns
+    get PAD_SQDIST so they can never win. This O(T * kn * d) XLA gather is
+    the price of turning kn arbitrary-row DMAs into kn/bkn contiguous slab
+    DMAs inside the kernel; for the grouped path T = k (one row per
+    cluster), so it is the same order as the O(k^2 d) graph build.
+    """
+    ctab = c[jnp.maximum(cidx, 0)]
+    csqtab = jnp.where(cidx >= 0, jnp.sum(ctab * ctab, axis=-1), PAD_SQDIST)
+    return ctab, csqtab.astype(jnp.float32)
+
+
+def _tiled_kernel(rowsel_ref, skip_ref,              # scalar prefetch (SMEM)
+                  x_ref, ctab_ref, csq_ref, cidx_ref,
+                  prev_a_ref, prev_d1_ref, prev_d2_ref,
+                  a_ref, d1_ref, d2_ref,
+                  best_d1, best_d2, best_a, xsq):
+    i, j = pl.program_id(0), pl.program_id(1)
+    nt = pl.num_programs(1)
+    skipped = skip_ref[i] != 0
+
+    @pl.when(j == 0)
+    def _init():
+        best_d1[...] = jnp.full_like(best_d1, jnp.inf)
+        best_d2[...] = jnp.full_like(best_d2, jnp.inf)
+        best_a[...] = jnp.zeros_like(best_a)
+        xsq[...] = jnp.sum(x_ref[...] * x_ref[...], axis=-1)
+
+    @pl.when(jnp.logical_not(skipped))
+    def _compute():
+        x = x_ref[...]                               # (bn, d)
+        ct = ctab_ref[0]                             # (bkn, d) candidate slab
+        cross = jax.lax.dot_general(x, ct, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        dist = jnp.maximum(
+            xsq[...][:, None] - 2.0 * cross + csq_ref[0][None, :], 0.0)
+        cidx = cidx_ref[0]                           # (bkn,) int32
+        loc = jnp.argmin(dist, axis=1)               # first-min tie-break
+        hit = jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1) \
+            == loc[:, None]
+        d1 = jnp.min(dist, axis=1)
+        d2 = jnp.min(jnp.where(hit, jnp.inf, dist), axis=1)
+        a_t = jnp.sum(jnp.where(hit, cidx[None, :], 0), axis=1)
+        # merge (d1, d2, a_t) into the running (best_d1, best_d2, best_a);
+        # strict < keeps the earlier tile on ties, matching a flat argmin.
+        better = d1 < best_d1[...]
+        best_d2[...] = jnp.minimum(jnp.maximum(best_d1[...], d1),
+                                   jnp.minimum(best_d2[...], d2))
+        best_a[...] = jnp.where(better, a_t, best_a[...])
+        best_d1[...] = jnp.minimum(best_d1[...], d1)
+
+    @pl.when(j == nt - 1)
+    def _flush():
+        a_ref[...] = jnp.where(skipped, prev_a_ref[...], best_a[...])
+        d1_ref[...] = jnp.where(skipped, prev_d1_ref[...], best_d1[...])
+        d2_ref[...] = jnp.where(skipped, prev_d2_ref[...], best_d2[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bkn", "interpret"))
+def candidate_assign_tiled(x: jax.Array, ctab: jax.Array, csqtab: jax.Array,
+                           cidx: jax.Array, rowsel: jax.Array,
+                           skip: jax.Array, prev_a: jax.Array,
+                           prev_d1: jax.Array, prev_d2: jax.Array,
+                           *, bn: int = 256, bkn: int = 8,
+                           interpret: bool = False):
+    """Tiled k_n-restricted assignment over a candidate-center table.
+
+    x: (n, d) points, grouped so block b (rows b*bn:(b+1)*bn) shares the
+       candidate list ``cidx[rowsel[b]]``.
+    ctab: (T, kn_pad, d) candidate centers; csqtab: (T, kn_pad) their
+       squared norms (PAD_SQDIST for -1 padding); cidx: (T, kn_pad) int32.
+    rowsel: (nb,) int32 block -> table row.  skip: (nb,) int32.
+    prev_a/prev_d1/prev_d2: fallbacks for skipped blocks, (n,).
+    Returns (assignment int32 (n,), best sqdist f32 (n,),
+             second-best sqdist f32 (n,)).
+    """
+    n, d = x.shape
+    assert n % bn == 0
+    t, knp = cidx.shape
+    assert knp % bkn == 0 and ctab.shape == (t, knp, d)
+    nb = n // bn
+    assert rowsel.shape == (nb,) and skip.shape == (nb,)
+
+    grid = (nb, knp // bkn)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j, rs, sk: (i, 0)),
+            # the gather: candidate slab j of table row rs[i], one DMA of
+            # bkn contiguous candidate centers (zero row when skipped)
+            pl.BlockSpec((1, bkn, d),
+                         lambda i, j, rs, sk: (rs[i] * (1 - sk[i]), j, 0)),
+            pl.BlockSpec((1, bkn),
+                         lambda i, j, rs, sk: (rs[i] * (1 - sk[i]), j)),
+            pl.BlockSpec((1, bkn),
+                         lambda i, j, rs, sk: (rs[i] * (1 - sk[i]), j)),
+            pl.BlockSpec((bn,), lambda i, j, rs, sk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, rs, sk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, rs, sk: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j, rs, sk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, rs, sk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, rs, sk: (i,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn,), jnp.float32),
+            pltpu.VMEM((bn,), jnp.float32),
+            pltpu.VMEM((bn,), jnp.int32),
+            pltpu.VMEM((bn,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _tiled_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rowsel, skip, x, ctab, csqtab, cidx, prev_a, prev_d1, prev_d2)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bkn", "interpret"))
+def candidate_assign(x: jax.Array, c: jax.Array, cand: jax.Array,
+                     skip: jax.Array, prev_a: jax.Array, prev_d1: jax.Array,
+                     prev_d2: jax.Array, *, bn: int = 256, bkn: int = 8,
+                     interpret: bool = False):
+    """Tiled k_n-restricted assignment with per-block candidate lists.
+
+    Convenience entry: builds the candidate-center table from ``cand``
+    (nb, kn) with one table row per block and calls the tiled kernel.
+    The grouped k²-means path uses ``candidate_assign_tiled`` directly
+    with the more compact per-cluster table (ops.k2_assign_grouped).
+    Returns (assignment (n,), best sqdist (n,), second-best sqdist (n,)).
+    """
+    nb = cand.shape[0]
+    cidx = pad_candidates(cand.astype(jnp.int32), bkn)
+    ctab, csqtab = candidate_tables(c, cidx)
+    rowsel = jnp.arange(nb, dtype=jnp.int32)
+    return candidate_assign_tiled(x, ctab, csqtab, cidx, rowsel, skip,
+                                  prev_a, prev_d1, prev_d2, bn=bn, bkn=bkn,
+                                  interpret=interpret)
+
+
+def tiled_grid_steps(n: int, kn: int, bn: int, bkn: int) -> int:
+    """Grid steps the tiled kernel issues (vs rowwise_grid_steps)."""
+    return (n // bn) * (-(-kn // bkn))
+
+
+def rowwise_grid_steps(n: int, kn: int, bn: int) -> int:
+    return (n // bn) * kn
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-row kernel: one candidate center per grid step. Kept as the
+# baseline for benchmarks/assign_bench.py; prefer candidate_assign.
+# ---------------------------------------------------------------------------
+
+def _rowwise_kernel(cand_ref, skip_ref,              # scalar prefetch (SMEM)
+                    x_ref, c_ref, csq_ref, prev_a_ref, prev_d_ref,
+                    a_ref, d_ref,
+                    best_d, best_a, xsq):
     i, j = pl.program_id(0), pl.program_id(1)
     kn = pl.num_programs(1)
     skipped = skip_ref[i] != 0
@@ -57,17 +251,13 @@ def _kernel(cand_ref, skip_ref,                      # scalar prefetch (SMEM)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
-def candidate_assign(x: jax.Array, c: jax.Array, cand: jax.Array,
-                     skip: jax.Array, prev_a: jax.Array, prev_d: jax.Array,
-                     *, bn: int = 256, interpret: bool = False):
-    """k_n-restricted assignment.
-
-    x: (n, d) points, grouped so block b (rows b*bn:(b+1)*bn) shares
-       candidate list cand[b].
-    c: (k, d) centers.  cand: (n//bn, kn) int32.  skip: (n//bn,) int32.
-    prev_a/prev_d: fallbacks for skipped blocks, (n,).
-    Returns (assignment int32 (n,), sqdist f32 (n,)).
-    """
+def candidate_assign_rowwise(x: jax.Array, c: jax.Array, cand: jax.Array,
+                             skip: jax.Array, prev_a: jax.Array,
+                             prev_d: jax.Array, *, bn: int = 256,
+                             interpret: bool = False):
+    """Per-row k_n-restricted assignment (grid (nb, kn), one DMA per
+    candidate). Same contract as ``candidate_assign`` minus the
+    second-best distance output."""
     n, d = x.shape
     assert n % bn == 0
     nb, kn = cand.shape
@@ -80,7 +270,6 @@ def candidate_assign(x: jax.Array, c: jax.Array, cand: jax.Array,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn, d), lambda i, j, cand, skip: (i, 0)),
-            # the gather: candidate row j of block i, DMA'd by index_map
             pl.BlockSpec((1, d),
                          lambda i, j, cand, skip: (cand[i, j] * (1 - skip[i]), 0)),
             pl.BlockSpec((1, 1),
@@ -99,7 +288,7 @@ def candidate_assign(x: jax.Array, c: jax.Array, cand: jax.Array,
         ],
     )
     return pl.pallas_call(
-        _kernel,
+        _rowwise_kernel,
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n,), jnp.int32),

@@ -11,7 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .candidate_assign import candidate_assign
+from .candidate_assign import (candidate_assign, candidate_assign_rowwise,
+                               candidate_assign_tiled, candidate_tables,
+                               pad_candidates, rowwise_grid_steps,
+                               tiled_grid_steps)
 from .cluster_attend import (cluster_attend, cluster_major_pack,
                              select_clusters)
 from .center_knn import center_knn, center_sqdist
@@ -32,6 +35,17 @@ def choose_blocks(d: int, k: int):
             if bn * d + bk * d + 2 * bn * bk <= _VMEM_BUDGET:
                 return bn, bk
     return 8, 8
+
+
+def choose_group_bn(n: int, k: int, bn_max: int = 128) -> int:
+    """Point-block size for the cluster-grouped layout: the largest power of
+    two <= the expected cluster size n/k (clamped to [8, bn_max]), so the
+    per-cluster padding overhead stays bounded even at small n/k."""
+    per = max(8, n // max(k, 1))
+    bn = 8
+    while bn * 2 <= min(per, bn_max):
+        bn *= 2
+    return bn
 
 
 def _pad_rows(x, mult):
@@ -55,11 +69,44 @@ def assign_nearest_pallas(x: jax.Array, c: jax.Array,
     return a[:n0], dist[:n0]
 
 
+def grouped_capacity(n: int, k: int, bn: int) -> int:
+    """Static block capacity of the grouped layout: every cluster adds at
+    most one partial block on top of the ceil(n/bn) data blocks."""
+    return -(-n // bn) + k
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn"))
+def group_by_cluster_device(a: jax.Array, k: int, bn: int):
+    """Device-side layout pass: sort point ids by cluster, pad every cluster
+    to a bn multiple. Shapes are static (capacity = grouped_capacity(n,k,bn)
+    blocks) so this jits and fuses into the k²-means device step — no host
+    roundtrip between iterations. Returns (perm (cap*bn,) int32 with -1
+    padding, block2cluster (cap,) int32; trailing capacity blocks beyond the
+    data are all-padding with block2cluster clamped into range).
+    """
+    n = a.shape[0]
+    nbcap = grouped_capacity(n, k, bn)
+    order = jnp.argsort(a, stable=True).astype(jnp.int32)
+    sizes = jnp.bincount(a, length=k)                       # (k,)
+    sizes_pad = ((sizes + bn - 1) // bn) * bn               # empty -> 0 blocks
+    starts_data = jnp.cumsum(sizes) - sizes                 # exclusive cumsum
+    starts_pad = jnp.cumsum(sizes_pad) - sizes_pad
+    ci = a[order]                                           # sorted cluster id
+    rank = jnp.arange(n, dtype=jnp.int32) - starts_data[ci].astype(jnp.int32)
+    dest = starts_pad[ci].astype(jnp.int32) + rank
+    perm = jnp.full((nbcap * bn,), -1, jnp.int32).at[dest].set(order)
+    bounds = jnp.cumsum(sizes_pad)                          # inclusive
+    block_starts = jnp.arange(nbcap, dtype=bounds.dtype) * bn
+    b2c = jnp.searchsorted(bounds, block_starts, side="right")
+    b2c = jnp.minimum(b2c, k - 1).astype(jnp.int32)
+    return perm, b2c
+
+
 def group_by_cluster(a: np.ndarray, k: int, bn: int):
-    """Host-side layout pass: sort point ids by cluster, pad every cluster to
-    a bn multiple. Returns (perm (n_pad,) int32 with -1 padding,
-    block2cluster (nb,) int32). Runs on host between device steps (its cost
-    is the paper's O(n) bookkeeping, not a distance computation)."""
+    """Host-side layout pass (reference implementation of
+    group_by_cluster_device, without the trailing all-padding capacity
+    blocks). Returns (perm (n_pad,) int32 with -1 padding,
+    block2cluster (nb,) int32)."""
     order = np.argsort(a, kind="stable")
     sizes = np.bincount(a, minlength=k)
     perm_blocks, block2cluster = [], []
@@ -78,32 +125,56 @@ def group_by_cluster(a: np.ndarray, k: int, bn: int):
     return perm, np.asarray(block2cluster, np.int32)
 
 
+def scatter_from_grouped(perm: jax.Array, values: jax.Array,
+                         prev: jax.Array) -> jax.Array:
+    """Scatter grouped-layout ``values`` (one per perm row) back to original
+    point order on top of ``prev``. Padding rows (perm == -1) are routed to
+    an out-of-range index and dropped — a duplicate ``.at[0].set`` from
+    padding rows would race with point 0's real row."""
+    n = prev.shape[0]
+    idx = jnp.where(perm >= 0, perm, n)
+    return prev.at[idx].set(values, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bkn", "interpret"))
 def k2_assign_grouped(x: jax.Array, c: jax.Array, neighbors: jax.Array,
                       perm: jax.Array, block2cluster: jax.Array,
-                      skip: jax.Array, prev_a: jax.Array, prev_d: jax.Array,
-                      bn: int = 128, interpret: bool | None = None):
-    """Full k²-means assignment through the Pallas kernel.
+                      skip: jax.Array, prev_a: jax.Array, prev_d1: jax.Array,
+                      prev_d2: jax.Array, *, bn: int = 128, bkn: int = 8,
+                      interpret: bool | None = None):
+    """Full k²-means assignment through the tiled Pallas kernel.
 
-    perm/block2cluster from group_by_cluster; -1 entries of perm are padding
-    (they replicate point 0 but are masked out of the scatter-back).
-    Returns updated (a, sqdist) in original point order.
+    neighbors: (k, kn) per-cluster candidate lists; the candidate-center
+    table is built per *cluster* (k rows), and the scalar-prefetched
+    block2cluster array routes each point block to its cluster's slabs.
+    perm/block2cluster from group_by_cluster_device; -1 entries of perm are
+    padding (they replicate point 0 but are dropped from the scatter-back).
+    prev_d1/prev_d2 are squared distances (best / second-best candidate).
+    Returns updated (a, sqdist1, sqdist2) in original point order; entries
+    of skipped blocks keep their prev values exactly.
     """
     interpret = (not _ON_TPU) if interpret is None else interpret
-    n = x.shape[0]
+    cidx = pad_candidates(neighbors.astype(jnp.int32), bkn)
+    ctab, csqtab = candidate_tables(c, cidx)
     safe_perm = jnp.maximum(perm, 0)
     xg = x[safe_perm]
     pa = prev_a[safe_perm]
-    pd = prev_d[safe_perm]
-    cand = neighbors[block2cluster]                  # (nb, kn)
-    a_g, d_g = candidate_assign(xg, c, cand, skip, pa, pd, bn=bn,
-                                interpret=interpret)
-    valid = perm >= 0
-    a_new = prev_a.at[safe_perm].set(jnp.where(valid, a_g, pa))
-    d_new = prev_d.at[safe_perm].set(jnp.where(valid, d_g, pd))
-    return a_new, d_new
+    pd1 = prev_d1[safe_perm]
+    pd2 = prev_d2[safe_perm]
+    a_g, d1_g, d2_g = candidate_assign_tiled(
+        xg, ctab, csqtab, cidx, block2cluster, skip, pa, pd1, pd2,
+        bn=bn, bkn=bkn, interpret=interpret)
+    a_new = scatter_from_grouped(perm, a_g, prev_a)
+    d1_new = scatter_from_grouped(perm, d1_g, prev_d1)
+    d2_new = scatter_from_grouped(perm, d2_g, prev_d2)
+    return a_new, d1_new, d2_new
 
 
-__all__ = ["assign_nearest_pallas", "candidate_assign", "center_knn",
-           "cluster_attend", "cluster_major_pack", "select_clusters",
-           "center_sqdist", "choose_blocks", "distance_argmin",
-           "group_by_cluster", "k2_assign_grouped"]
+__all__ = ["assign_nearest_pallas", "candidate_assign",
+           "candidate_assign_rowwise", "candidate_assign_tiled",
+           "candidate_tables", "center_knn", "center_sqdist",
+           "choose_blocks", "choose_group_bn", "cluster_attend",
+           "cluster_major_pack", "distance_argmin", "group_by_cluster",
+           "group_by_cluster_device", "grouped_capacity",
+           "k2_assign_grouped", "pad_candidates", "rowwise_grid_steps",
+           "scatter_from_grouped", "select_clusters", "tiled_grid_steps"]

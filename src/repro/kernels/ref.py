@@ -34,6 +34,35 @@ def candidate_assign_ref(x, c, cand, skip, prev_a, prev_d, bn: int):
             jnp.where(skip_pt, prev_d, dmin))
 
 
+def candidate_assign_tiled_ref(x, c, cand, skip, prev_a, prev_d1, prev_d2,
+                               bn: int):
+    """Oracle for the tiled kernel: like candidate_assign_ref but also
+    returns the second-best squared candidate distance (the Hamerly lower
+    bound input)."""
+    n, d = x.shape
+    nb, kn = cand.shape
+    xb = x.reshape(nb, bn, d)
+    cc = c[cand]                                     # (nb, kn, d)
+    cross = jnp.einsum("bnd,bkd->bnk", xb, cc)
+    sq = jnp.maximum(
+        jnp.sum(xb * xb, -1)[..., None] - 2.0 * cross
+        + jnp.sum(cc * cc, -1)[:, None, :], 0.0)     # (nb, bn, kn)
+    loc = jnp.argmin(sq, axis=-1)
+    a = jnp.take_along_axis(cand[:, None, :].repeat(bn, 1), loc[..., None],
+                            axis=-1)[..., 0].reshape(-1).astype(jnp.int32)
+    if kn >= 2:
+        top2_neg, _ = jax.lax.top_k(-sq, 2)
+        d1 = (-top2_neg[..., 0]).reshape(-1)
+        d2 = (-top2_neg[..., 1]).reshape(-1)
+    else:
+        d1 = jnp.min(sq, axis=-1).reshape(-1)
+        d2 = jnp.full_like(d1, jnp.inf)
+    skip_pt = jnp.repeat(skip.astype(bool), bn)
+    return (jnp.where(skip_pt, prev_a, a).astype(jnp.int32),
+            jnp.where(skip_pt, prev_d1, d1),
+            jnp.where(skip_pt, prev_d2, d2))
+
+
 def center_sqdist_ref(c):
     sq = jnp.sum(c * c, -1)
     return jnp.maximum(sq[:, None] - 2.0 * (c @ c.T) + sq[None, :], 0.0)

@@ -1,5 +1,7 @@
 """Property-based tests (hypothesis) for the paper's invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp

@@ -5,11 +5,15 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.candidate_assign import candidate_assign
+from repro.kernels.candidate_assign import (candidate_assign,
+                                            candidate_assign_rowwise,
+                                            rowwise_grid_steps,
+                                            tiled_grid_steps)
 from repro.kernels.center_knn import center_knn, center_sqdist
 from repro.kernels.distance_argmin import distance_argmin
 from repro.kernels.ops import (assign_nearest_pallas, choose_blocks,
-                               group_by_cluster, k2_assign_grouped)
+                               group_by_cluster, group_by_cluster_device,
+                               k2_assign_grouped)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -39,7 +43,7 @@ def test_distance_argmin_sweep(n, k, d, bn, bk, dtype):
     (512, 128, 16, 16, 128),
     (128, 32, 200, 4, 32),
 ])
-def test_candidate_assign_sweep(n, k, d, kn, bn):
+def test_candidate_assign_rowwise_sweep(n, k, d, kn, bn):
     ks = jax.random.split(jax.random.PRNGKey(n * k), 4)
     x = jax.random.normal(ks[0], (n, d))
     c = jax.random.normal(ks[1], (k, d))
@@ -47,12 +51,42 @@ def test_candidate_assign_sweep(n, k, d, kn, bn):
     skip = (jax.random.uniform(ks[3], (n // bn,)) < 0.3).astype(jnp.int32)
     prev_a = jnp.zeros((n,), jnp.int32)
     prev_d = jnp.full((n,), 7.0)
-    a, dist = candidate_assign(x, c, cand, skip, prev_a, prev_d, bn=bn,
-                               interpret=True)
+    a, dist = candidate_assign_rowwise(x, c, cand, skip, prev_a, prev_d,
+                                       bn=bn, interpret=True)
     ar, dr = ref.candidate_assign_ref(x, c, cand, skip, prev_a, prev_d, bn)
     assert (np.asarray(a) == np.asarray(ar)).all()
     np.testing.assert_allclose(np.asarray(dist), np.asarray(dr),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,k,d,kn,bn,bkn", [
+    (256, 64, 48, 8, 64, 8),
+    (512, 128, 16, 16, 128, 8),
+    (128, 32, 200, 4, 32, 8),     # kn < bkn: a single padded tile
+    (256, 64, 32, 12, 64, 8),     # kn not a bkn multiple: -1 padding
+    (256, 64, 32, 16, 64, 16),    # one full-width tile
+])
+def test_candidate_assign_tiled_sweep(n, k, d, kn, bn, bkn):
+    ks = jax.random.split(jax.random.PRNGKey(n * k + kn), 4)
+    x = jax.random.normal(ks[0], (n, d))
+    c = jax.random.normal(ks[1], (k, d))
+    cand = jax.random.randint(ks[2], (n // bn, kn), 0, k, jnp.int32)
+    skip = (jax.random.uniform(ks[3], (n // bn,)) < 0.3).astype(jnp.int32)
+    prev_a = jnp.zeros((n,), jnp.int32)
+    prev_d1 = jnp.full((n,), 7.0)
+    prev_d2 = jnp.full((n,), 9.0)
+    a, d1, d2 = candidate_assign(x, c, cand, skip, prev_a, prev_d1, prev_d2,
+                                 bn=bn, bkn=bkn, interpret=True)
+    ar, d1r, d2r = ref.candidate_assign_tiled_ref(
+        x, c, cand, skip, prev_a, prev_d1, prev_d2, bn)
+    assert (np.asarray(a) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d1r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2r),
+                               rtol=1e-4, atol=1e-4)
+    # the tiled grid is ceil(kn/bkn)/kn the size of the rowwise grid
+    assert tiled_grid_steps(n, kn, bn, bkn) == (n // bn) * (-(-kn // bkn))
+    assert tiled_grid_steps(n, kn, bn, bkn) <= rowwise_grid_steps(n, kn, bn)
 
 
 @pytest.mark.parametrize("k,d", [(128, 32), (256, 64), (128, 300)])
@@ -70,23 +104,115 @@ def test_center_knn_self_inclusive():
     assert (np.asarray(nb[:, 0]) == np.arange(128)).all()
 
 
-def test_grouped_k2_assign_end_to_end():
-    """kernel pipeline == unrestricted candidate oracle, incl. scatter-back."""
-    ks = jax.random.split(KEY, 3)
-    x = jax.random.normal(ks[0], (500, 32))
-    c = jax.random.normal(ks[1], (64, 32))
+def _grouped_setup(n, k, d, kn, bn, key=KEY, assignment=None):
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (n, d))
+    c = jax.random.normal(ks[1], (k, d))
     a0, d0 = ref.distance_argmin_ref(x, c)
-    nb = center_knn(c, 8, interpret=True)
-    perm, b2c = group_by_cluster(np.asarray(a0), 64, bn=32)
-    skip = jnp.zeros((len(b2c),), jnp.int32)
-    a1, d1 = k2_assign_grouped(x, c, nb, jnp.asarray(perm),
-                               jnp.asarray(b2c), skip, a0, d0, bn=32,
-                               interpret=True)
+    if assignment is not None:
+        a0 = assignment
+    nbrs = center_knn(c, kn, interpret=True)
+    perm, b2c = group_by_cluster_device(a0, k, bn)
+    return x, c, a0, d0, nbrs, perm, b2c
+
+
+def _restricted_ref(x, c, nbrs, a0):
+    """Bound-free oracle: nearest among each point's candidate list."""
     from repro.core.distance import gather_candidate_sqdist
-    cand_pt = nb[a0]
+    cand_pt = nbrs[a0]
     sq = gather_candidate_sqdist(x, c, cand_pt)
-    a_ref = jnp.take_along_axis(cand_pt, jnp.argmin(sq, 1)[:, None], 1)[:, 0]
+    loc = jnp.argmin(sq, 1)
+    a = jnp.take_along_axis(cand_pt, loc[:, None], 1)[:, 0]
+    return a, jnp.min(sq, 1)
+
+
+def test_grouped_k2_assign_end_to_end():
+    """kernel pipeline == unrestricted candidate oracle, incl. device
+    grouping and scatter-back (n=500 is ragged: not a bn multiple)."""
+    x, c, a0, d0, nbrs, perm, b2c = _grouped_setup(500, 64, 32, 8, bn=32)
+    skip = jnp.zeros((perm.shape[0] // 32,), jnp.int32)
+    big = jnp.full_like(d0, 1e30)
+    a1, d1, _ = k2_assign_grouped(x, c, nbrs, perm, b2c, skip, a0, d0, big,
+                                  bn=32, bkn=8, interpret=True)
+    a_ref, d_ref = _restricted_ref(x, c, nbrs, a0)
     assert (np.asarray(a1) == np.asarray(a_ref)).all()
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_k2_assign_full_kn_matches_assign_nearest():
+    """With kn=k every candidate list is complete, so the grouped kernel
+    must reproduce the unrestricted nearest-center assignment exactly."""
+    x, c, a0, d0, nbrs, perm, b2c = _grouped_setup(300, 24, 16, 24, bn=16)
+    skip = jnp.zeros((perm.shape[0] // 16,), jnp.int32)
+    big = jnp.full_like(d0, 1e30)
+    a1, d1, _ = k2_assign_grouped(x, c, nbrs, perm, b2c, skip, a0, d0, big,
+                                  bn=16, bkn=8, interpret=True)
+    ar, dr = ref.distance_argmin_ref(x, c)
+    assert (np.asarray(a1) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(dr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_k2_assign_skip_patterns():
+    """Skipped blocks keep prev values exactly; computed blocks are fresh."""
+    bn = 32
+    x, c, a0, d0, nbrs, perm, b2c = _grouped_setup(512, 32, 24, 6, bn=bn)
+    nb = perm.shape[0] // bn
+    prev_a = jnp.full_like(a0, 7)
+    prev_d1 = jnp.full_like(d0, 3.25)
+    prev_d2 = jnp.full_like(d0, 4.5)
+    a_ref, _ = _restricted_ref(x, c, nbrs, a0)
+    for seed, frac in ((0, 0.0), (1, 0.5), (2, 1.0)):
+        skip = (jax.random.uniform(jax.random.PRNGKey(seed), (nb,))
+                < frac).astype(jnp.int32)
+        a1, d1, d2 = k2_assign_grouped(x, c, nbrs, perm, b2c, skip, prev_a,
+                                       prev_d1, prev_d2, bn=bn, bkn=8,
+                                       interpret=True)
+        n = x.shape[0]
+        skip_pt = jnp.zeros((n + 1,), bool).at[
+            jnp.where(perm >= 0, perm, n)].set(
+                jnp.repeat(skip.astype(bool), bn))[:n]
+        assert (np.asarray(a1)[np.asarray(skip_pt)] == 7).all()
+        assert (np.asarray(d1)[np.asarray(skip_pt)] == 3.25).all()
+        assert (np.asarray(d2)[np.asarray(skip_pt)] == 4.5).all()
+        keep = ~np.asarray(skip_pt)
+        assert (np.asarray(a1)[keep] == np.asarray(a_ref)[keep]).all()
+
+
+def test_grouped_k2_assign_empty_clusters():
+    """Clusters with no members get zero blocks; the layout and kernel must
+    still cover every point exactly once."""
+    n, k, bn = 256, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    # assignment only uses clusters 0,3,9 — the rest are empty
+    a_forced = jnp.asarray(
+        np.random.RandomState(0).choice([0, 3, 9], size=n), jnp.int32)
+    x, c, _, d0, nbrs, perm, b2c = _grouped_setup(
+        n, k, 8, 5, bn=bn, key=ks[0], assignment=a_forced)
+    pv = np.asarray(perm)
+    assert sorted(pv[pv >= 0].tolist()) == list(range(n))
+    # every data row landed in a block of its own cluster
+    rows = np.nonzero(pv >= 0)[0]
+    assert (np.asarray(b2c)[rows // bn]
+            == np.asarray(a_forced)[pv[rows]]).all()
+    skip = jnp.zeros((perm.shape[0] // bn,), jnp.int32)
+    big = jnp.full_like(d0, 1e30)
+    a1, d1, _ = k2_assign_grouped(x, c, nbrs, perm, b2c, skip, a_forced,
+                                  d0, big, bn=bn, bkn=8, interpret=True)
+    a_ref, _ = _restricted_ref(x, c, nbrs, a_forced)
+    assert (np.asarray(a1) == np.asarray(a_ref)).all()
+
+
+def test_group_by_cluster_device_matches_host():
+    a = jax.random.randint(jax.random.PRNGKey(3), (777,), 0, 41, jnp.int32)
+    perm_h, b2c_h = group_by_cluster(np.asarray(a), 41, bn=16)
+    perm_d, b2c_d = group_by_cluster_device(a, 41, bn=16)
+    nbh = len(b2c_h)
+    assert (np.asarray(perm_d)[:nbh * 16] == perm_h).all()
+    assert (np.asarray(b2c_d)[:nbh] == b2c_h).all()
+    # trailing capacity blocks are all padding
+    assert (np.asarray(perm_d)[nbh * 16:] == -1).all()
 
 
 def test_assign_nearest_pallas_padding():
