@@ -41,13 +41,17 @@ def main() -> None:
                     help="machine-readable per-section report path")
     args, _ = ap.parse_known_args()
 
-    from . import complexity, convergence_curves, roofline, table4_init, \
-        table5_speedup
+    from . import complexity, convergence_curves, init_bench, roofline, \
+        table4_init, table5_speedup
 
     sections = [
         ("table2_complexity",
          "Table 2: per-iteration complexity (counted ops vs analytic)",
          lambda: complexity.run(max_iters=12 if args.fast else 25)),
+        ("init",
+         "Init: host-loop GDI vs device GDI vs k-means++ "
+         "(-> BENCH_init.json)",
+         lambda: init_bench.run(fast=args.fast)),
         ("table4_init",
          "Table 4/7: initialization comparison (random / ++ / GDI)",
          lambda: table4_init.run(max_iters=20 if args.fast else 40)),

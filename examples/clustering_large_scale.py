@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (OpCounter, assign_nearest, fit_k2means, fit_lloyd,
-                        gdi_init, kmeanspp_init)
+                        gdi_device_init, gdi_init, kmeanspp_init)
 from repro.data import gmm_blobs
 from repro.kernels.ops import assign_nearest_pallas
 from repro.kernels import ref
@@ -25,8 +25,13 @@ def main():
     c = OpCounter()
     t0 = time.time()
     centers, assignment = gdi_init(x, k, key, counter=c)
-    print(f"GDI: {k} centers in {time.time() - t0:.1f}s, "
+    print(f"GDI (host loop): {k} centers in {time.time() - t0:.1f}s, "
           f"{c.total:.0f} counted ops (k-means++ would be ~{20_000 * k})")
+    c = OpCounter()
+    t0 = time.time()
+    centers, assignment = gdi_device_init(x, k, key, counter=c)
+    print(f"GDI (device frontier rounds, DESIGN.md §4): {k} centers in "
+          f"{time.time() - t0:.1f}s, {c.total:.0f} counted ops")
 
     # --- 2. k²-means refinement across k_n -------------------------------
     ref_energy = None

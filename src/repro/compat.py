@@ -1,0 +1,14 @@
+"""Version-compat shims for jax APIs whose import path moved.
+
+``shard_map`` was promoted from ``jax.experimental.shard_map`` to the
+top-level ``jax`` namespace (jax >= 0.5). Import it from here so the repo
+runs on both sides of the move.
+"""
+from __future__ import annotations
+
+try:                                      # jax >= 0.5
+    from jax import shard_map
+except ImportError:                       # jax < 0.5
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["shard_map"]

@@ -3,7 +3,8 @@ from .api import fit, initialize, METHODS, INITS
 from .distance import (pairwise_sqdist, chunked_argmin_sqdist,
                        gather_candidate_sqdist, clustering_energy, sqnorm)
 from .elkan import fit_elkan
-from .gdi import gdi_init, gdi_parallel_init, projective_split
+from .gdi import (gdi_device_init, gdi_init, gdi_parallel_init,
+                  gdi_round_step, projective_split, segmented_split_sweep)
 from .k2means import fit_k2means, k2means_step
 from .kmeanspp import kmeanspp_init, random_init, assign_nearest
 from .lloyd import KMeansResult, fit_lloyd, lloyd_step, update_centers

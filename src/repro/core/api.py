@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from .akm import fit_akm
 from .elkan import fit_elkan
-from .gdi import gdi_init, gdi_parallel_init
+from .gdi import gdi_device_init, gdi_init, gdi_parallel_init
 from .k2means import fit_k2means
 from .kmeanspp import assign_nearest, kmeanspp_init, random_init
 from .lloyd import KMeansResult, fit_lloyd
@@ -20,18 +20,32 @@ from .minibatch import fit_minibatch
 from .opcount import OpCounter
 
 METHODS = ("lloyd", "elkan", "k2means", "minibatch", "akm")
-INITS = ("random", "kmeanspp", "gdi", "gdi_parallel")
+INITS = ("random", "kmeanspp", "gdi", "gdi_host", "gdi_device",
+         "gdi_parallel")
 
 
 def initialize(x: jax.Array, k: int, init: str, key: jax.Array,
-               counter: OpCounter):
-    """Returns (centers, assignment_or_None)."""
+               counter: OpCounter, backend: str | None = None):
+    """Returns (centers, assignment_or_None).
+
+    ``init="gdi"`` resolves to the frontier-batched device GDI when the
+    fit runs on the Pallas fast path (``backend="pallas"``) so the whole
+    program — init through convergence — stays on device, and to the
+    host-loop reference otherwise. ``"gdi_host"`` / ``"gdi_device"`` pin
+    one explicitly.
+    """
     if init == "random":
         return random_init(x, k, key, counter), None
     if init == "kmeanspp":
         return kmeanspp_init(x, k, key, counter), None
     if init == "gdi":
+        if backend == "pallas":
+            return gdi_device_init(x, k, key, counter=counter)
         return gdi_init(x, k, key, counter=counter)
+    if init == "gdi_host":
+        return gdi_init(x, k, key, counter=counter)
+    if init == "gdi_device":
+        return gdi_device_init(x, k, key, counter=counter)
     if init == "gdi_parallel":
         return gdi_parallel_init(x, k, key, counter=counter)
     raise ValueError(f"unknown init {init!r}; expected one of {INITS}")
@@ -47,14 +61,20 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
     Extra keywords flow to the method's fit function — notably
     ``backend="pallas"`` selects the fused k²-means device step
     (kernels + DESIGN.md §3) and ``monitor_every=<m>`` defers its
-    energy/op-count host reads.
+    energy/op-count host reads. With ``backend="pallas"`` and the default
+    ``init="gdi"`` the initialization also runs device-resident (the
+    frontier round step, DESIGN.md §4), so init -> kNN graph -> grouped
+    assignment -> update chain as one device program with no host round
+    trips besides the per-round leaf count and the ``monitor_every``
+    telemetry reads.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     counter = counter or OpCounter()
     k_init, k_fit = jax.random.split(key)
     x = jnp.asarray(x, jnp.float32)
 
-    centers, assignment = initialize(x, k, init, k_init, counter)
+    centers, assignment = initialize(x, k, init, k_init, counter,
+                                     backend=kw.get("backend"))
 
     if method == "lloyd":
         return fit_lloyd(x, centers, max_iters=max_iters, counter=counter, **kw)

@@ -14,6 +14,11 @@ centers replicated. Per iteration:
 The same step function drives the multi-pod dry-run (lower/compile) and the
 CI-scale correctness test (4-device debug mesh), where it must match the
 single-device k²-means step bit-for-bit on the same data.
+
+Initialization (``fit_distributed_k2means(init="gdi")``) reuses the
+device-resident frontier round step (core.gdi, DESIGN.md §4): divisive
+init yields the seeding assignment for free, so the sharded
+full-assignment pass is skipped entirely.
 """
 from __future__ import annotations
 
@@ -22,8 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from ..compat import shard_map
 from .distance import pairwise_sqdist, sqnorm
 
 
@@ -150,24 +155,46 @@ def make_distributed_assign(mesh, k: int, *, data_axes=None,
 
 
 def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
-                            max_iters: int = 50, init_centers=None):
+                            max_iters: int = 50, init_centers=None,
+                            init: str = "random"):
     """Host-loop driver around the sharded step. x_global is placed
     sharded; centers replicated. Returns (centers, assignment, history).
     Trajectory-equivalent to the single-device fit_k2means from the same
-    init (seeded by assignment only, no update)."""
+    init (seeded by assignment only, no update).
+
+    init: "random" samples k points; "gdi" / "gdi_parallel" run the
+    frontier round step (core.gdi, DESIGN.md §4) on the replicated array
+    before sharding — the divisive init provides the seeding assignment
+    for free, so the full-assignment pass is skipped. Ignored when
+    ``init_centers`` is given.
+    """
     n, d = x_global.shape
     data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
     xsh = NamedSharding(mesh, P(data_axes, None))
     rep = NamedSharding(mesh, P())
     x = jax.device_put(x_global, xsh)
+    a0 = None
     if init_centers is None:
-        idx = jax.random.choice(key, n, shape=(k,), replace=False)
-        init_centers = x_global[idx]
+        if init in ("gdi", "gdi_parallel"):
+            from .gdi import gdi_device_init, gdi_parallel_init
+            fn = gdi_parallel_init if init == "gdi_parallel" \
+                else gdi_device_init
+            init_centers, a0 = fn(x_global, k, key)
+        elif init == "random":
+            idx = jax.random.choice(key, n, shape=(k,), replace=False)
+            init_centers = x_global[idx]
+        else:
+            raise ValueError(f"unknown init {init!r}")
     c = jax.device_put(init_centers, rep)
-    # assignment-only seeding, then restricted iterations
-    assign0 = jax.jit(make_distributed_assign(mesh, k))
+    # assignment seeding (GDI's comes free with its centers), then
+    # restricted iterations
     k2 = jax.jit(make_distributed_k2means_step(mesh, kn, k))
-    a = assign0(x, c)
+    if a0 is not None:
+        a = jax.device_put(a0.astype(jnp.int32),
+                           NamedSharding(mesh, P(data_axes)))
+    else:
+        assign0 = jax.jit(make_distributed_assign(mesh, k))
+        a = assign0(x, c)
     history = []
     prev = None
     for _ in range(max_iters):

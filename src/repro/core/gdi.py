@@ -1,15 +1,32 @@
 """Greedy Divisive Initialization (GDI) — the paper's Algorithm 2 + 3.
 
-TPU adaptation (see DESIGN.md §3): ProjectiveSplit runs over the *full*
-(n, d) array with a membership mask so every split reuses one fixed-shape
-XLA program. Lemma 1's incremental energy update becomes a vectorised
-cumulative-sum identity:
+Two executions of the same algorithm live here:
 
-    phi(prefix_l) = cumsum(||x||^2)_l - ||cumsum(x)_l||^2 / l
+``gdi_init`` (host loop, the parity/benchmark baseline)
+    One leaf at a time. ProjectiveSplit runs over the *full* (n, d) array
+    with a membership mask so every split reuses one fixed-shape XLA
+    program. Lemma 1's incremental energy update becomes a vectorised
+    cumulative-sum identity:
 
-which yields every candidate split energy of the scanned hyperplane in a
-single pass, exactly matching the paper's O(|X_j|) per-iteration cost in
-counted vector ops (members only are charged).
+        phi(prefix_l) = cumsum(||x||^2)_l - ||cumsum(x)_l||^2 / l
+
+    which yields every candidate split energy of the scanned hyperplane in
+    a single pass, exactly matching the paper's O(|X_j|) per-iteration
+    cost in counted vector ops (members only are charged). Structural
+    cost: k-1 sequential dispatches, each O(n (d + log n)) regardless of
+    leaf size, with two device->host syncs per split.
+
+``gdi_device_init`` (frontier-batched, the fast path — DESIGN.md §4)
+    One jitted *round step* splits every frontier leaf at once over the
+    cluster-grouped layout (kernels.ops.group_by_cluster_device): the
+    direction projection + Lemma-1 sweep run as a *segmented* sort/cumsum
+    (kernels/segmented_scan.py on TPU, the jax.ops.segment_* reference
+    off-TPU), split positions fall out of per-segment masked argmins, and
+    greedy leaf selection is a device-side energy argsort. Each round
+    costs O(n (d + log n)) *total* — independent of the frontier size —
+    and the host reads back a single scalar (the leaf count) per round,
+    so a k-way init takes ~log2 k round dispatches instead of k-1 split
+    dispatches.
 """
 from __future__ import annotations
 
@@ -19,6 +36,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ops import (choose_group_bn, group_by_cluster_device,
+                           grouped_capacity, segmented_scan)
 from .opcount import OpCounter
 
 _INF = jnp.inf
@@ -143,55 +162,359 @@ def gdi_init(x: jax.Array, k: int, key: jax.Array, *,
     return centers_arr, assignment
 
 
-def gdi_parallel_init(x: jax.Array, k: int, key: jax.Array, *,
-                      split_iters: int = 2,
-                      counter: OpCounter | None = None):
-    """Round-parallel divisive variant (paper footnote 2): every round splits
-    all current leaves at once — O(log2 k) rounds — the scalable flavour used
-    by the distributed clustering path. k must be a power of two; otherwise
-    we round up and keep the k highest-energy leaves.
+# ---------------------------------------------------------------------------
+# Device-resident frontier-batched GDI (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def _segment_argmax(g: jax.Array, a: jax.Array, k: int) -> jax.Array:
+    """Per-segment argmax of ``g`` over segments ``a``: (k,) row indices,
+    ``n`` for empty segments (earliest row wins ties)."""
+    n = g.shape[0]
+    m = jax.ops.segment_max(g, a, num_segments=k)
+    idx = jnp.where(g >= m[a], jnp.arange(n, dtype=jnp.int32), n)
+    return jnp.minimum(jax.ops.segment_min(idx, a, num_segments=k), n)
+
+
+def _grouped_layout(a: jax.Array, k: int, bn: int):
+    """Leaf-grouped row layout (reuses the k²-means grouping pass):
+    (row_seg (R,), valid (R,), perm (R,), block2seg (R/bn,))."""
+    perm, b2s = group_by_cluster_device(a, k, bn)
+    return jnp.repeat(b2s, bn), perm >= 0, perm, b2s
+
+
+def _hier_cumsum(v: jax.Array, bs: int = 2048) -> jax.Array:
+    """Inclusive cumsum along axis 0 as blockwise scans + block offsets —
+    markedly faster than a flat jnp.cumsum for long 2-D operands."""
+    r = v.shape[0]
+    pad = (-r) % bs
+    vp = jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1))
+    vb = vp.reshape((vp.shape[0] // bs, bs) + vp.shape[1:])
+    within = jnp.cumsum(vb, axis=1)
+    tot = within[:, -1]
+    off = jnp.cumsum(tot, axis=0) - tot
+    return (within + off[:, None]).reshape(vp.shape)[:r]
+
+
+def _segmented_sweep(x, x_sq, a, row_seg, valid, perm, b2s, dirs,
+                     tot_s, tot_q, tot_c, split_flag, *, k: int, bn: int,
+                     impl: str, interpret: bool):
+    """One Lemma-1 sweep over every flagged leaf at once.
+
+    Projects each point onto its leaf's direction, sorts rows within each
+    segment by projection (one stable two-key sort over the whole layout),
+    runs the segmented scan, and picks the min-energy split per segment
+    with a masked argmin. All O(R (d + log R)) regardless of how many
+    leaves are flagged. Returns (perm2, rmin, found, cnt_a, c_a, c_b,
+    phi_a, phi_b); rmin is the split row in the sorted layout (R when no
+    valid split), side A = rows <= rmin of the leaf's segment, perm2 the
+    sorted layout's row -> original point map.
+    """
+    n, d = x.shape
+    r = row_seg.shape[0]
+    proj_pt = jnp.sum(x * dirs[a], axis=-1)          # O(n d), not O(R d)
+    proj = jnp.where(valid, proj_pt[jnp.maximum(perm, 0)], _INF)
+    rows = jnp.arange(r, dtype=jnp.int32)
+    _, _, order2 = jax.lax.sort((row_seg, proj, rows), num_keys=2,
+                                is_stable=True)
+    perm2 = perm[order2]
+    safe2 = jnp.maximum(perm2, 0)
+    ws = (perm2 >= 0).astype(x.dtype)
+    xgs = x[safe2]                                   # the one (R, d) gather
+    if impl == "pallas":
+        csum, qsum, cnt = segmented_scan(xgs, ws, b2s, bn=bn,
+                                         interpret=interpret)
+    else:
+        # Device-resident segment_* formulation (kernels.ref oracle shape),
+        # with the exclusive segment offsets gathered at the block-aligned
+        # segment starts instead of re-reduced per row.
+        gx = _hier_cumsum(xgs * ws[:, None])
+        gq = jnp.cumsum(jnp.where(perm2 >= 0, x_sq[safe2], 0.0))
+        gc = jnp.cumsum(ws)
+        psz = (jnp.ceil(tot_c / bn) * bn).astype(jnp.int32)
+        starts = jnp.cumsum(psz) - psz               # (k,) padded row starts
+        prev_row = jnp.maximum(starts - 1, 0)
+        off_x = jnp.where((starts > 0)[:, None], gx[prev_row], 0.0)
+        off_q = jnp.where(starts > 0, gq[prev_row], 0.0)
+        off_c = jnp.where(starts > 0, gc[prev_row], 0.0)
+        csum = gx - off_x[row_seg]
+        qsum = gq - off_q[row_seg]
+        cnt = gc - off_c[row_seg]
+    rem = tot_c[row_seg] - cnt
+    phi_p = qsum - jnp.sum(csum * csum, axis=-1) / jnp.maximum(cnt, 1.0)
+    sfx = tot_s[row_seg] - csum
+    phi_s = (tot_q[row_seg] - qsum) \
+        - jnp.sum(sfx * sfx, axis=-1) / jnp.maximum(rem, 1.0)
+    ok = (ws > 0) & (cnt >= 1.0) & (rem >= 1.0) & split_flag[row_seg]
+    score = jnp.where(ok, phi_p + phi_s, _INF)
+    smin = jax.ops.segment_min(score, row_seg, num_segments=k)
+    hit = ok & (score <= smin[row_seg])
+    rmin = jnp.minimum(
+        jax.ops.segment_min(jnp.where(hit, rows, r), row_seg,
+                            num_segments=k), r)
+    found = rmin < r
+    rsafe = jnp.minimum(rmin, r - 1)
+    cnt_a = cnt[rsafe]
+    c_a = csum[rsafe] / jnp.maximum(cnt_a, 1.0)[:, None]
+    c_b = (tot_s - csum[rsafe]) \
+        / jnp.maximum(tot_c - cnt_a, 1.0)[:, None]
+    phi_a = jnp.maximum(phi_p[rsafe], 0.0)
+    phi_b = jnp.maximum(phi_s[rsafe], 0.0)
+    return perm2, rmin, found, cnt_a, c_a, c_b, phi_a, phi_b
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bn", "impl", "interpret"))
+def segmented_split_sweep(x: jax.Array, a: jax.Array, c_a: jax.Array,
+                          c_b: jax.Array, *, k: int, bn: int = 8,
+                          impl: str = "xla",
+                          interpret: bool | None = None):
+    """Standalone single sweep (the testable unit of the round step).
+
+    Splits every leaf of the assignment ``a`` with >= 2 members along its
+    (c_a - c_b) direction. Returns (found (k,), cnt_a (k,), c_a' (k, d),
+    c_b' (k, d), phi_a (k,), phi_b (k,)). interpret=None auto-selects
+    interpret mode off-TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = x.shape[0]
+    x_sq = jnp.sum(x * x, -1)
+    tot_s = jax.ops.segment_sum(x, a, num_segments=k)
+    tot_q = jax.ops.segment_sum(x_sq, a, num_segments=k)
+    tot_c = jax.ops.segment_sum(jnp.ones((n,), x.dtype), a, num_segments=k)
+    row_seg, valid, perm, b2s = _grouped_layout(a, k, bn)
+    out = _segmented_sweep(x, x_sq, a, row_seg, valid, perm, b2s, c_a - c_b,
+                           tot_s, tot_q, tot_c, tot_c >= 2.0,
+                           k=k, bn=bn, impl=impl, interpret=interpret)
+    return out[2], out[3], out[4], out[5], out[6], out[7]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bn", "split_iters", "impl",
+                                    "interpret", "frontier"))
+def gdi_round_step(x, a, centers, energies, sizes, nleaf, key, *, k: int,
+                   bn: int, split_iters: int = 2, impl: str = "xla",
+                   interpret: bool | None = None,
+                   frontier: float = 0.125):
+    """One frontier round: split the top-t leaves by energy all at once.
+
+    State: a (n,) leaf assignment, centers (k, d), energies (k,),
+    sizes (k,) int32, nleaf () int32 — all device-resident; nothing here
+    forces a host sync. t = min(#splittable, k - nleaf,
+    max(1, floor(frontier * min(nleaf, k - nleaf)))): leaves are re-ranked
+    by energy every round and only the top ``frontier`` fraction splits,
+    so low-energy leaves are left alone exactly as the sequential greedy
+    would (``frontier=1.0`` is blind doubling, the round-parallel
+    variant).
+    Side A of leaf j keeps id j; side B gets the next free slot. Returns
+    the updated state tuple. interpret=None auto-selects interpret mode
+    off-TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = x.shape
+    slot = jnp.arange(k, dtype=jnp.int32)
+    eligible = (slot < nleaf) & (sizes >= 2)
+    n_elig = jnp.sum(eligible.astype(jnp.int32))
+    t = jnp.minimum(n_elig, k - nleaf)
+    if frontier < 1.0:
+        # batches shrink with the remaining split budget k - L as well as
+        # grow with L: committing a large batch against a stale ranking
+        # is most costly when few splits remain
+        t = jnp.minimum(
+            t, jnp.maximum(1, (jnp.minimum(nleaf, k - nleaf)
+                               * jnp.float32(frontier)).astype(jnp.int32)))
+    order = jnp.argsort(jnp.where(eligible, -energies, _INF))
+    rank = jnp.zeros((k,), jnp.int32).at[order].set(slot)
+    split_flag = eligible & (rank < t)
+
+    x_sq = jnp.sum(x * x, axis=-1)
+    tot_s = jax.ops.segment_sum(x, a, num_segments=k)
+    tot_q = jax.ops.segment_sum(x_sq, a, num_segments=k)
+    tot_c = jax.ops.segment_sum(jnp.ones((n,), x.dtype), a, num_segments=k)
+
+    # Two uniform random members per leaf as the initial split direction
+    # (Algorithm 3 line 2), all leaves at once via per-segment argmax of
+    # uniform draws; the second draw excludes the first member.
+    k1, k2 = jax.random.split(key)
+    g1 = jax.random.uniform(k1, (n,))
+    g2 = jax.random.uniform(k2, (n,))
+    i_a = _segment_argmax(g1, a, k)
+    g2 = g2.at[jnp.where(i_a < n, i_a, n)].set(-1.0, mode="drop")
+    i_b = _segment_argmax(g2, a, k)
+    c_a = x[jnp.minimum(i_a, n - 1)]
+    c_b = x[jnp.minimum(i_b, n - 1)]
+
+    row_seg, valid, perm, b2s = _grouped_layout(a, k, bn)
+    for _ in range(split_iters):
+        perm2, rmin, found, cnt_a, c_a_new, c_b_new, phi_a, phi_b = \
+            _segmented_sweep(x, x_sq, a, row_seg, valid, perm, b2s,
+                             c_a - c_b, tot_s, tot_q, tot_c, split_flag,
+                             k=k, bn=bn, impl=impl, interpret=interpret)
+        upd = (split_flag & found)[:, None]
+        c_a = jnp.where(upd, c_a_new, c_a)
+        c_b = jnp.where(upd, c_b_new, c_b)
+
+    success = split_flag & found
+    # children take the next free slots in slot order (dense, so nleaf
+    # stays the exact count of live leaves even if a flagged leaf found
+    # no valid split)
+    child = nleaf + jnp.cumsum(success.astype(jnp.int32)) - 1
+    child_idx = jnp.where(success, child, k)
+
+    r = row_seg.shape[0]
+    in_b = (jnp.arange(r, dtype=jnp.int32) > rmin[row_seg]) \
+        & success[row_seg]
+    new_id = jnp.where(in_b, child[row_seg], row_seg).astype(jnp.int32)
+    a_new = a.at[jnp.where(perm2 >= 0, perm2, n)].set(new_id, mode="drop")
+
+    size_a = cnt_a.astype(jnp.int32)
+    centers = jnp.where(success[:, None], c_a, centers)
+    centers = centers.at[child_idx].set(
+        jnp.where(success[:, None], c_b, 0.0), mode="drop")
+    energies = jnp.where(success, phi_a, energies)
+    energies = energies.at[child_idx].set(
+        jnp.where(success, phi_b, 0.0), mode="drop")
+    sizes_new = jnp.where(success, size_a, sizes)
+    sizes_new = sizes_new.at[child_idx].set(
+        jnp.where(success, sizes - size_a, 0), mode="drop")
+    nleaf = nleaf + jnp.sum(success.astype(jnp.int32))
+    return a_new, centers, energies, sizes_new, nleaf
+
+
+def _device_state(x, k: int):
+    """Initial round-step state: one leaf holding everything."""
+    n, d = x.shape
+    mu = jnp.mean(x, axis=0)
+    centers = jnp.zeros((k, d), x.dtype).at[0].set(mu)
+    energies = jnp.zeros((k,), x.dtype).at[0].set(
+        jnp.sum(jnp.square(x - mu)))
+    sizes = jnp.zeros((k,), jnp.int32).at[0].set(n)
+    return (jnp.zeros((n,), jnp.int32), centers, energies, sizes,
+            jnp.asarray(1, jnp.int32))
+
+
+def _auto_impl(impl: str | None, interpret: bool | None):
+    on_tpu = jax.default_backend() == "tpu"
+    if impl is None:
+        impl = "pallas" if on_tpu else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown impl {impl!r}; expected 'pallas' or 'xla'")
+    if interpret is None:
+        interpret = not on_tpu
+    return impl, interpret
+
+
+def _charge_round(counter: OpCounter, r: int, n: int, d: int,
+                  split_iters: int) -> None:
+    """Paper-unit accounting of what one device round actually executes:
+    one grouping sort, the totals segment-sum, and split_iters x
+    (projection inner products + sweep sort + scan additions) over the
+    full R-row layout."""
+    counter.add_inner(split_iters * r)
+    counter.add_additions(split_iters * r + n)
+    for _ in range(split_iters + 1):
+        counter.add_sort(r, d)
+
+
+def gdi_device_init(x: jax.Array, k: int, key: jax.Array, *,
+                    split_iters: int = 2,
+                    counter: OpCounter | None = None,
+                    bn: int | None = None, impl: str | None = None,
+                    interpret: bool | None = None,
+                    frontier: float = 0.125):
+    """Frontier-batched greedy divisive initialization, device-resident.
+
+    Same algorithm as ``gdi_init`` (greedy: highest-energy leaves split
+    first) but batched: each round re-ranks the leaves by energy on
+    device and splits the top ``frontier`` fraction at once through
+    ``gdi_round_step``, so a k-way init is ~log_{1+frontier}(k) jitted
+    dispatches with one scalar host read each instead of k-1 splits with
+    two syncs each. impl: "pallas" routes the segmented scan through the
+    Pallas kernel, "xla" through the segment_* reference (the off-TPU
+    default — interpret-mode Pallas would serialize on the grid).
+    Returns (centers (k, d), assignment (n,)).
     """
     counter = counter or OpCounter()
     n, d = x.shape
-    rounds = math.ceil(math.log2(k)) if k > 1 else 0
-    masks = [jnp.ones((n,), bool)]
-    keys = jax.random.split(key, max(rounds, 1))
-    for r in range(rounds):
-        new_masks = []
-        subkeys = jax.random.split(keys[r], len(masks))
-        for mk, sk in zip(masks, subkeys):
-            m = int(jnp.sum(mk))
-            if m < 2:
-                new_masks.append(mk)
-                continue
-            mask_a, mask_b, *_ = projective_split(x, mk, sk, iters=split_iters)
-            counter.add_inner(split_iters * m)
-            counter.add_additions(split_iters * m)
-            for _ in range(split_iters):
-                counter.add_sort(m, d)
-            new_masks += [mask_a, mask_b]
-        masks = new_masks
-    # Keep the k highest-energy leaves; merge the rest into nearest kept leaf.
-    stats = []
-    for mk in masks:
-        fm = mk.astype(x.dtype)[:, None]
-        cnt = jnp.maximum(jnp.sum(fm), 1.0)
-        mu = jnp.sum(x * fm, axis=0) / cnt
-        phi = jnp.sum(jnp.square(x - mu) * fm)
-        stats.append((mk, mu, float(phi)))
-    stats.sort(key=lambda t: -t[2])
-    kept = stats[:k]
-    centers = jnp.stack([s[1] for s in kept])
-    assignment = jnp.zeros((n,), jnp.int32)
-    for j, (mk, _, _) in enumerate(kept):
-        assignment = jnp.where(mk, j, assignment)
-    # Points in dropped leaves -> nearest kept center.
-    if len(stats) > k:
-        from .distance import chunked_argmin_sqdist
-        dropped = jnp.zeros((n,), bool)
-        for mk, _, _ in stats[k:]:
-            dropped = dropped | mk
-        near, _ = chunked_argmin_sqdist(x, centers)
-        counter.add_distances(int(jnp.sum(dropped)) * k)
-        assignment = jnp.where(dropped, near, assignment)
-    return centers, assignment
+    assert 1 <= k <= n
+    impl, interpret = _auto_impl(impl, interpret)
+    # the Pallas scan wants MXU-sized blocks; the XLA path has no block
+    # constraint, so it minimizes the grouped layout's padding (R -> ~n)
+    bn = bn or (choose_group_bn(n, k) if impl == "pallas" else 8)
+    r = grouped_capacity(n, k, bn) * bn
+
+    state = _device_state(x, k)
+    counter.add_additions(n)                    # initial mean
+    nleaf = 1
+    while nleaf < k:
+        key, sub = jax.random.split(key)
+        state = gdi_round_step(x, *state, sub, k=k, bn=bn,
+                               split_iters=split_iters, impl=impl,
+                               interpret=interpret, frontier=frontier)
+        _charge_round(counter, r, n, d, split_iters)
+        new_nleaf = int(state[4])               # the round's one host read
+        if new_nleaf == nleaf:
+            break                               # nothing splittable left
+        nleaf = new_nleaf
+    a, centers = state[0], state[1]
+    if nleaf < k:   # pathological tiny-n fallback: pad with copies
+        centers = jnp.where((jnp.arange(k) < nleaf)[:, None], centers,
+                            centers[max(nleaf - 1, 0)])
+    return centers, a
+
+
+def gdi_parallel_init(x: jax.Array, k: int, key: jax.Array, *,
+                      split_iters: int = 2,
+                      counter: OpCounter | None = None,
+                      bn: int | None = None, impl: str | None = None,
+                      interpret: bool | None = None):
+    """Round-parallel divisive variant (paper footnote 2): every round
+    splits *all* current leaves at once — O(log2 k) rounds — the scalable
+    flavour used by the distributed clustering path. Runs on the same
+    device round step as ``gdi_device_init`` with the frontier cap off,
+    over a power-of-two slot capacity; if k is not a power of two the k
+    highest-energy leaves are kept and the rest reassigned to the nearest
+    kept center.
+    """
+    counter = counter or OpCounter()
+    n, d = x.shape
+    assert 1 <= k <= n
+    impl, interpret = _auto_impl(impl, interpret)
+    k2 = 1 << math.ceil(math.log2(k)) if k > 1 else 1
+    bn = bn or (choose_group_bn(n, k2) if impl == "pallas" else 8)
+    r = grouped_capacity(n, k2, bn) * bn
+
+    state = _device_state(x, k2)
+    counter.add_additions(n)
+    nleaf = 1
+    for _ in range(math.ceil(math.log2(k2)) if k2 > 1 else 0):
+        key, sub = jax.random.split(key)
+        state = gdi_round_step(x, *state, sub, k=k2, bn=bn,
+                               split_iters=split_iters, impl=impl,
+                               interpret=interpret, frontier=1.0)
+        _charge_round(counter, r, n, d, split_iters)
+        new_nleaf = int(state[4])
+        if new_nleaf == nleaf:
+            break
+        nleaf = new_nleaf
+    a, centers, energies = state[0], state[1], state[2]
+    if k2 == k:
+        if nleaf < k:   # degenerate data stalled the rounds short of k
+            centers = jnp.where((jnp.arange(k) < nleaf)[:, None], centers,
+                                centers[max(nleaf - 1, 0)])
+        return centers, a
+    # Keep the k highest-energy leaves; dropped leaves -> nearest kept.
+    from .distance import chunked_argmin_sqdist
+    exists = jnp.arange(k2) < nleaf
+    _, keep = jax.lax.top_k(jnp.where(exists, energies, -_INF), k)
+    kept_centers = centers[keep]
+    kept_centers = jnp.where(exists[keep][:, None], kept_centers,
+                             kept_centers[0])
+    remap = jnp.full((k2,), -1, jnp.int32).at[keep].set(
+        jnp.arange(k, dtype=jnp.int32))
+    near, _ = chunked_argmin_sqdist(x, kept_centers)
+    counter.add_distances(n * k)
+    a_new = jnp.where(remap[a] >= 0, remap[a], near.astype(jnp.int32))
+    return kept_centers, a_new

@@ -29,8 +29,12 @@ Two backends execute the iteration (``fit_k2means(..., backend=...)``):
     candidate assignment (kernels.candidate_assign) -> segment-sum center
     update -> Hamerly bound adjustment, with the cluster-grouped layout
     built on device (kernels.ops.group_by_cluster_device) so no host
-    roundtrip happens between iterations. Energy / op-count host reads are
-    deferred to every ``monitor_every`` iterations. Assignments match the
+    roundtrip happens between iterations. Fed from the device-resident
+    divisive init (core.gdi.gdi_device_init, DESIGN.md §4 — the default
+    via ``api.fit(init="gdi", backend="pallas")``), the whole program
+    init -> kNN graph -> grouped assignment -> update runs on device.
+    Energy / op-count host reads are deferred to every ``monitor_every``
+    iterations. Assignments match the
     xla backend exactly (both recompute under the same exact conditions;
     the pallas path recomputes whole bn-point blocks, which can only
     tighten bounds, never change an assignment). Caveat: the backends
@@ -236,9 +240,10 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
                 interpret: bool | None = None) -> KMeansResult:
     """Run k²-means from an initialisation (centers + assignments).
 
-    GDI provides assignments for free; for other inits pass
-    ``assign_nearest(x, centers)`` (and charge it to the counter yourself,
-    as the benchmark harness does).
+    GDI provides assignments for free (device-resident ones stay on
+    device — no host sync between init and iteration 1); for other inits
+    pass ``assign_nearest(x, centers)`` (and charge it to the counter
+    yourself, as the benchmark harness does).
 
     backend: "xla" (portable lax.map reference) or "pallas" (fused device
     step through the tiled candidate-assignment kernel; see module

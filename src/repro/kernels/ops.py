@@ -19,6 +19,7 @@ from .cluster_attend import (cluster_attend, cluster_major_pack,
                              select_clusters)
 from .center_knn import center_knn, center_sqdist
 from .distance_argmin import distance_argmin
+from .segmented_scan import segmented_scan as _segmented_scan_kernel
 
 _ON_TPU = jax.default_backend() == "tpu"
 _VMEM_BUDGET = 12 * 2 ** 20 // 4          # ~12 MiB of f32 working set
@@ -136,6 +137,15 @@ def scatter_from_grouped(perm: jax.Array, values: jax.Array,
     return prev.at[idx].set(values, mode="drop")
 
 
+def segmented_scan(x: jax.Array, w: jax.Array, block2seg: jax.Array,
+                   *, bn: int = 128, interpret: bool | None = None):
+    """Segmented inclusive scan of (x, ||x||^2, 1) over the cluster-grouped
+    layout (see kernels/segmented_scan.py for the contract); interpret mode
+    auto-selected off-TPU."""
+    interpret = (not _ON_TPU) if interpret is None else interpret
+    return _segmented_scan_kernel(x, w, block2seg, bn=bn, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "bkn", "interpret"))
 def k2_assign_grouped(x: jax.Array, c: jax.Array, neighbors: jax.Array,
                       perm: jax.Array, block2cluster: jax.Array,
@@ -177,4 +187,5 @@ __all__ = ["assign_nearest_pallas", "candidate_assign",
            "cluster_major_pack", "distance_argmin", "group_by_cluster",
            "group_by_cluster_device", "grouped_capacity",
            "k2_assign_grouped", "pad_candidates", "rowwise_grid_steps",
-           "scatter_from_grouped", "select_clusters", "tiled_grid_steps"]
+           "scatter_from_grouped", "segmented_scan", "select_clusters",
+           "tiled_grid_steps"]

@@ -63,6 +63,31 @@ def candidate_assign_tiled_ref(x, c, cand, skip, prev_a, prev_d1, prev_d2,
             jnp.where(skip_pt, prev_d2, d2))
 
 
+def segmented_scan_ref(x, w, block2seg, bn: int, num_segments: int):
+    """jax.ops.segment_* oracle for the segmented-scan kernel.
+
+    Same contract as ``segmented_scan``: rows grouped by segment (block
+    aligned, ``block2seg`` non-decreasing), ``w`` zero on padding rows.
+    Realised as a global inclusive cumsum minus the per-segment exclusive
+    offset (``segment_sum`` totals, exclusive-scanned over segments) — the
+    device-resident formulation the XLA fast path of the divisive init
+    uses directly.
+    """
+    row_seg = jnp.repeat(block2seg, bn)
+    xw = x * w[:, None]
+    q = jnp.sum(xw * x, axis=-1)
+    gx = jnp.cumsum(xw, axis=0)
+    gq = jnp.cumsum(q)
+    gc = jnp.cumsum(w)
+    tot_x = jax.ops.segment_sum(xw, row_seg, num_segments=num_segments)
+    tot_q = jax.ops.segment_sum(q, row_seg, num_segments=num_segments)
+    tot_c = jax.ops.segment_sum(w, row_seg, num_segments=num_segments)
+    off_x = (jnp.cumsum(tot_x, axis=0) - tot_x)[row_seg]
+    off_q = (jnp.cumsum(tot_q) - tot_q)[row_seg]
+    off_c = (jnp.cumsum(tot_c) - tot_c)[row_seg]
+    return gx - off_x, gq - off_q, gc - off_c
+
+
 def center_sqdist_ref(c):
     sq = jnp.sum(c * c, -1)
     return jnp.maximum(sq[:, None] - 2.0 * (c @ c.T) + sq[None, :], 0.0)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: segmented inclusive scan over a leaf-grouped layout.
+
+The divisive-initialization hotspot (DESIGN.md §4). Rows arrive grouped by
+leaf (ops.group_by_cluster_device layout: every leaf padded to a ``bn``
+multiple, so segment boundaries only occur at block boundaries) and sorted
+by the split-direction projection within each leaf. One sequential pass
+over the blocks then yields, for every candidate split position at once,
+the running sums Lemma 1 needs:
+
+    csum[r] = sum_{r' <= r, same leaf} w[r'] * x[r']        (d lanes)
+    qsum[r] = sum_{r' <= r, same leaf} w[r'] * ||x[r']||^2
+    cnt[r]  = sum_{r' <= r, same leaf} w[r']
+
+The TPU grid executes in order, so the running carry lives in scratch and
+resets whenever the scalar-prefetched ``block2seg`` changes between
+consecutive blocks — the segmented analogue of a grid-carried cumsum.
+Padding rows (w = 0) contribute nothing, so within-leaf padding and the
+trailing all-padding capacity blocks of the grouped layout are harmless.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(b2s_ref,                                  # scalar prefetch (SMEM)
+            x_ref, w_ref,
+            csum_ref, qsum_ref, cnt_ref,
+            carry_x, carry_s):
+    i = pl.program_id(0)
+    seg = b2s_ref[i]
+    prev = b2s_ref[jnp.maximum(i - 1, 0)]
+    reset = jnp.logical_or(i == 0, seg != prev)
+
+    @pl.when(reset)
+    def _():
+        carry_x[...] = jnp.zeros_like(carry_x)
+        carry_s[0] = 0.0
+        carry_s[1] = 0.0
+
+    x = x_ref[...]                                    # (bn, d)
+    w = w_ref[...]                                    # (bn,)
+    xw = x * w[:, None]
+    cx = jnp.cumsum(xw, axis=0) + carry_x[...]
+    cq = jnp.cumsum(jnp.sum(xw * x, axis=-1)) + carry_s[0]
+    cc = jnp.cumsum(w) + carry_s[1]
+    csum_ref[...] = cx
+    qsum_ref[...] = cq
+    cnt_ref[...] = cc
+    carry_x[...] = cx[-1:, :]
+    carry_s[0] = cq[-1]
+    carry_s[1] = cc[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def segmented_scan(x: jax.Array, w: jax.Array, block2seg: jax.Array,
+                   *, bn: int = 128, interpret: bool = False):
+    """Segmented inclusive scan of (x, ||x||^2, 1) weighted by ``w``.
+
+    x: (R, d) rows in leaf-grouped order (R = nb * bn); w: (R,) f32 row
+    weights (1 real, 0 padding); block2seg: (nb,) int32 leaf id per block,
+    non-decreasing, segment boundaries block-aligned.
+    Returns (csum (R, d), qsum (R,), cnt (R,)), each inclusive within its
+    segment.
+    """
+    r, d = x.shape
+    assert r % bn == 0
+    nb = r // bn
+    assert block2seg.shape == (nb,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, b2s: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, b2s: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, d), lambda i, b2s: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, b2s: (i,)),
+            pl.BlockSpec((bn,), lambda i, b2s: (i,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.SMEM((2,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((r, d), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block2seg, x, w)

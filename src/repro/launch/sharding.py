@@ -1,7 +1,7 @@
 """Sharding rules: param -> PartitionSpec (TP + FSDP), optimizer-state
 extension (ZeRO-1), batch and cache specs.
 
-Rules (DESIGN.md §6):
+Rules (DESIGN.md §7):
 - tensor parallel: fan-out projections column-sharded, fan-in row-sharded,
   MoE experts sharded on the expert axis (EP), embedding vocab-sharded;
 - FSDP: every large leaf additionally shards one remaining dimension over

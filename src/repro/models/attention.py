@@ -1,6 +1,6 @@
 """Attention variants: GQA (optional qk-norm), MLA (DeepSeek-V2), and
 clustered-KV sparse decode attention ("k²-attention" — the paper's technique
-applied to the KV cache; see DESIGN.md §4).
+applied to the KV cache; see DESIGN.md §5).
 
 Memory discipline: training/prefill attention is query-chunked (scan over
 query blocks, full KV per block) so the compiled program never materialises
@@ -176,7 +176,8 @@ def cluster_major_decode_attention(q, kt, vt, centroids, sizes, top_p: int,
     top-p read never crosses shards) and merges with a tiny psum of
     (max, sum, acc) — collective volume O(B*H*dh), independent of S."""
     from jax.interpreters import pxla
-    from jax import shard_map
+
+    from ..compat import shard_map
 
     B, H, dh = q.shape
     Hkv, kc, cap = centroids.shape[1], centroids.shape[2], kt.shape[3]

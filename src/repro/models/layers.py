@@ -88,7 +88,7 @@ def shard(x: jax.Array, spec: P) -> jax.Array:
 
 
 def head_spec(n_heads: int, tp_size: int = 16) -> P:
-    """Shard the head axis only when it divides the TP axis (DESIGN.md §6)."""
+    """Shard the head axis only when it divides the TP axis (DESIGN.md §7)."""
     if n_heads % tp_size == 0:
         return P(DP, None, TP, None)
     return P(DP, None, None, None)

@@ -64,7 +64,7 @@ def embed_tokens(cfg, params, tokens, patches=None):
     h = jnp.take(params["embed"], tokens, axis=0)
     if cfg.n_patches and patches is not None:
         # VLM stub frontend: patch embeddings replace the first n_patches
-        # positions (precomputed by the vision tower, see DESIGN.md §5).
+        # positions (precomputed by the vision tower, see DESIGN.md §6).
         pos = jnp.arange(h.shape[1])[None, :, None]
         pad = h.shape[1] - cfg.n_patches
         patches_full = jnp.pad(patches.astype(h.dtype),

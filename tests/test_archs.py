@@ -22,6 +22,7 @@ def _batch(cfg, B=2, S=16):
     return b
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_train_step(arch):
     cfg = get_smoke_config(arch)
@@ -34,6 +35,7 @@ def test_smoke_train_step(arch):
     assert np.isfinite(float(metrics["loss"]))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_serve_step(arch):
     cfg = get_smoke_config(arch)
@@ -48,6 +50,7 @@ def test_smoke_serve_step(arch):
     assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", [a for a in ARCH_IDS
                                   if get_smoke_config(a).ssm == ""
                                   or get_smoke_config(a).attn_every])

@@ -48,6 +48,7 @@ def test_k2means_quality_within_1pct(data, init50):
     assert rk.ops < rl.ops
 
 
+@pytest.mark.slow
 def test_gdi_energy_comparable_to_kmeanspp(data):
     """Paper Table 4/7: GDI converges to energies comparable to k-means++
     (within 5% here; the paper reports ~0.4% better on average) at far
@@ -88,8 +89,8 @@ def test_update_centers_empty_cluster_keeps_old():
 
 @pytest.mark.parametrize("method,init", [
     ("lloyd", "random"), ("elkan", "kmeanspp"), ("k2means", "gdi"),
-    ("k2means", "gdi_parallel"), ("akm", "kmeanspp"),
-    ("minibatch", "random")])
+    ("k2means", "gdi_device"), ("k2means", "gdi_parallel"),
+    ("akm", "kmeanspp"), ("minibatch", "random")])
 def test_fit_api(data, method, init):
     r = fit(data, 20, method=method, init=init, key=KEY, max_iters=10,
             kn=5, m=5, minibatch_iters=50)
@@ -137,6 +138,7 @@ def test_k2means_bounds_are_exact(data, init50):
     assert skipped_any, "bounds never skipped anything (test is vacuous)"
 
 
+@pytest.mark.slow
 def test_gdi_router_init_shapes():
     """GDI as the MoE router initializer (models/moe.py feature)."""
     from repro.models.moe import gdi_router_init

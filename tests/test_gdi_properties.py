@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import projective_split, gdi_init, clustering_energy
+from repro.core import (projective_split, gdi_init, clustering_energy,
+                        segmented_split_sweep)
 from repro.core.distance import pairwise_sqdist, sqnorm
 
 hypothesis.settings.register_profile(
@@ -55,6 +56,43 @@ def test_projective_split_partitions_and_reduces_energy(n, d, seed):
     # reported energies match the actual split energies
     np.testing.assert_allclose(float(pa), _phi(xa), rtol=5e-3, atol=5e-2)
     np.testing.assert_allclose(float(pb), _phi(xb), rtol=5e-3, atol=5e-2)
+
+
+@given(st.integers(6, 40), st.integers(1, 4), st.integers(1, 4),
+       st.integers(0, 10_000))
+def test_segmented_sweep_matches_bruteforce_2means_scan(n, d, k, seed):
+    """The frontier round's segmented Lemma-1 sweep (DESIGN.md §4) must
+    find, for every leaf at once, the same min-energy hyperplane split a
+    brute-force 2-means scan over that leaf's sorted members finds."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, d).astype(np.float32)
+    a = rng.randint(0, k, n).astype(np.int32)
+    ca = rng.randn(k, d).astype(np.float32)
+    cb = rng.randn(k, d).astype(np.float32)
+    found, cnt_a, c_a, c_b, phi_a, phi_b = segmented_split_sweep(
+        jnp.asarray(x), jnp.asarray(a), jnp.asarray(ca), jnp.asarray(cb),
+        k=k, bn=8, impl="xla", interpret=True)
+    for j in range(k):
+        members = x[a == j]
+        if len(members) < 2:
+            assert not bool(found[j])
+            continue
+        assert bool(found[j])
+        proj = members @ (ca[j] - cb[j])
+        xs = members[np.argsort(proj, kind="stable")].astype(np.float64)
+        best = np.inf
+        for l in range(len(members) - 1):
+            pa, pb = xs[:l + 1], xs[l + 1:]
+            best = min(best, ((pa - pa.mean(0)) ** 2).sum()
+                       + ((pb - pb.mean(0)) ** 2).sum())
+        np.testing.assert_allclose(float(phi_a[j] + phi_b[j]), best,
+                                   rtol=5e-3, atol=5e-2)
+        # the returned centers are the two half means of the chosen split
+        la = int(cnt_a[j])
+        np.testing.assert_allclose(np.asarray(c_a)[j], xs[:la].mean(0),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(c_b)[j], xs[la:].mean(0),
+                                   rtol=2e-3, atol=2e-3)
 
 
 @given(st.integers(8, 64), st.integers(2, 6), st.integers(2, 8),

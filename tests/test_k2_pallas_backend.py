@@ -22,6 +22,7 @@ def _run_pair(x, init, kn, max_iters, **pallas_kw):
     return rx, rp
 
 
+@pytest.mark.slow
 def test_pallas_backend_matches_xla_acceptance_size():
     """The ISSUE 1 acceptance config: n=4096, k=256, k_n=16."""
     x = gmm_blobs(jax.random.PRNGKey(1), 4096, 32, true_k=64)
@@ -61,6 +62,7 @@ def test_pallas_backend_deferred_monitoring():
     assert r1.energy == pytest.approx(r4.energy, rel=1e-6)
 
 
+@pytest.mark.slow
 def test_pallas_backend_via_fit_api():
     from repro.core import fit
     x = gmm_blobs(jax.random.PRNGKey(2), 600, 16, true_k=8)

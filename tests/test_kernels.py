@@ -241,6 +241,7 @@ def test_choose_blocks_vmem_budget():
     (1, 4, 1, 64, 16, 4, 32, 2),
     (2, 1, 4, 96, 64, 6, 32, 3),
 ])
+@pytest.mark.slow
 def test_cluster_attend_matches_jnp(B, Hkv, g, S, dh, kc, cap, p):
     from repro.kernels.cluster_attend import (cluster_attend,
                                               cluster_major_pack,

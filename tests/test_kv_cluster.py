@@ -101,6 +101,7 @@ def test_cluster_major_roundtrip_and_recluster():
     assert np.asarray(rk2).sum() == 0
 
 
+@pytest.mark.slow
 def test_ring_decode_matches_flat_reference():
     """A clustered serve step with tokens in the RING must weight them
     exactly (the ring is exact attention, not approximated)."""

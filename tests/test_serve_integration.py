@@ -19,6 +19,7 @@ from repro.models import init_cache, init_params, serve_step
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 def test_clustered_decode_consistent_with_full_at_high_coverage():
     """With top_p = kc and cap >= S the k²-attention serve path must agree
     with exact attention through the whole stack (logits close)."""
