@@ -41,8 +41,8 @@ def main() -> None:
                     help="machine-readable per-section report path")
     args, _ = ap.parse_known_args()
 
-    from . import complexity, convergence_curves, init_bench, roofline, \
-        table4_init, table5_speedup
+    from . import complexity, convergence_curves, dist_bench, init_bench, \
+        roofline, table4_init, table5_speedup
 
     sections = [
         ("table2_complexity",
@@ -65,6 +65,10 @@ def main() -> None:
          lambda: table5_speedup.run(eps=0.0,
                                     max_iters=25 if args.fast else 40,
                                     datasets=("mnist50", "usps"))),
+        ("distributed",
+         "Distributed: bounded engine step vs legacy sharded step "
+         "(4-device debug mesh -> BENCH_dist.json)",
+         lambda: dist_bench.run(fast=args.fast)),
         ("fig23_convergence",
          "Fig 2/3: convergence curves (energy vs counted ops)",
          lambda: convergence_curves.run(max_iters=15 if args.fast else 30)),

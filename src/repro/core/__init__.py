@@ -3,8 +3,10 @@ from .api import fit, initialize, METHODS, INITS
 from .distance import (pairwise_sqdist, chunked_argmin_sqdist,
                        gather_candidate_sqdist, clustering_energy, sqnorm)
 from .elkan import fit_elkan
-from .gdi import (gdi_device_init, gdi_init, gdi_parallel_init,
-                  gdi_round_step, projective_split, segmented_split_sweep)
+from .gdi import (frontier_round_bound, gdi_device_init, gdi_fixed_rounds,
+                  gdi_init, gdi_parallel_init, gdi_round_step,
+                  projective_split, segmented_split_sweep)
+from .engine import K2State, K2Step, StepStats, init_state, k2_iteration
 from .k2means import fit_k2means, k2means_step
 from .kmeanspp import kmeanspp_init, random_init, assign_nearest
 from .lloyd import KMeansResult, fit_lloyd, lloyd_step, update_centers

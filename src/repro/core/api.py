@@ -55,7 +55,8 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
         key: jax.Array | None = None, max_iters: int = 100,
         kn: int = 30, m: int = 30, batch: int = 100,
         minibatch_iters: int | None = None,
-        counter: OpCounter | None = None, **kw: Any) -> KMeansResult:
+        counter: OpCounter | None = None,
+        mesh: Any = None, **kw: Any) -> KMeansResult:
     """Cluster ``x`` into ``k`` clusters. The paper's method is the default.
 
     Extra keywords flow to the method's fit function — notably
@@ -67,11 +68,31 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
     assignment -> update chain as one device program with no host round
     trips besides the per-round leaf count and the ``monitor_every``
     telemetry reads.
+
+    ``mesh=<jax Mesh>`` places the same engine iteration sharded
+    (core.distributed / DESIGN.md §7-8): points row-sharded over the
+    mesh's data axes, centers replicated, convergence via the psum'd
+    changed count — supported for ``method="k2means"`` with
+    ``init`` in ("random", "kmeanspp", "gdi", "gdi_replicated") (the
+    "gdi" seeding runs the frontier rounds per shard-group). The same
+    extra keywords apply (``backend`` defaults to "pallas" there).
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     counter = counter or OpCounter()
     k_init, k_fit = jax.random.split(key)
     x = jnp.asarray(x, jnp.float32)
+
+    if mesh is not None:
+        if method != "k2means":
+            raise ValueError(
+                f"mesh placement supports method='k2means' only, got "
+                f"{method!r}")
+        from .distributed import fit_distributed_k2means
+        # k_init, as on the single-device path: init="random" from the
+        # same seed samples the same centers under either placement
+        return fit_distributed_k2means(x, k, kn, mesh, k_init,
+                                       max_iters=max_iters, init=init,
+                                       counter=counter, **kw)
 
     centers, assignment = initialize(x, k, init, k_init, counter,
                                      backend=kw.get("backend"))

@@ -49,6 +49,73 @@ def chunked_argmin_sqdist(x: jax.Array, c: jax.Array, chunk: int = 4096):
     return a.reshape(-1)[:n], dmin.reshape(-1)[:n]
 
 
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def chunked_candidate_argmin(x: jax.Array, c: jax.Array, cand: jax.Array,
+                             chunk: int = 2048):
+    """Restricted nearest-candidate assignment, chunked.
+
+    Each row of ``x`` competes only among its own candidate list
+    ``cand[i]`` (row indices into ``c``). Returns (assignment (n,),
+    min_sqdist (n,)). This is the shared pad-and-chunk helper behind every
+    k_n-restricted XLA assignment (single-device and sharded).
+    """
+    n, d = x.shape
+    kn = cand.shape[1]
+    c_sq = sqnorm(c)
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    candp = jnp.pad(cand, ((0, pad), (0, 0)))
+
+    def body(args):
+        xb, candb = args
+        cb = c[candb]                                  # (chunk, kn, d)
+        cross = jnp.einsum("nd,nkd->nk", xb, cb)
+        sq = jnp.maximum(sqnorm(xb)[:, None] - 2.0 * cross + c_sq[candb],
+                         0.0)
+        j = jnp.argmin(sq, 1)
+        return (jnp.take_along_axis(candb, j[:, None], 1)[:, 0],
+                jnp.take_along_axis(sq, j[:, None], 1)[:, 0])
+
+    a, dmin = jax.lax.map(body, (xp.reshape(-1, chunk, d),
+                                 candp.reshape(-1, chunk, kn)))
+    return a.reshape(-1)[:n], dmin.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def chunked_candidate_top2(x: jax.Array, c: jax.Array, cand: jax.Array,
+                           chunk: int = 2048):
+    """Best and second-best candidate per row, chunked.
+
+    Like :func:`chunked_candidate_argmin` but returns the Hamerly bound
+    pair as *true* (not squared) distances: (assignment (n,), d1 (n,),
+    d2 (n,)) with d1 <= d2 the two smallest candidate distances. Feeds the
+    bounded k²-means iteration's u/lo refresh (DESIGN.md §3.1).
+    """
+    n, d = x.shape
+    kn = cand.shape[1]
+    c_sq = sqnorm(c)
+    x_sq = sqnorm(x)
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    xsqp = jnp.pad(x_sq, (0, pad))
+    candp = jnp.pad(cand, ((0, pad), (0, 0)))
+
+    def body(args):
+        xb, xsqb, candb = args
+        cb = c[candb]                                  # (chunk, kn, d)
+        cross = jnp.einsum("nd,nkd->nk", xb, cb)
+        sq = jnp.maximum(xsqb[:, None] - 2.0 * cross + c_sq[candb], 0.0)
+        dist = jnp.sqrt(sq)
+        top2_neg, top2_idx = jax.lax.top_k(-dist, 2)
+        a_new = jnp.take_along_axis(candb, top2_idx[:, :1], axis=1)[:, 0]
+        return a_new, -top2_neg[:, 0], -top2_neg[:, 1]
+
+    a, d1, d2 = jax.lax.map(
+        body, (xp.reshape(-1, chunk, d), xsqp.reshape(-1, chunk),
+               candp.reshape(-1, chunk, kn)))
+    return a.reshape(-1)[:n], d1.reshape(-1)[:n], d2.reshape(-1)[:n]
+
+
 def gather_candidate_sqdist(x: jax.Array, c: jax.Array,
                             cand: jax.Array) -> jax.Array:
     """Distances from each point to its own candidate list.

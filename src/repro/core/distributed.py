@@ -1,24 +1,39 @@
-"""Distributed k²-means via shard_map — the paper's algorithm at pod scale.
+"""Distributed k²-means — the engine step under shard_map, at pod scale.
 
-Layout (DESIGN.md §3): points row-sharded over the flattened data axes
-('pod' x 'data' [x 'model' when the clustering job owns the whole mesh]);
-centers replicated. Per iteration:
+This module is a thin placement wrapper: the iteration itself lives in
+the engine layer (``core.engine.k2_iteration``, DESIGN.md §8) and runs
+here per shard via :class:`core.engine.K2Step` with ``mesh=...`` —
+including the Pallas fast path (``backend="pallas"``: per-shard device
+cluster grouping + the bound-gated tiled candidate kernel). Layout
+(DESIGN.md §7): points and the bound-carried state ``(a, u, lo)``
+row-sharded over the flattened data axes ('pod' x 'data'); centers and
+the replicated k_n-NN center graph on every shard (O(k²d) is tiny next
+to O(n·k_n·d / P) per shard); the mean update is a per-shard segment-sum
+followed by a hierarchical psum (reduce within pod over ICI, then across
+pods over DCN — the reduction runs innermost axis first).
 
-  1. the k_n-NN center graph is computed replicated (O(k^2 d) is tiny next
-     to O(n k_n d / P) per shard);
-  2. each shard runs the k_n-restricted bounded assignment on its rows;
-  3. the update step is a per-shard segment-sum followed by a hierarchical
-     psum (reduce within pod over ICI, then across pods over DCN — jax
-     orders the reduction by axis: psum over ('data',) then ('pod',)).
+Convergence is device-resident: every iteration yields replicated scalar
+stats (recompute count, psum'd changed count, post-update energy) and the
+driver host-reads only those — every ``monitor_every`` iterations,
+mirroring the single-device deferred-read contract (DESIGN.md §4.3). No
+full assignment ever crosses to the host inside the loop.
 
-The same step function drives the multi-pod dry-run (lower/compile) and the
-CI-scale correctness test (4-device debug mesh), where it must match the
-single-device k²-means step bit-for-bit on the same data.
+Initialization (``fit_distributed_k2means(init="gdi")``) is shard-aware:
+every shard-group runs greedy frontier rounds (``core.gdi
+.gdi_fixed_rounds``) on its local rows under shard_map toward k *local*
+leaves (each shard's n/P-point sample yields a full k-covering), the
+driver merges the P·k leaf centers down to k with a tiny weighted
+center-level Lloyd reduction (k-means||-style), and points inherit their
+leaf's meta-cluster — the divisive assignment seeds the iteration for
+free and the sharded full-assignment pass is skipped.
+``init="gdi_replicated"`` keeps the replicated device GDI as the
+seeding-quality baseline.
 
-Initialization (``fit_distributed_k2means(init="gdi")``) reuses the
-device-resident frontier round step (core.gdi, DESIGN.md §4): divisive
-init yields the seeding assignment for free, so the sharded
-full-assignment pass is skipped entirely.
+The legacy bound-free sharded step (``make_distributed_k2means_step``,
+``backend="legacy"``) is kept as the benchmark baseline
+(``benchmarks/dist_bench.py``): it recomputes every point's k_n
+candidates each iteration, where the engine step recomputes only points
+whose Hamerly bounds (or candidate lists) demand it.
 """
 from __future__ import annotations
 
@@ -26,182 +41,370 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from ..compat import shard_map
-from .distance import pairwise_sqdist, sqnorm
+from ..launch.mesh import dp_axes
+from ..launch.sharding import clustering_specs
+from .distance import (chunked_argmin_sqdist, chunked_candidate_argmin,
+                       pairwise_sqdist, sqnorm)
+from .engine import K2State, K2Step
+from .lloyd import KMeansResult
+from .opcount import OpCounter
+
+_SHARDED_INITS = ("random", "kmeanspp", "gdi", "gdi_replicated")
 
 
-def _local_candidate_assign(x, c, cand_idx, chunk=2048):
-    """k_n-restricted assignment of local rows. cand_idx: (n_loc, kn)."""
-    n, d = x.shape
-    kn = cand_idx.shape[1]
-    c_sq = sqnorm(c)
-    pad = (-n) % chunk
-    xp = jnp.pad(x, ((0, pad), (0, 0)))
-    candp = jnp.pad(cand_idx, ((0, pad), (0, 0)))
+def _axes(mesh, data_axes):
+    return tuple(data_axes) if data_axes else dp_axes(mesh)
 
-    def body(args):
-        xb, candb = args
-        cb = c[candb]
-        cross = jnp.einsum("nd,nkd->nk", xb, cb)
-        sq = jnp.maximum(sqnorm(xb)[:, None] - 2.0 * cross + c_sq[candb],
-                         0.0)
-        j = jnp.argmin(sq, 1)
-        return (jnp.take_along_axis(candb, j[:, None], 1)[:, 0],
-                jnp.take_along_axis(sq, j[:, None], 1)[:, 0])
 
-    a, dmin = jax.lax.map(body, (xp.reshape(-1, chunk, d),
-                                 candp.reshape(-1, chunk, kn)))
-    return a.reshape(-1)[:n], dmin.reshape(-1)[:n]
+def _nshards(mesh, data_axes):
+    s = 1
+    for a in data_axes:
+        s *= mesh.shape[a]
+    return s
 
 
 def make_distributed_k2means_step(mesh, kn: int, k: int, *,
                                   data_axes=None, chunk: int = 2048):
-    """Build the sharded step: (x_sharded, c_repl, a_sharded) ->
-    (c', a', energy). x rows sharded over data_axes; c replicated."""
-    data_axes = data_axes or tuple(
-        a for a in mesh.axis_names if a in ("pod", "data"))
-    xspec = P(data_axes, None)
-    aspec = P(data_axes)
-    rep = P()
+    """Legacy bound-free sharded step — the benchmark baseline.
 
-    def step(x, c, a):
+    Builds ``step(x, w, c, a) -> (c', a', energy, changed)``: replicated
+    center k_n-NN graph, per-shard k_n-restricted assignment of every
+    row (no Hamerly gating), hierarchical psum update. ``w`` masks
+    padding rows (uneven shards); ``energy`` is the post-update
+    clustering energy (the engine stats convention, so driver histories
+    compare across backends) and ``changed`` the psum'd count of
+    assignment flips — the device-resident convergence signal (no host
+    sync of the full assignment).
+    """
+    data_axes = _axes(mesh, data_axes)
+    xspec, rowspec, rep = clustering_specs(mesh, data_axes)
+
+    def step(x, w, c, a):
         # 1. replicated center kNN graph (self-inclusive)
         cc = pairwise_sqdist(c, c)
         _, neighbors = jax.lax.top_k(-cc, kn)              # (k, kn)
-        # 2. local restricted assignment
+        # 2. local restricted assignment (bound-free: every row)
         cand = neighbors[a]                                # (n_loc, kn)
-        a_new, dmin = _local_candidate_assign(x, c, cand, chunk)
-        # 3. hierarchical mean update: local segment sums + cross-shard psum
-        sums = jax.ops.segment_sum(x, a_new, num_segments=k)
-        counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype),
-                                     a_new, num_segments=k)
-        energy = jnp.sum(dmin)
-        for ax in reversed(data_axes):                     # ICI first, DCN last
+        a_new, _dmin = chunked_candidate_argmin(x, c, cand, chunk=chunk)
+        a_new = a_new.astype(jnp.int32)
+        # 3. hierarchical mean update: local segment sums + psum
+        sums = jax.ops.segment_sum(x * w[:, None], a_new, num_segments=k)
+        counts = jax.ops.segment_sum(w, a_new, num_segments=k)
+        changed = jnp.sum((a_new != a) & (w > 0))
+        for ax in reversed(data_axes):                     # ICI first
             sums = jax.lax.psum(sums, ax)
             counts = jax.lax.psum(counts, ax)
-            energy = jax.lax.psum(energy, ax)
+            changed = jax.lax.psum(changed, ax)
         c_new = jnp.where(counts[:, None] > 0,
                           sums / jnp.maximum(counts, 1.0)[:, None], c)
-        return c_new, a_new.astype(jnp.int32), energy
+        energy = jnp.sum(w * sqnorm(x - c_new[a_new]))
+        for ax in reversed(data_axes):
+            energy = jax.lax.psum(energy, ax)
+        return c_new, a_new, energy, changed
 
     return shard_map(step, mesh=mesh,
-                     in_specs=(xspec, rep, aspec),
-                     out_specs=(rep, aspec, rep))
+                     in_specs=(xspec, rowspec, rep, rowspec),
+                     out_specs=(rep, rowspec, rep, rep))
 
 
 def make_distributed_lloyd_step(mesh, k: int, *, data_axes=None,
                                 chunk: int = 2048):
-    """Sharded full-assignment Lloyd step (baseline for the benchmarks)."""
-    data_axes = data_axes or tuple(
-        a for a in mesh.axis_names if a in ("pod", "data"))
-    xspec = P(data_axes, None)
-    rep = P()
+    """Sharded full-assignment Lloyd step (baseline for the benchmarks):
+    ``step(x, w, c) -> (c', a', energy)``, assignment via the shared
+    chunked argmin helper."""
+    data_axes = _axes(mesh, data_axes)
+    xspec, rowspec, rep = clustering_specs(mesh, data_axes)
 
-    def step(x, c):
-        n, d = x.shape
-        c_sq = sqnorm(c)
-        pad = (-n) % chunk
-        xp = jnp.pad(x, ((0, pad), (0, 0)))
-
-        def body(xb):
-            sq = jnp.maximum(sqnorm(xb)[:, None] - 2.0 * (xb @ c.T) + c_sq,
-                             0.0)
-            return jnp.argmin(sq, 1), jnp.min(sq, 1)
-
-        a, dmin = jax.lax.map(body, xp.reshape(-1, chunk, d))
-        a = a.reshape(-1)[:n]
-        dmin = dmin.reshape(-1)[:n]
-        sums = jax.ops.segment_sum(x, a, num_segments=k)
-        counts = jax.ops.segment_sum(jnp.ones((n,), x.dtype), a,
-                                     num_segments=k)
-        energy = jnp.sum(dmin)
+    def step(x, w, c):
+        a, dmin = chunked_argmin_sqdist(x, c, chunk=chunk)
+        a = a.astype(jnp.int32)
+        sums = jax.ops.segment_sum(x * w[:, None], a, num_segments=k)
+        counts = jax.ops.segment_sum(w, a, num_segments=k)
+        energy = jnp.sum(w * dmin)
         for ax in reversed(data_axes):
             sums = jax.lax.psum(sums, ax)
             counts = jax.lax.psum(counts, ax)
             energy = jax.lax.psum(energy, ax)
         c_new = jnp.where(counts[:, None] > 0,
                           sums / jnp.maximum(counts, 1.0)[:, None], c)
-        return c_new, a.astype(jnp.int32), energy
+        return c_new, a, energy
 
-    return shard_map(step, mesh=mesh, in_specs=(xspec, rep),
-                     out_specs=(rep, P(data_axes), rep))
+    return shard_map(step, mesh=mesh, in_specs=(xspec, rowspec, rep),
+                     out_specs=(rep, rowspec, rep))
 
 
 def make_distributed_assign(mesh, k: int, *, data_axes=None,
                             chunk: int = 2048):
     """Sharded full assignment (no update) — seeds k²-means so the
     distributed trajectory matches the single-device one exactly."""
-    data_axes = data_axes or tuple(
-        a for a in mesh.axis_names if a in ("pod", "data"))
+    data_axes = _axes(mesh, data_axes)
+    xspec, rowspec, rep = clustering_specs(mesh, data_axes)
 
     def assign(x, c):
-        n, d = x.shape
-        c_sq = sqnorm(c)
-        pad = (-n) % chunk
-        xp = jnp.pad(x, ((0, pad), (0, 0)))
-
-        def body(xb):
-            sq = jnp.maximum(sqnorm(xb)[:, None] - 2.0 * (xb @ c.T) + c_sq,
-                             0.0)
-            return jnp.argmin(sq, 1)
-
-        a = jax.lax.map(body, xp.reshape(-1, chunk, d)).reshape(-1)[:n]
+        a, _ = chunked_argmin_sqdist(x, c, chunk=chunk)
         return a.astype(jnp.int32)
 
-    return shard_map(assign, mesh=mesh, in_specs=(P(data_axes, None), P()),
-                     out_specs=P(data_axes))
+    return shard_map(assign, mesh=mesh, in_specs=(xspec, rep),
+                     out_specs=rowspec)
+
+
+# ---------------------------------------------------------------------------
+# Shard-aware GDI seeding (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def make_distributed_gdi_seed(mesh, k: int, *, data_axes=None,
+                              split_iters: int = 2, bn: int = 8,
+                              interpret: bool = False,
+                              rounds: int | None = None,
+                              frontier: float = 0.125):
+    """Per-shard-group frontier rounds: every shard runs a fixed trip
+    count of greedy frontier rounds of the device GDI round step on its
+    local rows toward ``k`` *local* leaves (``core.gdi.gdi_fixed_rounds``
+    — its n/P-point sample of the data yields a full k-covering per
+    shard), with a per-shard fold of the key. Returns
+    ``seed(x, key) -> (leaf_ids, centers, weights)`` where ``leaf_ids``
+    lives in the global leaf space (shard p owns slots [p*k, (p+1)*k)) and
+    ``centers``/``weights`` gather to (P*k, ...) in the same slot order
+    (weights = member counts, 0 for dead slots).
+    """
+    from .gdi import gdi_fixed_rounds
+
+    data_axes = _axes(mesh, data_axes)
+    xspec, rowspec, rep = clustering_specs(mesh, data_axes)
+
+    def seed(x, key):
+        # flat shard index over the data axes (major-to-minor, matching
+        # the out-spec concatenation order)
+        idx = jnp.zeros((), jnp.int32)
+        for ax in data_axes:
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+        a, centers, _energies, sizes, nleaf = gdi_fixed_rounds(
+            x, k, jax.random.fold_in(key, idx), rounds=rounds,
+            split_iters=split_iters, bn=bn, impl="xla",
+            interpret=interpret, frontier=frontier)
+        live = jnp.arange(k, dtype=jnp.int32) < nleaf
+        weights = jnp.where(live, sizes, 0).astype(x.dtype)
+        return a + idx * k, centers, weights
+
+    # per-shard (k, ...) leaf tables concatenate over the data axes in
+    # the same major-to-minor order as the flat shard index above
+    return shard_map(seed, mesh=mesh, in_specs=(xspec, rep),
+                     out_specs=(rowspec, xspec, rowspec),
+                     check_rep=False)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def _gdi_merge(centers_g, weights_g, k: int, iters: int = 8):
+    """Weighted Lloyd reduction of the P·k per-shard leaf centers down to
+    k meta-centers (k-means||-style recluster step): replicated and tiny
+    — O(P·k²·d) per iteration over center rows only, never points. Dead
+    slots carry weight 0 and cannot move a meta-center. Returns
+    (meta (k, d), leaf2meta (P*k,))."""
+    # init from shard 0's leaves — a diverse k-covering of the data (the
+    # k heaviest leaves globally would duplicate the same dense regions
+    # across shards); dead slots (weight 0, shard stalled short of k
+    # leaves) substitute the heaviest live leaves so no meta-center
+    # starts on a zero-vector slot
+    _, heavy = jax.lax.top_k(weights_g, k)
+    c = jnp.where((weights_g[:k] > 0)[:, None], centers_g[:k],
+                  centers_g[heavy])
+    a = jnp.zeros((centers_g.shape[0],), jnp.int32)
+    for _ in range(iters):
+        a = jnp.argmin(pairwise_sqdist(centers_g, c), axis=1)
+        sums = jax.ops.segment_sum(centers_g * weights_g[:, None], a,
+                                   num_segments=k)
+        cnts = jax.ops.segment_sum(weights_g, a, num_segments=k)
+        c = jnp.where(cnts[:, None] > 0,
+                      sums / jnp.maximum(cnts, 1.0)[:, None], c)
+    return c, a.astype(jnp.int32)
+
+
+def _sharded_gdi_seed(x, k: int, mesh, key, data_axes, counter, *,
+                      split_iters: int = 2, interpret: bool = False,
+                      frontier: float = 0.125, merge_iters: int = 8):
+    """``init="gdi"`` seeding: greedy frontier rounds per shard-group,
+    then a weighted center-level merge of the P·k local leaves down to k
+    meta-centers; points inherit their leaf's meta-cluster, so no
+    full-assignment pass over the points is needed. Returns
+    (centers (k, d), a0 (n_pad,) sharded)."""
+    from ..kernels.ops import grouped_capacity
+    from .gdi import _charge_round, frontier_round_bound
+
+    n_pad, d = x.shape
+    nsh = _nshards(mesh, data_axes)
+    n_loc = n_pad // nsh
+    bn = 8            # xla impl: minimize grouped-layout padding
+    # +2 slack rounds absorb failed splits on degenerate leaves; surplus
+    # rounds no-op once a shard reaches k leaves
+    rounds = frontier_round_bound(k, frontier) + 2
+    seed_fn = jax.jit(make_distributed_gdi_seed(
+        mesh, k, data_axes=data_axes, split_iters=split_iters, bn=bn,
+        interpret=interpret, rounds=rounds, frontier=frontier))
+    leaf_ids, centers_g, weights_g = seed_fn(x, key)
+    r_loc = grouped_capacity(n_loc, k, bn) * bn
+    for _ in range(rounds * nsh):          # every shard executes each round
+        _charge_round(counter, r_loc, n_loc, d, split_iters)
+    meta, leaf2meta = _gdi_merge(centers_g, weights_g, k=k,
+                                 iters=merge_iters)
+    counter.add_distances(merge_iters * centers_g.shape[0] * k)
+    return meta, leaf2meta[leaf_ids]
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
 
 
 def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
                             max_iters: int = 50, init_centers=None,
-                            init: str = "random"):
-    """Host-loop driver around the sharded step. x_global is placed
-    sharded; centers replicated. Returns (centers, assignment, history).
-    Trajectory-equivalent to the single-device fit_k2means from the same
-    init (seeded by assignment only, no update).
+                            init: str = "random", backend: str = "pallas",
+                            counter: OpCounter | None = None,
+                            monitor_every: int = 1, chunk: int = 2048,
+                            bn: int | None = None, bkn: int = 8,
+                            interpret: bool | None = None,
+                            data_axes=None,
+                            split_iters: int = 2) -> KMeansResult:
+    """Host-loop driver around the sharded engine step.
 
-    init: "random" samples k points; "gdi" / "gdi_parallel" run the
-    frontier round step (core.gdi, DESIGN.md §4) on the replicated array
-    before sharding — the divisive init provides the seeding assignment
-    for free, so the full-assignment pass is skipped. Ignored when
-    ``init_centers`` is given.
+    Points (and the per-point bound state) are placed row-sharded over
+    the mesh's data axes, centers replicated; uneven row counts are
+    padded with duplicate rows carrying weight 0 (never perturbing
+    centers, energy, or convergence). Trajectory-equivalent to the
+    single-device ``fit_k2means`` with the same ``backend`` from the
+    same init (seeded by assignment only, no update).
+
+    backend: "pallas" (per-shard fused engine step through the tiled
+    candidate kernel), "xla" (per-shard bounded engine step, portable),
+    or "legacy" (the bound-free restricted baseline step). init:
+    "random" samples k points; "kmeanspp" runs the replicated host-loop
+    seeding; "gdi" runs the frontier round step per shard-group (the
+    divisive assignment seeds the loop for free, skipping the
+    full-assignment pass); "gdi_replicated" keeps the replicated device
+    GDI baseline. Ignored when ``init_centers`` is given.
+
+    Per-iteration host traffic is three replicated scalars (recompute
+    count, changed count, energy), read every ``monitor_every``
+    iterations; convergence is the psum'd changed count hitting zero.
+    Counted ops charge per-shard recomputed points exactly like the
+    single-device backends (k² + n_need·k_n + k distances + n additions
+    per iteration).
     """
+    counter = counter or OpCounter()
+    if monitor_every < 1:
+        raise ValueError(f"monitor_every must be >= 1, got {monitor_every}")
+    x_global = jnp.asarray(x_global)
     n, d = x_global.shape
-    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-    xsh = NamedSharding(mesh, P(data_axes, None))
-    rep = NamedSharding(mesh, P())
-    x = jax.device_put(x_global, xsh)
+    kn = min(kn, k)
+    data_axes = _axes(mesh, data_axes)
+    nsh = _nshards(mesh, data_axes)
+    pad = (-n) % nsh
+    n_pad = n + pad
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    xspec, rowspec, rep = clustering_specs(mesh, data_axes)
+    xsh = NamedSharding(mesh, xspec)
+    rowsh = NamedSharding(mesh, rowspec)
+    repsh = NamedSharding(mesh, rep)
+    # duplicate-row padding: weight 0 in the iteration; duplicates are
+    # harmless to the divisive seeding (they only re-weight split scans)
+    xp = jnp.concatenate([x_global, x_global[:pad]]) if pad else x_global
+    x = jax.device_put(xp, xsh)
+    w = jax.device_put(
+        jnp.concatenate([jnp.ones((n,), x.dtype),
+                         jnp.zeros((pad,), x.dtype)]) if pad
+        else jnp.ones((n,), x.dtype), rowsh)
+
+    # --- initialization ---------------------------------------------------
     a0 = None
     if init_centers is None:
-        if init in ("gdi", "gdi_parallel"):
-            from .gdi import gdi_device_init, gdi_parallel_init
-            fn = gdi_parallel_init if init == "gdi_parallel" \
-                else gdi_device_init
-            init_centers, a0 = fn(x_global, k, key)
-        elif init == "random":
+        if init == "random":
             idx = jax.random.choice(key, n, shape=(k,), replace=False)
             init_centers = x_global[idx]
+        elif init == "kmeanspp":
+            from .kmeanspp import kmeanspp_init
+            init_centers = kmeanspp_init(x_global, k, key, counter)
+        elif init == "gdi":
+            init_centers, a0 = _sharded_gdi_seed(
+                x, k, mesh, key, data_axes, counter,
+                split_iters=split_iters, interpret=interpret)
+        elif init == "gdi_replicated":
+            from .gdi import gdi_device_init
+            init_centers, a_real = gdi_device_init(x_global, k, key,
+                                                   counter=counter)
+            a0 = jnp.concatenate([a_real, a_real[:pad]]) if pad else a_real
         else:
-            raise ValueError(f"unknown init {init!r}")
-    c = jax.device_put(init_centers, rep)
-    # assignment seeding (GDI's comes free with its centers), then
-    # restricted iterations
-    k2 = jax.jit(make_distributed_k2means_step(mesh, kn, k))
-    if a0 is not None:
-        a = jax.device_put(a0.astype(jnp.int32),
-                           NamedSharding(mesh, P(data_axes)))
+            raise ValueError(f"unknown init {init!r}; expected one of "
+                             f"{_SHARDED_INITS}")
+    c = jax.device_put(jnp.asarray(init_centers), repsh)
+    if a0 is None:
+        assign0 = jax.jit(make_distributed_assign(mesh, k,
+                                                  data_axes=data_axes,
+                                                  chunk=chunk))
+        a0 = assign0(x, c)
+        counter.add_distances(n * k)
+    a0 = jax.device_put(jnp.asarray(a0).astype(jnp.int32), rowsh)
+
+    # --- iteration: engine step under shard_map (or the legacy baseline) -
+    if backend == "legacy":
+        legacy = jax.jit(make_distributed_k2means_step(
+            mesh, kn, k, data_axes=data_axes, chunk=chunk))
+        a_cur = a0
+    elif backend in ("xla", "pallas"):
+        step = K2Step(k=k, kn=kn, backend=backend, mesh=mesh,
+                      data_axes=data_axes, chunk=chunk, bn=bn, bkn=bkn,
+                      interpret=interpret).build(n_pad)
+        state = K2State(c, a0,
+                        jax.device_put(jnp.zeros((n_pad,), x.dtype), rowsh),
+                        jax.device_put(jnp.zeros((n_pad,), x.dtype), rowsh),
+                        jax.device_put(jnp.full((k, kn), -1, jnp.int32),
+                                       repsh),
+                        jnp.array(True))
     else:
-        assign0 = jax.jit(make_distributed_assign(mesh, k))
-        a = assign0(x, c)
+        raise ValueError(f"unknown backend {backend!r}; expected "
+                         "'pallas', 'xla' or 'legacy'")
+
     history = []
-    prev = None
-    for _ in range(max_iters):
-        c, a, e = k2(x, c, a)
-        history.append(float(e))
-        a_host = jax.device_get(a)
-        if prev is not None and (a_host == prev).all():
-            break
-        prev = a_host
-    return c, a, history
+    pending = []         # device-side stats; host-read every monitor_every
+    it_done = 0
+    converged = False
+
+    def flush():
+        nonlocal it_done, converged
+        for n_need, changed, energy in jax.device_get(pending):
+            it_done += 1
+            counter.add_distances(k * k + int(n_need) * kn + k)
+            counter.add_additions(n)
+            history.append((counter.snapshot(), float(energy)))
+            if it_done > 1 and int(changed) == 0:
+                converged = True   # fixed point: later pending iterations
+                break              # are identical states, drop them
+        pending.clear()
+
+    for it in range(1, max_iters + 1):
+        if backend == "legacy":
+            c, a_cur, energy, changed = legacy(x, w, c, a_cur)
+            pending.append((n, changed, energy))   # bound-free: all rows
+        else:
+            state, stats = step(x, w, state)
+            pending.append(stats)
+        if it % monitor_every == 0 or it == max_iters:
+            flush()
+            if converged:
+                break
+
+    if backend == "legacy":
+        a_final = a_cur
+    else:
+        c, a_final = state.c, state.a
+    if history:
+        energy = history[-1][1]
+    else:
+        energy = float(jnp.sum(w * sqnorm(x - c[a_final])))
+    assignment = jnp.asarray(jax.device_get(a_final)[:n])
+    return KMeansResult(c, assignment, energy, it_done, counter.total,
+                        history)

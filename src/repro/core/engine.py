@@ -1,0 +1,235 @@
+"""Engine layer: ONE k²-means iteration, any backend, any placement.
+
+DESIGN.md §8. The paper's bounded iteration (center k_n-NN graph →
+k_n-restricted assignment with Hamerly bounds → segment-sum mean update →
+bound adjustment) is written once here (:func:`k2_iteration`) and built
+into an executable step by :class:`K2Step`, parameterized on
+
+``backend``
+    ``"xla"`` — portable chunked candidate gathers
+    (:func:`core.distance.chunked_candidate_top2`);
+    ``"pallas"`` — the fused TPU fast path (device cluster grouping +
+    bound-gated tiled candidate kernel,
+    :func:`kernels.ops.k2_bounded_assign`).
+
+``placement``
+    single-device (``mesh=None``) or a jax mesh: the same body runs under
+    ``shard_map`` with points and bound state ``(a, u, lo)`` row-sharded
+    over the flattened data axes, centers and the k_n-NN graph replicated
+    (O(k²d) is tiny next to O(n·k_n·d / P) per shard), and the mean
+    update / step statistics reduced by a hierarchical psum (innermost
+    data axis first ⇒ ICI before DCN).
+
+The step carries a per-point weight vector ``w`` (1 = real row, 0 =
+padding) so uneven shards (n not divisible by the device count) pad rows
+without perturbing centers, energy, or convergence counts. Step
+statistics — recompute count, changed-assignment count, post-update
+energy — are *device* scalars: drivers read them back every
+``monitor_every`` iterations and never transfer a full assignment
+between iterations (the psum'd ``changed`` count is the convergence
+signal, DESIGN.md §4.3 / §7).
+
+Per-shard recomputation is block-granular on the pallas backend, which
+can only tighten bounds (recomputation is exact — DESIGN.md §3.1), so
+every (backend, placement) combination produces identical assignments
+from the same init, up to f32 reduction-order effects on adversarially
+tied candidates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from ..compat import shard_map
+from ..launch.mesh import dp_axes
+from ..launch.sharding import clustering_specs
+from .distance import chunked_candidate_top2, pairwise_sqdist, sqnorm
+
+
+class K2State(typing.NamedTuple):
+    """Bound-carried loop state of the iteration (DESIGN.md §3.1/§8).
+
+    On a mesh placement ``a``/``u``/``lo`` are row-sharded with the
+    points; ``c``/``prev_nb``/``first`` are replicated.
+    """
+    c: jax.Array        # (k, d) centers
+    a: jax.Array        # (n,) assignment
+    u: jax.Array        # (n,) upper bound on the assigned-center distance
+    lo: jax.Array       # (n,) lower bound on the second-closest candidate
+    prev_nb: jax.Array  # (k, kn) previous neighbor lists (-1 = invalid)
+    first: jax.Array    # () bool: force a full recompute (iteration 1)
+
+
+class StepStats(typing.NamedTuple):
+    """Replicated device scalars; host-read every ``monitor_every``."""
+    n_need: jax.Array   # () points meeting the exact recompute condition
+    changed: jax.Array  # () assignment changes across the iteration
+    energy: jax.Array   # () clustering energy after the update step
+
+
+def init_state(centers: jax.Array, assignment: jax.Array,
+               kn: int) -> K2State:
+    """Stale-zero bounds (``first`` forces a full recompute on iteration
+    1) and an all-invalid neighbor graph."""
+    n = assignment.shape[0]
+    k = centers.shape[0]
+    dtype = centers.dtype
+    return K2State(centers, assignment.astype(jnp.int32),
+                   jnp.zeros((n,), dtype), jnp.zeros((n,), dtype),
+                   jnp.full((k, kn), -1, jnp.int32), jnp.array(True))
+
+
+def k2_iteration(x: jax.Array, w: jax.Array, state: K2State, *, kn: int,
+                 backend: str = "xla", chunk: int = 2048, bn: int = 128,
+                 bkn: int = 8, interpret: bool = False,
+                 psum_axes: tuple = ()) -> tuple[K2State, StepStats]:
+    """The shared iteration body (pure; trace-time parameters only).
+
+    With ``psum_axes=()`` this is the single-device step; under
+    ``shard_map`` it is the per-shard program and ``psum_axes`` names the
+    data axes of the hierarchical reduction (reduced innermost-last ⇒
+    ICI before DCN).
+    """
+    c, a, u, lo, prev_nb, first = state
+    k = c.shape[0]
+    wpos = w > 0
+
+    # --- 1. k_n-NN graph over centers (self-inclusive: d(c,c)=0 wins);
+    # replicated computation on every shard -----------------------------
+    if backend == "pallas":
+        from ..kernels.center_knn import center_sqdist
+        cc_sq = center_sqdist(c, interpret=interpret)
+    else:
+        cc_sq = pairwise_sqdist(c, c)
+    _, neighbors = jax.lax.top_k(-cc_sq, kn)             # (k, kn)
+    neighbors = neighbors.astype(jnp.int32)
+    list_changed = jnp.any(neighbors != prev_nb, axis=1)   # (k,)
+
+    # --- 2. bounded assignment over candidate neighbourhoods (local rows;
+    # padding rows never recompute) --------------------------------------
+    need = ((u >= lo) | list_changed[a] | first) & wpos
+    if backend == "pallas":
+        from ..kernels.ops import k2_bounded_assign
+        a_new, u_new, lo_new = k2_bounded_assign(
+            x, c, neighbors, a, u, lo, need, bn=bn, bkn=bkn,
+            interpret=interpret)
+    else:
+        cand = neighbors[a]                              # (n, kn)
+        a_cmp, d1, d2 = chunked_candidate_top2(x, c, cand, chunk=chunk)
+        a_new = jnp.where(need, a_cmp, a)
+        u_new = jnp.where(need, d1, u)
+        lo_new = jnp.where(need, d2, lo)
+
+    # --- 3. weighted mean update: local segment sums + hierarchical psum -
+    sums = jax.ops.segment_sum(x * w[:, None], a_new, num_segments=k)
+    counts = jax.ops.segment_sum(w, a_new, num_segments=k)
+    for ax in reversed(psum_axes):
+        sums = jax.lax.psum(sums, ax)
+        counts = jax.lax.psum(counts, ax)
+    c_next = jnp.where(counts[:, None] > 0,
+                       sums / jnp.maximum(counts, 1.0)[:, None], c)
+
+    # --- 4. Hamerly bound adjustment for the next iteration --------------
+    delta = jnp.sqrt(jnp.maximum(sqnorm(c_next - c), 0.0))   # (k,) movement
+    delta_nb = jnp.max(delta[neighbors], axis=1)             # per-nbhood
+    u_adj = u_new + delta[a_new]
+    lo_adj = lo_new - delta_nb[a_new]
+
+    # --- 5. device-resident step statistics ------------------------------
+    n_need = jnp.sum(need)
+    changed = jnp.sum((a_new != a) & wpos)
+    energy = jnp.sum(w * sqnorm(x - c_next[a_new]))
+    for ax in reversed(psum_axes):
+        n_need = jax.lax.psum(n_need, ax)
+        changed = jax.lax.psum(changed, ax)
+        energy = jax.lax.psum(energy, ax)
+
+    next_state = K2State(c_next, a_new, u_adj, lo_adj, neighbors,
+                         jnp.zeros((), bool))
+    return next_state, StepStats(n_need, changed, energy)
+
+
+@functools.partial(jax.jit, static_argnames=("kn", "backend", "chunk",
+                                             "bn", "bkn", "interpret"))
+def _single_step(x, w, state, kn, backend, chunk, bn, bkn, interpret):
+    return k2_iteration(x, w, state, kn=kn, backend=backend, chunk=chunk,
+                        bn=bn, bkn=bkn, interpret=interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class K2Step:
+    """Builder for the k²-means iteration step.
+
+    ``K2Step(k=.., kn=.., backend=.., mesh=..).build(n)`` returns a
+    jitted ``step(x, w, state) -> (state', stats)`` with the
+    :class:`K2State` / :class:`StepStats` contract above. ``n`` is the
+    (padded) global row count — on a mesh it must divide evenly over the
+    flattened data axes; drivers pad rows and mark them ``w=0``.
+    """
+    k: int
+    kn: int
+    backend: str = "xla"          # "xla" | "pallas"
+    mesh: typing.Any = None       # jax Mesh or None (single-device)
+    data_axes: tuple | None = None
+    chunk: int = 2048             # xla backend: assignment chunk rows
+    bn: int | None = None         # pallas backend: point-block size
+    bkn: int = 8                  # pallas backend: candidate-tile width
+    interpret: bool | None = None  # None -> interpret off-TPU
+
+    def axes(self) -> tuple:
+        if self.mesh is None:
+            return ()
+        return tuple(self.data_axes) if self.data_axes \
+            else dp_axes(self.mesh)
+
+    def shards(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.axes()) \
+            if self.mesh is not None else 1
+
+    def build(self, n: int):
+        if self.backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             "expected 'xla' or 'pallas'")
+        kn = min(self.kn, self.k)
+        interpret = self.interpret
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+
+        if self.mesh is None:
+            from ..kernels.ops import choose_group_bn
+            bn = self.bn or choose_group_bn(n, self.k)
+            return functools.partial(
+                _single_step, kn=kn, backend=self.backend,
+                chunk=self.chunk, bn=bn, bkn=self.bkn,
+                interpret=interpret)
+
+        axes = self.axes()
+        nsh = self.shards()
+        if n % nsh:
+            raise ValueError(
+                f"n={n} must divide over {nsh} shards; pad rows (w=0) "
+                "before building the step")
+        from ..kernels.ops import choose_group_bn
+        bn = self.bn or choose_group_bn(n // nsh, self.k)
+        xspec, rowspec, rep = clustering_specs(self.mesh, axes)
+        state_specs = K2State(rep, rowspec, rowspec, rowspec, rep, rep)
+        body = functools.partial(
+            k2_iteration, kn=kn, backend=self.backend, chunk=self.chunk,
+            bn=bn, bkn=self.bkn, interpret=interpret, psum_axes=axes)
+        # check_rep=False: pallas_call has no replication rule; the
+        # replicated outputs (centers, neighbor lists, stats) are psum'd
+        # or shard-identical by construction.
+        sharded = shard_map(body, mesh=self.mesh,
+                            in_specs=(xspec, rowspec, state_specs),
+                            out_specs=(state_specs,
+                                       StepStats(rep, rep, rep)),
+                            check_rep=False)
+        return jax.jit(sharded)
+
+
+__all__ = ["K2State", "K2Step", "StepStats", "init_state", "k2_iteration"]

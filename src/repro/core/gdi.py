@@ -465,14 +465,64 @@ def gdi_device_init(x: jax.Array, k: int, key: jax.Array, *,
     return centers, a
 
 
+def frontier_round_bound(k: int, frontier: float) -> int:
+    """Rounds the frontier schedule needs to reach ``k`` leaves when every
+    flagged leaf splits (the optimistic trip count — mirrors
+    ``gdi_round_step``'s t formula with n_elig = nleaf). Fixed-trip-count
+    callers add slack rounds to absorb failed splits; surplus rounds
+    no-op once nleaf == k."""
+    leaves, rounds = 1, 0
+    while leaves < k:
+        t = min(leaves, k - leaves)
+        if frontier < 1.0:
+            t = min(t, max(1, int(frontier * min(leaves, k - leaves))))
+        leaves += t
+        rounds += 1
+    return rounds
+
+
+def gdi_fixed_rounds(x: jax.Array, kcap: int, key: jax.Array, *,
+                     rounds: int | None = None, split_iters: int = 2,
+                     bn: int = 8, impl: str = "xla",
+                     interpret: bool = False, frontier: float = 1.0):
+    """Traceable GDI: a *fixed* trip count of frontier rounds toward
+    ``kcap`` leaves, with no host reads — the per-shard seeding program
+    of the distributed path (``core.distributed``, DESIGN.md §7): every
+    shard-group runs this under shard_map on its local rows, then the
+    driver merges the per-shard leaf centers globally. ``rounds``
+    defaults to :func:`frontier_round_bound` for the given ``frontier``
+    (``1.0`` = blind doubling, ceil(log2 kcap) rounds; the greedy
+    ``0.125`` default of ``gdi_device_init`` takes more rounds but keeps
+    its energy fidelity). Returns the raw round-step state
+    ``(a, centers, energies, sizes, nleaf)``.
+    """
+    if rounds is None:
+        rounds = frontier_round_bound(kcap, frontier)
+    state = _device_state(x, kcap)
+    if rounds == 0:
+        return state
+    # lax.scan over round keys: the round program is traced/compiled once
+    # regardless of the trip count
+
+    def body(st, sub):
+        return tuple(gdi_round_step(x, *st, sub, k=kcap, bn=bn,
+                                    split_iters=split_iters, impl=impl,
+                                    interpret=interpret,
+                                    frontier=frontier)), None
+
+    state, _ = jax.lax.scan(body, state, jax.random.split(key, rounds))
+    return state
+
+
 def gdi_parallel_init(x: jax.Array, k: int, key: jax.Array, *,
                       split_iters: int = 2,
                       counter: OpCounter | None = None,
                       bn: int | None = None, impl: str | None = None,
                       interpret: bool | None = None):
     """Round-parallel divisive variant (paper footnote 2): every round
-    splits *all* current leaves at once — O(log2 k) rounds — the scalable
-    flavour used by the distributed clustering path. Runs on the same
+    splits *all* current leaves at once — O(log2 k) rounds. (The
+    distributed path seeds per shard through ``gdi_fixed_rounds`` with
+    the greedy frontier instead; see core.distributed.) Runs on the same
     device round step as ``gdi_device_init`` with the frontier cap off,
     over a power-of-two slot capacity; if k is not a power of two the k
     highest-energy leaves are kept and the rest reassigned to the nearest

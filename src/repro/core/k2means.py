@@ -22,7 +22,7 @@ O(n k_n d) term towards O(n d) at convergence.
 Two backends execute the iteration (``fit_k2means(..., backend=...)``):
 
 ``"xla"``
-    Pure-XLA ``lax.map`` over candidate gathers; the portable reference.
+    Pure-XLA chunked candidate gathers; the portable reference.
 
 ``"pallas"``
     One jitted device step chains center_knn -> cluster-grouped tiled
@@ -42,6 +42,11 @@ Two backends execute the iteration (``fit_k2means(..., backend=...)``):
     (Pallas MXU kernel vs XLA einsum), so exact parity is conditional on
     both ranking near-tied k_n-th neighbours identically — measure-zero
     on real data, but not guaranteed on adversarial ties (DESIGN.md §3.1).
+
+Both backends are thin wrappers over the engine layer
+(``core.engine.k2_iteration``, DESIGN.md §8) — the same body that the
+distributed shard_map step executes per shard
+(``core.distributed.fit_distributed_k2means`` / ``api.fit(mesh=...)``).
 """
 from __future__ import annotations
 
@@ -50,86 +55,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .distance import pairwise_sqdist, sqnorm, clustering_energy
-from .lloyd import KMeansResult, update_centers
+from .distance import clustering_energy
+from .engine import K2State, init_state, k2_iteration
+from .lloyd import KMeansResult
 from .opcount import OpCounter
-
-
-def _update_and_adjust(x, c, a, a_new, neighbors, u_new, lo_new):
-    """Shared tail of both backends: mean update, then the Hamerly bound
-    adjustment for the next iteration (u += delta[a'], l -= max neighbourhood
-    movement). Returns (c_next, u_adj, lo_adj, changed)."""
-    c_next = update_centers(x, a_new, c)
-    delta = jnp.sqrt(jnp.maximum(sqnorm(c_next - c), 0.0))   # (k,) movements
-    delta_nb = jnp.max(delta[neighbors], axis=1)             # per-neighbourhood
-    u_adj = u_new + delta[a_new]
-    lo_adj = lo_new - delta_nb[a_new]
-    changed = jnp.sum(a_new != a)
-    return c_next, u_adj, lo_adj, changed
-
-
-def _init_state(x, centers, assignment, kn: int):
-    """Loop state shared by both backends: stale-zero bounds (`first` forces
-    a full recompute on iteration 1) and an all-invalid neighbor graph."""
-    n = x.shape[0]
-    k = centers.shape[0]
-    a = assignment.astype(jnp.int32)
-    u = jnp.zeros((n,), x.dtype)
-    lo = jnp.zeros((n,), x.dtype)
-    prev_nb = jnp.full((k, kn), -1, jnp.int32)
-    return a, u, lo, prev_nb, jnp.array(True)
 
 
 @functools.partial(jax.jit, static_argnames=("kn", "chunk"))
 def k2means_step(x, c, a, u, lo, prev_neighbors, first, kn: int,
                  chunk: int = 2048):
-    """One k²-means iteration. Returns (c', a', u', lo', neighbors, stats)."""
-    n, d = x.shape
-    k = c.shape[0]
+    """One k²-means iteration (portable XLA backend; engine-layer body).
 
-    # --- 1. k_n-NN graph over centers (self-inclusive: d(c,c)=0 wins) -----
-    cc_sq = pairwise_sqdist(c, c)
-    _, neighbors = jax.lax.top_k(-cc_sq, kn)                 # (k, kn)
-    list_changed = jnp.any(neighbors != prev_neighbors, axis=1)   # (k,)
-
-    # --- 2. bounded assignment over candidate neighbourhoods --------------
-    need = (u >= lo) | list_changed[a] | first               # (n,) bool
-    cand = neighbors[a]                                      # (n, kn)
-    c_sq = sqnorm(c)
-    x_sq = sqnorm(x)
-
-    pad = (-n) % chunk
-    xp = jnp.pad(x, ((0, pad), (0, 0)))
-    xsqp = jnp.pad(x_sq, (0, pad))
-    candp = jnp.pad(cand, ((0, pad), (0, 0)))
-
-    def body(args):
-        xb, xsqb, candb = args
-        cb = c[candb]                                        # (chunk, kn, d)
-        cross = jnp.einsum("nd,nkd->nk", xb, cb)
-        sq = jnp.maximum(xsqb[:, None] - 2.0 * cross + c_sq[candb], 0.0)
-        dist = jnp.sqrt(sq)
-        top2_neg, top2_idx = jax.lax.top_k(-dist, 2)
-        d1, d2 = -top2_neg[:, 0], -top2_neg[:, 1]
-        a_new = jnp.take_along_axis(candb, top2_idx[:, :1], axis=1)[:, 0]
-        return a_new, d1, d2
-
-    a_cmp, d1, d2 = jax.lax.map(
-        body, (xp.reshape(-1, chunk, d), xsqp.reshape(-1, chunk),
-               candp.reshape(-1, chunk, kn)))
-    a_cmp = a_cmp.reshape(-1)[:n]
-    d1 = d1.reshape(-1)[:n]
-    d2 = d2.reshape(-1)[:n]
-
-    a_new = jnp.where(need, a_cmp, a)
-    u_new = jnp.where(need, d1, u)
-    lo_new = jnp.where(need, d2, lo)
-    n_computed = jnp.sum(need)
-
-    # --- 3. update step + bound adjustment for the next iteration ---------
-    c_next, u_adj, lo_adj, changed = _update_and_adjust(
-        x, c, a, a_new, neighbors, u_new, lo_new)
-    return c_next, a_new, u_adj, lo_adj, neighbors, (n_computed, changed)
+    Returns (c', a', u', lo', neighbors, stats) with stats the device
+    tuple (n_computed, changed, energy).
+    """
+    w = jnp.ones((x.shape[0],), x.dtype)
+    state = K2State(c, a, u, lo, prev_neighbors, first)
+    st, stats = k2_iteration(x, w, state, kn=kn, backend="xla",
+                             chunk=chunk)
+    return st.c, st.a, st.u, st.lo, st.prev_nb, tuple(stats)
 
 
 @functools.partial(jax.jit,
@@ -142,49 +86,16 @@ def k2means_pallas_step(x, c, a, u, lo, prev_neighbors, first, kn: int,
     (Pallas center_sqdist + top_k), device-side cluster grouping, the tiled
     candidate-assignment kernel with per-block Hamerly skip flags,
     segment-sum center update, and the bound adjustment for the next
-    iteration. Returns (c', a', u', lo', neighbors, stats) with stats a
-    device tuple (n_need, changed, energy) — nothing here forces a host
-    sync; the fit loop reads stats every ``monitor_every`` iterations.
+    iteration (engine-layer body, ``core.engine.k2_iteration``). Returns
+    (c', a', u', lo', neighbors, stats) with stats a device tuple
+    (n_need, changed, energy) — nothing here forces a host sync; the fit
+    loop reads stats every ``monitor_every`` iterations.
     """
-    from ..kernels.center_knn import center_sqdist
-    from ..kernels.ops import (group_by_cluster_device, k2_assign_grouped,
-                               scatter_from_grouped)
-
-    n, d = x.shape
-    k = c.shape[0]
-
-    # --- 1. k_n-NN graph over centers (self-inclusive: d(c,c)=0 wins) -----
-    cc_sq = center_sqdist(c, interpret=interpret)
-    _, neighbors = jax.lax.top_k(-cc_sq, kn)                 # (k, kn)
-    neighbors = neighbors.astype(jnp.int32)
-    list_changed = jnp.any(neighbors != prev_neighbors, axis=1)   # (k,)
-
-    # --- 2. grouped, tiled, bound-gated assignment ------------------------
-    need = (u >= lo) | list_changed[a] | first               # (n,) bool
-    perm, b2c = group_by_cluster_device(a, k, bn)
-    valid = perm >= 0
-    safe_perm = jnp.maximum(perm, 0)
-    needp = need[safe_perm] & valid
-    nb = perm.shape[0] // bn
-    # a block is skipped iff no point in it needs recomputation; trailing
-    # all-padding capacity blocks are skipped for free (needp all False)
-    skip = (~jnp.any(needp.reshape(nb, bn), axis=1)).astype(jnp.int32)
-    a_new, d1_sq, d2_sq = k2_assign_grouped(
-        x, c, neighbors, perm, b2c, skip, a, u * u, lo * lo,
-        bn=bn, bkn=bkn, interpret=interpret)
-    # points in non-skipped blocks got exact distances; keep the stale (but
-    # valid) bounds elsewhere instead of a sqrt(u^2) roundtrip
-    fresh = scatter_from_grouped(perm, jnp.repeat(skip == 0, bn),
-                                 jnp.zeros((n,), bool))
-    u_new = jnp.where(fresh, jnp.sqrt(d1_sq), u)
-    lo_new = jnp.where(fresh, jnp.sqrt(d2_sq), lo)
-    n_need = jnp.sum(need)
-
-    # --- 3. update step + bound adjustment for the next iteration ---------
-    c_next, u_adj, lo_adj, changed = _update_and_adjust(
-        x, c, a, a_new, neighbors, u_new, lo_new)
-    energy = clustering_energy(x, c_next, a_new)
-    return c_next, a_new, u_adj, lo_adj, neighbors, (n_need, changed, energy)
+    w = jnp.ones((x.shape[0],), x.dtype)
+    state = K2State(c, a, u, lo, prev_neighbors, first)
+    st, stats = k2_iteration(x, w, state, kn=kn, backend="pallas",
+                             bn=bn, bkn=bkn, interpret=interpret)
+    return st.c, st.a, st.u, st.lo, st.prev_nb, tuple(stats)
 
 
 def _fit_k2means_pallas(x, centers, assignment, *, kn, max_iters, counter,
@@ -196,8 +107,7 @@ def _fit_k2means_pallas(x, centers, assignment, *, kn, max_iters, counter,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     bn = bn or choose_group_bn(n, k)
-    c = centers
-    a, u, lo, prev_nb, first = _init_state(x, centers, assignment, kn)
+    c, a, u, lo, prev_nb, first = init_state(centers, assignment, kn)
     history = []
     pending = []          # device-side stats; host-read every monitor_every
     it_done = 0
@@ -267,20 +177,20 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
     if backend != "xla":
         raise ValueError(f"unknown backend {backend!r}; "
                          "expected 'xla' or 'pallas'")
-    c = centers
-    a, u, lo, prev_nb, first = _init_state(x, centers, assignment, kn)
+    c, a, u, lo, prev_nb, first = init_state(centers, assignment, kn)
     history = []
     it = 0
     for it in range(1, max_iters + 1):
-        c, a, u, lo, prev_nb, (n_cmp, changed) = k2means_step(
+        c, a, u, lo, prev_nb, (n_cmp, changed, energy) = k2means_step(
             x, c, a, u, lo, prev_nb, first, kn, chunk)
         first = jnp.array(False)
         # Paper accounting: k^2 graph distances + k_n distances per
         # recomputed point + k movement norms + n additions (update step).
         counter.add_distances(k * k + int(n_cmp) * kn + k)
         counter.add_additions(n)
-        energy = float(clustering_energy(x, c, a))   # monitoring, not counted
-        history.append((counter.snapshot(), energy))
+        # post-update energy from the step's device stats (monitoring,
+        # not counted)
+        history.append((counter.snapshot(), float(energy)))
         # converged when assignments are stable ACROSS an update; iteration 1
         # trivially reports changed==0 when the initial assignment was
         # nearest-w.r.t.-init-centers (centers still moved in its update)

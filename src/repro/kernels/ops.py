@@ -137,6 +137,40 @@ def scatter_from_grouped(perm: jax.Array, values: jax.Array,
     return prev.at[idx].set(values, mode="drop")
 
 
+def k2_bounded_assign(x: jax.Array, c: jax.Array, neighbors: jax.Array,
+                      a: jax.Array, u: jax.Array, lo: jax.Array,
+                      need: jax.Array, *, bn: int, bkn: int = 8,
+                      interpret: bool | None = None):
+    """Bound-gated grouped tiled assignment — the Pallas inner loop of the
+    k²-means iteration (engine layer, DESIGN.md §3 + §8).
+
+    Builds the cluster-grouped layout on device, derives the per-block
+    Hamerly skip flags from ``need`` (a block is skipped iff no point in it
+    needs recomputation), runs the tiled candidate kernel, and refreshes
+    the true-distance bounds only on fresh (recomputed) lanes so stale
+    lanes avoid the sqrt(u^2) roundtrip. u/lo are true distances in and
+    out. Returns (a_new, u_new, lo_new) in original point order.
+    """
+    n = x.shape[0]
+    k = c.shape[0]
+    perm, b2c = group_by_cluster_device(a, k, bn)
+    valid = perm >= 0
+    safe_perm = jnp.maximum(perm, 0)
+    needp = need[safe_perm] & valid
+    nb = perm.shape[0] // bn
+    # trailing all-padding capacity blocks are skipped for free (needp all
+    # False)
+    skip = (~jnp.any(needp.reshape(nb, bn), axis=1)).astype(jnp.int32)
+    a_new, d1_sq, d2_sq = k2_assign_grouped(
+        x, c, neighbors, perm, b2c, skip, a, u * u, lo * lo,
+        bn=bn, bkn=bkn, interpret=interpret)
+    fresh = scatter_from_grouped(perm, jnp.repeat(skip == 0, bn),
+                                 jnp.zeros((n,), bool))
+    u_new = jnp.where(fresh, jnp.sqrt(d1_sq), u)
+    lo_new = jnp.where(fresh, jnp.sqrt(d2_sq), lo)
+    return a_new, u_new, lo_new
+
+
 def segmented_scan(x: jax.Array, w: jax.Array, block2seg: jax.Array,
                    *, bn: int = 128, interpret: bool | None = None):
     """Segmented inclusive scan of (x, ||x||^2, 1) over the cluster-grouped
@@ -186,6 +220,7 @@ __all__ = ["assign_nearest_pallas", "candidate_assign",
            "choose_blocks", "choose_group_bn", "cluster_attend",
            "cluster_major_pack", "distance_argmin", "group_by_cluster",
            "group_by_cluster_device", "grouped_capacity",
-           "k2_assign_grouped", "pad_candidates", "rowwise_grid_steps",
+           "k2_assign_grouped", "k2_bounded_assign", "pad_candidates",
+           "rowwise_grid_steps",
            "scatter_from_grouped", "segmented_scan", "select_clusters",
            "tiled_grid_steps"]

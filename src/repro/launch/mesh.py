@@ -27,6 +27,14 @@ def make_debug_mesh(data: int = 2, model: int = 2):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_debug_cluster_mesh():
+    """1-D 'data' mesh over every host-platform device — the CI-scale
+    clustering mesh (set XLA_FLAGS=--xla_force_host_platform_device_count=4
+    in the environment before the first jax call)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
 def dp_axes(mesh) -> tuple:
     """The data-parallel axes of a mesh ('pod' included when present)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

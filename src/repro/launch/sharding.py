@@ -156,6 +156,21 @@ def cache_specs(cfg, cache_shape, mesh, batch: int):
     return jax.tree_util.tree_map_with_path(one, cache_shape)
 
 
+def clustering_specs(mesh, data_axes=None):
+    """Specs for the clustering engine's sharded state (DESIGN.md §7/§8):
+    (point_spec, row_spec, replicated) — points and per-point state
+    row-sharded over the flattened data axes; centers, neighbor graph and
+    step statistics replicated."""
+    axes = tuple(data_axes) if data_axes else dp_axes(mesh)
+    if not axes:
+        raise ValueError(
+            "clustering needs a data-parallel mesh axis: the mesh has "
+            f"axes {mesh.axis_names} but none named 'data' or 'pod' "
+            "(pass data_axes=... to name them explicitly)")
+    dpx = axes if len(axes) > 1 else axes[0]
+    return P(dpx, None), P(dpx), P()
+
+
 def to_named(tree_specs, mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
                         is_leaf=lambda x: isinstance(x, P))

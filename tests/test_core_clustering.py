@@ -126,7 +126,7 @@ def test_k2means_bounds_are_exact(data, init50):
     first_b = jnp.array(True)
     skipped_any = False
     for it in range(12):
-        cb, ab, ub, lob, nbb, (ncmp, _) = k2means_step(
+        cb, ab, ub, lob, nbb, (ncmp, *_stats) = k2means_step(
             data, cb, ab, ub, lob, nbb, first_b, kn, 512)
         first_b = jnp.array(False)
         skipped_any = skipped_any or int(ncmp) < data.shape[0]

@@ -1,6 +1,9 @@
 """Distributed (shard_map) k²-means correctness on a multi-device debug
-mesh. Needs >1 host-platform devices, so it runs in a subprocess with
-XLA_FLAGS set (the main pytest process must keep 1 device)."""
+mesh with a 2-D ('data', 'model') layout — the engine step must ignore
+the model axis (points shard over 'data' only) and match the
+single-device trajectory. Needs >1 host-platform devices, so it runs in
+a subprocess with XLA_FLAGS set (the main pytest process must keep 1
+device)."""
 import json
 import os
 import subprocess
@@ -12,13 +15,11 @@ _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
-import jax, jax.numpy as jnp
+import jax
 import numpy as np
-from repro.core.distributed import fit_distributed_k2means, \
-    make_distributed_k2means_step
-from repro.core import fit_k2means, assign_nearest, OpCounter
+from repro.core.distributed import fit_distributed_k2means
+from repro.core import fit_k2means, assign_nearest
 from repro.data import gmm_blobs
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 mesh = jax.make_mesh((2, 2), ("data", "model"))
 key = jax.random.PRNGKey(0)
@@ -27,19 +28,23 @@ k, kn = 16, 6
 idx = jax.random.choice(key, 1024, shape=(k,), replace=False)
 init = x[idx]
 
-# distributed run
-c_d, a_d, hist = fit_distributed_k2means(x, k, kn, mesh, key,
-                                         max_iters=20, init_centers=init)
+# distributed run (engine step under shard_map, pallas backend)
+r = fit_distributed_k2means(x, k, kn, mesh, key, max_iters=20,
+                            init_centers=init)
+hist = [e for _, e in r.history]
 
-# single-device reference: same init, same algorithm
+# single-device reference: same init, same algorithm, same backend
 a0 = assign_nearest(x, init)
-r = fit_k2means(x, init, a0, kn=kn, max_iters=20)
+ref = fit_k2means(x, init, a0, kn=kn, max_iters=20, backend="pallas")
 
 out = {
   "dist_energy": float(hist[-1]),
-  "ref_energy": float(r.energy),
+  "ref_energy": float(ref.energy),
   "monotone": bool(all(b <= a + 1e-2 for a, b in zip(hist, hist[1:]))),
-  "centers_close": bool(np.allclose(np.asarray(c_d), np.asarray(r.centers),
+  "same_assignment": bool((np.asarray(r.assignment)
+                           == np.asarray(ref.assignment)).all()),
+  "centers_close": bool(np.allclose(np.asarray(r.centers),
+                                    np.asarray(ref.centers),
                                     rtol=1e-2, atol=1e-2)),
 }
 print("RESULT " + json.dumps(out))
@@ -58,6 +63,7 @@ def test_distributed_k2means_matches_reference():
     assert line, proc.stdout
     out = json.loads(line[0][len("RESULT "):])
     assert out["monotone"]
+    assert out["same_assignment"]
     # same init + same candidate rule -> same trajectory (fp tolerance)
     assert abs(out["dist_energy"] - out["ref_energy"]) \
         / out["ref_energy"] < 1e-3

@@ -172,9 +172,9 @@ def test_distributed_gdi_seeding(blobs):
     the sharded iterations directly (single-device debug mesh)."""
     from repro.core.distributed import fit_distributed_k2means
     mesh = jax.make_mesh((1,), ("data",))
-    c, a, hist = fit_distributed_k2means(blobs, 16, 6, mesh,
-                                         jax.random.PRNGKey(0),
-                                         max_iters=8, init="gdi")
-    assert c.shape == (16, blobs.shape[1])
-    assert np.asarray(a).shape == (blobs.shape[0],)
+    r = fit_distributed_k2means(blobs, 16, 6, mesh, jax.random.PRNGKey(0),
+                                max_iters=8, init="gdi")
+    hist = [e for _, e in r.history]
+    assert r.centers.shape == (16, blobs.shape[1])
+    assert np.asarray(r.assignment).shape == (blobs.shape[0],)
     assert all(b <= a_ + 1e-2 for a_, b in zip(hist, hist[1:]))
