@@ -29,7 +29,7 @@ import time
 _CHILD = "REPRO_DIST_BENCH_CHILD"
 
 
-def child(fast: bool, out: str):
+def child(fast: bool, out: str, shape=None):
     import jax
     import numpy as np
     from repro.core import OpCounter
@@ -43,8 +43,8 @@ def child(fast: bool, out: str):
     # enough iterations for the Hamerly bounds to start skipping: the
     # n_need decay begins once center movement slows (~iter 13 at the
     # acceptance shape), so short runs would tie the bound-free baseline
-    n, d, k, kn, iters = (8192, 32, 64, 16, 20) if fast \
-        else (65536, 32, 512, 32, 60)
+    n, d, k, kn, iters = shape or ((8192, 32, 64, 16, 20) if fast
+                                   else (65536, 32, 512, 32, 60))
     key = jax.random.PRNGKey(0)
     x = gmm_blobs(key, n, d, true_k=2 * k)
     init = x[jax.random.choice(key, n, shape=(k,), replace=False)]
@@ -90,14 +90,16 @@ def child(fast: bool, out: str):
     print("RESULT " + json.dumps(summary))
 
 
-def run(fast: bool = False, out: str | None = None):
+def run(fast: bool = False, out: str | None = None, shape=None):
     """Parent entry point (also used by benchmarks.run): spawns the child
-    with a 4-device host platform, streams its CSV, returns the summary."""
+    with a 4-device host platform, streams its CSV, returns the summary.
+    ``shape`` optionally overrides (n, d, k, kn, iters) — the smoke mode
+    uses it to keep the schema check tiny."""
     if out is None:     # keep CI-mode runs from clobbering the acceptance
         out = "BENCH_dist.fast.json" if fast else "BENCH_dist.json"
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env[_CHILD] = json.dumps({"fast": fast, "out": out})
+    env[_CHILD] = json.dumps({"fast": fast, "out": out, "shape": shape})
     env.setdefault("PYTHONPATH", "src")
     proc = subprocess.run([sys.executable, "-m", "benchmarks.dist_bench"],
                           env=env, capture_output=True, text=True)
@@ -114,7 +116,8 @@ if __name__ == "__main__":
     spec = os.environ.get(_CHILD)
     if spec:
         cfg = json.loads(spec)
-        child(cfg["fast"], cfg["out"])
+        child(cfg["fast"], cfg["out"],
+              tuple(cfg["shape"]) if cfg.get("shape") else None)
     else:
         ap = argparse.ArgumentParser()
         ap.add_argument("--fast", action="store_true")

@@ -36,11 +36,14 @@ def _methods():
     return (("gdi_host", host), ("gdi_device", device), ("kmeanspp", pp))
 
 
-def run(fast: bool = False, out: str | None = None):
+def run(fast: bool = False, out: str | None = None, *, n: int | None = None,
+        d: int | None = None, true_k: int | None = None, grid=None):
     if out is None:     # keep CI-mode runs from clobbering the acceptance
         out = "BENCH_init.fast.json" if fast else "BENCH_init.json"
-    n, d, true_k = (8192, 32, 256) if fast else (65536, 128, 4096)
-    grid = ((64, (0, 1)),) if fast else ((256, (0,)), (512, (0, 1)))
+    dn, dd, dtk = (8192, 32, 256) if fast else (65536, 128, 4096)
+    n, d, true_k = n or dn, d or dd, true_k or dtk
+    grid = grid or (((64, (0, 1)),) if fast
+                    else ((256, (0,)), (512, (0, 1))))
     x = gmm_blobs(jax.random.PRNGKey(42), n, d, true_k=true_k)
 
     rows, records = [], []

@@ -15,14 +15,14 @@ from repro.core import OpCounter, fit_lloyd, gdi_init, kmeanspp_init, \
 from .common import BENCH_DATASETS, BENCH_K, SEEDS, emit, load
 
 
-def run(max_iters: int = 40):
+def run(max_iters: int = 40, datasets=None, ks=None, seeds=None):
     rows = []
-    for name in BENCH_DATASETS:
+    for name in (datasets or BENCH_DATASETS):
         x = load(name)
-        for k in BENCH_K:
+        for k in (ks or BENCH_K):
             res = {m: {"e": [], "ops": []} for m in
                    ("random", "kmeanspp", "gdi")}
-            for seed in SEEDS:
+            for seed in (seeds or SEEDS):
                 key = jax.random.PRNGKey(seed)
                 for m, initfn in (("random", random_init),
                                   ("kmeanspp", kmeanspp_init),

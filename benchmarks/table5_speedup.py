@@ -20,14 +20,15 @@ def _speedup(ops, ref_ops):
     return None if ops is None else ref_ops / max(ops, 1.0)
 
 
-def run(eps: float = 0.01, max_iters: int = 40, datasets=None):
+def run(eps: float = 0.01, max_iters: int = 40, datasets=None,
+        ks=None, seeds=None):
     rows = []
     agg = {m: [] for m in ("lloyd++", "elkan++", "minibatch", "akm",
                            "k2means")}
     for name in (datasets or BENCH_DATASETS):
         x = load(name)
-        for k in BENCH_K:
-            for seed in SEEDS:
+        for k in (ks or BENCH_K):
+            for seed in (seeds or SEEDS):
                 key = jax.random.PRNGKey(seed)
                 # reference: Lloyd++ converged energy and its op budget
                 c0 = OpCounter()

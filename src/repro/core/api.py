@@ -56,18 +56,26 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
         kn: int = 30, m: int = 30, batch: int = 100,
         minibatch_iters: int | None = None,
         counter: OpCounter | None = None,
-        mesh: Any = None, **kw: Any) -> KMeansResult:
+        mesh: Any = None, profile: bool = False, **kw: Any) -> KMeansResult:
     """Cluster ``x`` into ``k`` clusters. The paper's method is the default.
 
     Extra keywords flow to the method's fit function — notably
     ``backend="pallas"`` selects the fused k²-means device step
-    (kernels + DESIGN.md §3) and ``monitor_every=<m>`` defers its
-    energy/op-count host reads. With ``backend="pallas"`` and the default
-    ``init="gdi"`` the initialization also runs device-resident (the
-    frontier round step, DESIGN.md §4), so init -> kNN graph -> grouped
-    assignment -> update chain as one device program with no host round
-    trips besides the per-round leaf count and the ``monitor_every``
-    telemetry reads.
+    (kernels + DESIGN.md §3), ``residency="resident"|"rebuild"`` picks
+    between the persistent sparsely-repaired cluster-grouped layout and
+    the per-iteration rebuild (DESIGN.md §9; resident is the pallas
+    default) and ``monitor_every=<m>`` defers the energy/op-count host
+    reads. With ``backend="pallas"`` and the default ``init="gdi"`` the
+    initialization also runs device-resident (the frontier round step,
+    DESIGN.md §4), so init -> kNN graph -> grouped assignment -> update
+    chain as one device program with no host round trips besides the
+    per-round leaf count and the ``monitor_every`` telemetry reads.
+
+    ``profile=True`` attaches the counter's full op + memory-traffic
+    breakdown (distances / additions / sort equivalents and the layout
+    bytes gathered / scattered / sorted, ``OpCounter.profile()``) to the
+    result's ``profile`` field — the residency win is directly readable
+    from ``bytes_moved``.
 
     ``mesh=<jax Mesh>`` places the same engine iteration sharded
     (core.distributed / DESIGN.md §7-8): points row-sharded over the
@@ -82,6 +90,11 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
     k_init, k_fit = jax.random.split(key)
     x = jnp.asarray(x, jnp.float32)
 
+    def done(result: KMeansResult) -> KMeansResult:
+        if profile:
+            result.profile = counter.profile()
+        return result
+
     if mesh is not None:
         if method != "k2means":
             raise ValueError(
@@ -90,26 +103,29 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
         from .distributed import fit_distributed_k2means
         # k_init, as on the single-device path: init="random" from the
         # same seed samples the same centers under either placement
-        return fit_distributed_k2means(x, k, kn, mesh, k_init,
-                                       max_iters=max_iters, init=init,
-                                       counter=counter, **kw)
+        return done(fit_distributed_k2means(x, k, kn, mesh, k_init,
+                                            max_iters=max_iters, init=init,
+                                            counter=counter, **kw))
 
     centers, assignment = initialize(x, k, init, k_init, counter,
                                      backend=kw.get("backend"))
 
     if method == "lloyd":
-        return fit_lloyd(x, centers, max_iters=max_iters, counter=counter, **kw)
+        return done(fit_lloyd(x, centers, max_iters=max_iters,
+                              counter=counter, **kw))
     if method == "elkan":
-        return fit_elkan(x, centers, max_iters=max_iters, counter=counter, **kw)
+        return done(fit_elkan(x, centers, max_iters=max_iters,
+                              counter=counter, **kw))
     if method == "k2means":
         if assignment is None:
             assignment = assign_nearest(x, centers, counter)
-        return fit_k2means(x, centers, assignment, kn=kn,
-                           max_iters=max_iters, counter=counter, **kw)
+        return done(fit_k2means(x, centers, assignment, kn=kn,
+                                max_iters=max_iters, counter=counter, **kw))
     if method == "minibatch":
-        return fit_minibatch(x, centers, k_fit, batch=batch,
-                             iters=minibatch_iters, counter=counter, **kw)
+        return done(fit_minibatch(x, centers, k_fit, batch=batch,
+                                  iters=minibatch_iters, counter=counter,
+                                  **kw))
     if method == "akm":
-        return fit_akm(x, centers, k_fit, m=m, max_iters=max_iters,
-                       counter=counter, **kw)
+        return done(fit_akm(x, centers, k_fit, m=m, max_iters=max_iters,
+                            counter=counter, **kw))
     raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")

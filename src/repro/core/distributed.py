@@ -1,10 +1,13 @@
 """Distributed k²-means — the engine step under shard_map, at pod scale.
 
 This module is a thin placement wrapper: the iteration itself lives in
-the engine layer (``core.engine.k2_iteration``, DESIGN.md §8) and runs
-here per shard via :class:`core.engine.K2Step` with ``mesh=...`` —
-including the Pallas fast path (``backend="pallas"``: per-shard device
-cluster grouping + the bound-gated tiled candidate kernel). Layout
+the engine layer (``core.engine.k2_iteration`` /
+``k2_resident_iteration``, DESIGN.md §8-9) and runs here per shard via
+:class:`core.engine.K2Step` with ``mesh=...`` — including the Pallas
+fast path (``backend="pallas"``: the bound-gated tiled candidate kernel
+over each shard's cluster-grouped layout, which the default
+``residency="resident"`` keeps device-resident and sparsely repaired
+instead of regrouping per iteration). Layout
 (DESIGN.md §7): points and the bound-carried state ``(a, u, lo)``
 row-sharded over the flattened data axes ('pod' x 'data'); centers and
 the replicated k_n-NN center graph on every shard (O(k²d) is tiny next
@@ -266,8 +269,10 @@ def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
                             monitor_every: int = 1, chunk: int = 2048,
                             bn: int | None = None, bkn: int = 8,
                             interpret: bool | None = None,
-                            data_axes=None,
-                            split_iters: int = 2) -> KMeansResult:
+                            data_axes=None, split_iters: int = 2,
+                            residency: str | None = None,
+                            regroup_every: int = 16,
+                            move_cap: int | None = None) -> KMeansResult:
     """Host-loop driver around the sharded engine step.
 
     Points (and the per-point bound state) are placed row-sharded over
@@ -279,7 +284,12 @@ def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
 
     backend: "pallas" (per-shard fused engine step through the tiled
     candidate kernel), "xla" (per-shard bounded engine step, portable),
-    or "legacy" (the bound-free restricted baseline step). init:
+    or "legacy" (the bound-free restricted baseline step). residency:
+    "resident" keeps each shard's cluster-grouped layout device-resident
+    and sparsely repaired (shard-local repairs, psum'd incremental center
+    deltas, shard-uniform re-sort schedule — DESIGN.md §9.5), "rebuild"
+    regroups per iteration; ``None`` resolves to "resident" for the
+    pallas backend and "rebuild" otherwise. init:
     "random" samples k points; "kmeanspp" runs the replicated host-loop
     seeding; "gdi" runs the frontier round step per shard-group (the
     divisive assignment seeds the loop for free, skipping the
@@ -350,61 +360,60 @@ def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
     a0 = jax.device_put(jnp.asarray(a0).astype(jnp.int32), rowsh)
 
     # --- iteration: engine step under shard_map (or the legacy baseline) -
+    if residency is None:
+        residency = "resident" if backend == "pallas" else "rebuild"
+    sb = None
     if backend == "legacy":
         legacy = jax.jit(make_distributed_k2means_step(
             mesh, kn, k, data_axes=data_axes, chunk=chunk))
         a_cur = a0
     elif backend in ("xla", "pallas"):
-        step = K2Step(k=k, kn=kn, backend=backend, mesh=mesh,
-                      data_axes=data_axes, chunk=chunk, bn=bn, bkn=bkn,
-                      interpret=interpret).build(n_pad)
-        state = K2State(c, a0,
-                        jax.device_put(jnp.zeros((n_pad,), x.dtype), rowsh),
-                        jax.device_put(jnp.zeros((n_pad,), x.dtype), rowsh),
-                        jax.device_put(jnp.full((k, kn), -1, jnp.int32),
-                                       repsh),
-                        jnp.array(True))
+        sb = K2Step(k=k, kn=kn, backend=backend, mesh=mesh,
+                    data_axes=data_axes, chunk=chunk, bn=bn, bkn=bkn,
+                    interpret=interpret, residency=residency,
+                    regroup_every=regroup_every, move_cap=move_cap)
+        step = sb.build(n_pad, d)
+        if residency == "resident":
+            state = sb.init_resident(x, w, c, a0)
+        else:
+            state = K2State(
+                c, a0,
+                jax.device_put(jnp.zeros((n_pad,), x.dtype), rowsh),
+                jax.device_put(jnp.zeros((n_pad,), x.dtype), rowsh),
+                jax.device_put(jnp.full((k, kn), -1, jnp.int32), repsh),
+                jnp.array(True))
     else:
         raise ValueError(f"unknown backend {backend!r}; expected "
                          "'pallas', 'xla' or 'legacy'")
 
-    history = []
-    pending = []         # device-side stats; host-read every monitor_every
-    it_done = 0
-    converged = False
-
-    def flush():
-        nonlocal it_done, converged
-        for n_need, changed, energy in jax.device_get(pending):
-            it_done += 1
-            counter.add_distances(k * k + int(n_need) * kn + k)
-            counter.add_additions(n)
-            history.append((counter.snapshot(), float(energy)))
-            if it_done > 1 and int(changed) == 0:
-                converged = True   # fixed point: later pending iterations
-                break              # are identical states, drop them
-        pending.clear()
+    resident = backend != "legacy" and residency == "resident"
+    # deferred-flush protocol shared with the single-device drivers
+    from .k2means import _MonitorLoop
+    mon = _MonitorLoop(counter, n=n, d=d, k=k, kn=kn, resident=resident)
 
     for it in range(1, max_iters + 1):
         if backend == "legacy":
             c, a_cur, energy, changed = legacy(x, w, c, a_cur)
-            pending.append((n, changed, energy))   # bound-free: all rows
+            # bound-free: every row recomputes, no grouped layout
+            mon.pending.append((n, changed, energy, 0, 0))
         else:
             state, stats = step(x, w, state)
-            pending.append(stats)
+            mon.pending.append(tuple(stats))
         if it % monitor_every == 0 or it == max_iters:
-            flush()
-            if converged:
+            mon.flush()
+            if mon.converged:
                 break
 
     if backend == "legacy":
         a_final = a_cur
+    elif resident:
+        c, a_final = state.c, sb.final_assignment(state, n_pad)
     else:
         c, a_final = state.c, state.a
-    if history:
-        energy = history[-1][1]
+    if mon.history:
+        energy = mon.history[-1][1]
     else:
         energy = float(jnp.sum(w * sqnorm(x - c[a_final])))
     assignment = jnp.asarray(jax.device_get(a_final)[:n])
-    return KMeansResult(c, assignment, energy, it_done, counter.total,
-                        history)
+    return KMeansResult(c, assignment, energy, mon.it_done, counter.total,
+                        mon.history)

@@ -442,7 +442,7 @@ def gdi_device_init(x: jax.Array, k: int, key: jax.Array, *,
     impl, interpret = _auto_impl(impl, interpret)
     # the Pallas scan wants MXU-sized blocks; the XLA path has no block
     # constraint, so it minimizes the grouped layout's padding (R -> ~n)
-    bn = bn or (choose_group_bn(n, k) if impl == "pallas" else 8)
+    bn = bn or (choose_group_bn(n, k, d) if impl == "pallas" else 8)
     r = grouped_capacity(n, k, bn) * bn
 
     state = _device_state(x, k)
@@ -533,7 +533,7 @@ def gdi_parallel_init(x: jax.Array, k: int, key: jax.Array, *,
     assert 1 <= k <= n
     impl, interpret = _auto_impl(impl, interpret)
     k2 = 1 << math.ceil(math.log2(k)) if k > 1 else 1
-    bn = bn or (choose_group_bn(n, k2) if impl == "pallas" else 8)
+    bn = bn or (choose_group_bn(n, k2, d) if impl == "pallas" else 8)
     r = grouped_capacity(n, k2, bn) * bn
 
     state = _device_state(x, k2)

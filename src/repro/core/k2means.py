@@ -26,12 +26,10 @@ Two backends execute the iteration (``fit_k2means(..., backend=...)``):
 
 ``"pallas"``
     One jitted device step chains center_knn -> cluster-grouped tiled
-    candidate assignment (kernels.candidate_assign) -> segment-sum center
-    update -> Hamerly bound adjustment, with the cluster-grouped layout
-    built on device (kernels.ops.group_by_cluster_device) so no host
-    roundtrip happens between iterations. Fed from the device-resident
-    divisive init (core.gdi.gdi_device_init, DESIGN.md §4 — the default
-    via ``api.fit(init="gdi", backend="pallas")``), the whole program
+    candidate assignment (kernels.candidate_assign) -> center update ->
+    Hamerly bound adjustment. Fed from the device-resident divisive init
+    (core.gdi.gdi_device_init, DESIGN.md §4 — the default via
+    ``api.fit(init="gdi", backend="pallas")``), the whole program
     init -> kNN graph -> grouped assignment -> update runs on device.
     Energy / op-count host reads are deferred to every ``monitor_every``
     iterations. Assignments match the
@@ -43,9 +41,17 @@ Two backends execute the iteration (``fit_k2means(..., backend=...)``):
     both ranking near-tied k_n-th neighbours identically — measure-zero
     on real data, but not guaranteed on adversarial ties (DESIGN.md §3.1).
 
-Both backends are thin wrappers over the engine layer
-(``core.engine.k2_iteration``, DESIGN.md §8) — the same body that the
-distributed shard_map step executes per shard
+Orthogonally, ``residency`` selects how the cluster-grouped layout is
+maintained (DESIGN.md §9): ``"rebuild"`` reconstructs it from scratch every
+iteration; ``"resident"`` (the pallas default) keeps it device-resident in
+:class:`core.engine.ResidentState` and repairs only the rows whose
+assignment changed, with an incremental delta center update and periodic
+full re-sorts — killing the steady-state O(n log n + nd) layout traffic
+the Hamerly bounds already proved unnecessary.
+
+All paths are thin wrappers over the engine layer
+(``core.engine.k2_iteration`` / ``k2_resident_iteration``, DESIGN.md §8) —
+the same bodies the distributed shard_map step executes per shard
 (``core.distributed.fit_distributed_k2means`` / ``api.fit(mesh=...)``).
 """
 from __future__ import annotations
@@ -56,9 +62,9 @@ import jax
 import jax.numpy as jnp
 
 from .distance import clustering_energy
-from .engine import K2State, init_state, k2_iteration
+from .engine import K2State, K2Step, init_state, k2_iteration
 from .lloyd import KMeansResult
-from .opcount import OpCounter
+from .opcount import OpCounter, charge_iteration
 
 
 @functools.partial(jax.jit, static_argnames=("kn", "chunk"))
@@ -67,7 +73,7 @@ def k2means_step(x, c, a, u, lo, prev_neighbors, first, kn: int,
     """One k²-means iteration (portable XLA backend; engine-layer body).
 
     Returns (c', a', u', lo', neighbors, stats) with stats the device
-    tuple (n_computed, changed, energy).
+    tuple (n_need, changed, energy, moved, resorted).
     """
     w = jnp.ones((x.shape[0],), x.dtype)
     state = K2State(c, a, u, lo, prev_neighbors, first)
@@ -80,22 +86,75 @@ def k2means_step(x, c, a, u, lo, prev_neighbors, first, kn: int,
                    static_argnames=("kn", "bn", "bkn", "interpret"))
 def k2means_pallas_step(x, c, a, u, lo, prev_neighbors, first, kn: int,
                         bn: int, bkn: int, interpret: bool):
-    """One fused k²-means iteration on the Pallas fast path.
+    """One fused k²-means iteration on the Pallas fast path
+    (rebuild residency — the grouped layout is reconstructed this call).
 
     Chains the whole iteration into one device step: center k_n-NN graph
-    (Pallas center_sqdist + top_k), device-side cluster grouping, the tiled
+    (Pallas center_sqdist + top_k), cluster grouping, the tiled
     candidate-assignment kernel with per-block Hamerly skip flags,
     segment-sum center update, and the bound adjustment for the next
     iteration (engine-layer body, ``core.engine.k2_iteration``). Returns
     (c', a', u', lo', neighbors, stats) with stats a device tuple
-    (n_need, changed, energy) — nothing here forces a host sync; the fit
-    loop reads stats every ``monitor_every`` iterations.
+    (n_need, changed, energy, moved, resorted) — nothing here forces a
+    host sync; the fit loop reads stats every ``monitor_every``
+    iterations.
     """
     w = jnp.ones((x.shape[0],), x.dtype)
     state = K2State(c, a, u, lo, prev_neighbors, first)
     st, stats = k2_iteration(x, w, state, kn=kn, backend="pallas",
                              bn=bn, bkn=bkn, interpret=interpret)
     return st.c, st.a, st.u, st.lo, st.prev_nb, tuple(stats)
+
+
+class _MonitorLoop:
+    """Deferred-host-read driver shared by the device-step fit loops:
+    stats stay on device and are flushed (op/byte charged + convergence
+    checked) every ``monitor_every`` iterations (DESIGN.md §4.3)."""
+
+    def __init__(self, counter, *, n, d, k, kn, resident):
+        self.counter = counter
+        self.args = dict(n=n, d=d, k=k, kn=kn, resident=resident)
+        self.pending = []
+        self.history = []
+        self.it_done = 0
+        self.converged = False
+
+    def flush(self):
+        for stats in jax.device_get(self.pending):
+            self.it_done += 1
+            energy = charge_iteration(self.counter, stats=stats,
+                                      **self.args)
+            self.history.append((self.counter.snapshot(), float(energy)))
+            if self.it_done > 1 and int(stats[1]) == 0:
+                self.converged = True   # fixed point: later pending
+                break                   # iterations are identical, drop
+        self.pending.clear()
+
+
+def _fit_k2means_resident(x, centers, assignment, *, kn, max_iters, counter,
+                          monitor_every, backend, chunk, bn, bkn, interpret,
+                          regroup_every, move_cap):
+    n, d = x.shape
+    k = centers.shape[0]
+    sb = K2Step(k=k, kn=kn, backend=backend, chunk=chunk, bn=bn, bkn=bkn,
+                interpret=interpret, residency="resident",
+                regroup_every=regroup_every, move_cap=move_cap)
+    step = sb.build(n, d)
+    w = jnp.ones((n,), x.dtype)
+    state = sb.init_resident(x, w, centers, assignment)
+    mon = _MonitorLoop(counter, n=n, d=d, k=k, kn=kn, resident=True)
+    for it in range(1, max_iters + 1):
+        state, stats = step(x, w, state)
+        mon.pending.append(tuple(stats))
+        if it % monitor_every == 0 or it == max_iters:
+            mon.flush()
+            if mon.converged:
+                break
+    a = sb.final_assignment(state, n)
+    energy = mon.history[-1][1] if mon.history else \
+        float(clustering_energy(x, state.c, a))
+    return KMeansResult(state.c, a, energy, mon.it_done, counter.total,
+                        mon.history)
 
 
 def _fit_k2means_pallas(x, centers, assignment, *, kn, max_iters, counter,
@@ -106,39 +165,24 @@ def _fit_k2means_pallas(x, centers, assignment, *, kn, max_iters, counter,
     k = centers.shape[0]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    bn = bn or choose_group_bn(n, k)
+    bn = bn or choose_group_bn(n, k, d, bkn=bkn)
     c, a, u, lo, prev_nb, first = init_state(centers, assignment, kn)
-    history = []
-    pending = []          # device-side stats; host-read every monitor_every
-    it_done = 0
-    converged = False
-
-    def flush():
-        nonlocal it_done, converged
-        for n_need, changed, energy in jax.device_get(pending):
-            it_done += 1
-            counter.add_distances(k * k + int(n_need) * kn + k)
-            counter.add_additions(n)
-            history.append((counter.snapshot(), float(energy)))
-            if it_done > 1 and int(changed) == 0:
-                converged = True   # fixed point: later pending iterations
-                break              # are identical states, drop them
-        pending.clear()
-
+    mon = _MonitorLoop(counter, n=n, d=d, k=k, kn=kn, resident=False)
     for it in range(1, max_iters + 1):
         c, a, u, lo, prev_nb, stats = k2means_pallas_step(
             x, c, a, u, lo, prev_nb, first, kn, bn, bkn, interpret)
         first = jnp.array(False)
-        pending.append(stats)
+        mon.pending.append(stats)
         if it % monitor_every == 0 or it == max_iters:
-            flush()
-            if converged:
+            mon.flush()
+            if mon.converged:
                 break
     # history[-1] already holds the energy of the final recorded state (any
     # post-convergence pending iterations were identical fixed points)
-    energy = history[-1][1] if history else \
+    energy = mon.history[-1][1] if mon.history else \
         float(clustering_energy(x, c, a))
-    return KMeansResult(c, a, energy, it_done, counter.total, history)
+    return KMeansResult(c, a, energy, mon.it_done, counter.total,
+                        mon.history)
 
 
 def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
@@ -146,8 +190,9 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
                 counter: OpCounter | None = None,
                 chunk: int = 2048, backend: str = "xla",
                 monitor_every: int = 1, bn: int | None = None,
-                bkn: int = 8,
-                interpret: bool | None = None) -> KMeansResult:
+                bkn: int = 8, interpret: bool | None = None,
+                residency: str | None = None, regroup_every: int = 16,
+                move_cap: int | None = None) -> KMeansResult:
     """Run k²-means from an initialisation (centers + assignments).
 
     GDI provides assignments for free (device-resident ones stay on
@@ -157,11 +202,17 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
 
     backend: "xla" (portable lax.map reference) or "pallas" (fused device
     step through the tiled candidate-assignment kernel; see module
-    docstring). Both produce identical assignments. monitor_every defers
-    the pallas backend's energy/op-count host reads (and hence its
-    convergence check) to every that-many iterations; bn/bkn pick the
-    point-block and candidate-tile sizes (bn=None auto-selects from n/k);
-    interpret=None runs the kernels in interpret mode off-TPU.
+    docstring). Both produce identical assignments. residency: "rebuild"
+    (per-iteration grouped-layout reconstruction) or "resident" (the
+    persistent, sparsely repaired layout of DESIGN.md §9 with incremental
+    center updates; ``regroup_every``/``move_cap`` tune its re-sort
+    period and move buffer); ``None`` resolves to "resident" on the
+    pallas backend and "rebuild" on xla. monitor_every defers the device
+    steps' energy/op-count host reads (and hence their convergence
+    check) to every that-many iterations; bn/bkn pick the point-block
+    and candidate-tile sizes (bn=None auto-selects from n/k within the
+    VMEM budget); interpret=None runs the kernels in interpret mode
+    off-TPU.
     """
     counter = counter or OpCounter()
     n, d = x.shape
@@ -169,32 +220,45 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
     kn = min(kn, k)
     if monitor_every < 1:
         raise ValueError(f"monitor_every must be >= 1, got {monitor_every}")
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'xla' or 'pallas'")
+    if residency is None:
+        residency = "resident" if backend == "pallas" else "rebuild"
+    if residency not in ("rebuild", "resident"):
+        raise ValueError(f"unknown residency {residency!r}; "
+                         "expected 'rebuild' or 'resident'")
+    if residency == "resident":
+        return _fit_k2means_resident(
+            x, centers, assignment, kn=kn, max_iters=max_iters,
+            counter=counter, monitor_every=monitor_every, backend=backend,
+            chunk=chunk, bn=bn, bkn=bkn, interpret=interpret,
+            regroup_every=regroup_every, move_cap=move_cap)
     if backend == "pallas":
         return _fit_k2means_pallas(
             x, centers, assignment, kn=kn, max_iters=max_iters,
             counter=counter, monitor_every=monitor_every, bn=bn, bkn=bkn,
             interpret=interpret)
-    if backend != "xla":
-        raise ValueError(f"unknown backend {backend!r}; "
-                         "expected 'xla' or 'pallas'")
     c, a, u, lo, prev_nb, first = init_state(centers, assignment, kn)
     history = []
-    it = 0
+    it = 0                       # max_iters=0 evaluates the init as-is
     for it in range(1, max_iters + 1):
-        c, a, u, lo, prev_nb, (n_cmp, changed, energy) = k2means_step(
+        c, a, u, lo, prev_nb, stats = k2means_step(
             x, c, a, u, lo, prev_nb, first, kn, chunk)
         first = jnp.array(False)
         # Paper accounting: k^2 graph distances + k_n distances per
-        # recomputed point + k movement norms + n additions (update step).
-        counter.add_distances(k * k + int(n_cmp) * kn + k)
-        counter.add_additions(n)
+        # recomputed point + k movement norms + n additions (update step);
         # post-update energy from the step's device stats (monitoring,
-        # not counted)
+        # not counted). The xla backend never builds the grouped layout,
+        # so it pays no layout bytes.
+        energy = charge_iteration(counter, n=n, d=d, k=k, kn=kn,
+                                  stats=jax.device_get(stats),
+                                  resident=False)
         history.append((counter.snapshot(), float(energy)))
         # converged when assignments are stable ACROSS an update; iteration 1
         # trivially reports changed==0 when the initial assignment was
         # nearest-w.r.t.-init-centers (centers still moved in its update)
-        if it > 1 and int(changed) == 0:
+        if it > 1 and int(stats[1]) == 0:
             break
     energy = float(clustering_energy(x, c, a))
     return KMeansResult(c, a, energy, it, counter.total, history)

@@ -26,6 +26,9 @@ class KMeansResult:
     # (cumulative_ops, energy) after every iteration — drives the paper's
     # "ops to reach reference energy" speedup tables.
     history: list
+    # counted-op + memory-traffic breakdown (OpCounter.profile()), attached
+    # by ``api.fit(..., profile=True)``; None otherwise.
+    profile: dict | None = None
 
 
 def update_centers(x: jax.Array, a: jax.Array, c_prev: jax.Array) -> jax.Array:

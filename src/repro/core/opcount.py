@@ -5,6 +5,14 @@ The paper (§3) measures runtime complexity as the number of *vector operations*
 ``|X_j| * log2(|X_j|) / d`` vector-op equivalents so that comparisons are
 charged fairly. We reproduce that accounting exactly so that the speedup
 tables are machine-independent, and additionally log wall-clock for reference.
+
+Alongside the paper's op metric the counter tracks a *memory-traffic* metric
+(bytes gathered / scattered / sorted by layout maintenance, DESIGN.md §9):
+the resident-layout engine's whole point is that steady-state iterations
+stop paying the O(n log n + nd) grouping traffic, and these byte counters
+are what make that win measurable (``benchmarks/iter_bench.py``,
+``fit(..., profile=True)``). Bytes are reported separately and never mix
+into ``total`` — the paper's op metric is unchanged.
 """
 from __future__ import annotations
 
@@ -20,12 +28,21 @@ class OpCounter:
     inner_products: float = 0.0
     additions: float = 0.0
     sort_equivalents: float = 0.0
+    # memory-traffic lane (bytes): layout gathers/scatters and sort passes
+    bytes_gathered: float = 0.0
+    bytes_scattered: float = 0.0
+    bytes_sorted: float = 0.0
     wall_t0: float = dataclasses.field(default_factory=time.perf_counter)
 
     @property
     def total(self) -> float:
         return (self.distances + self.inner_products + self.additions
                 + self.sort_equivalents)
+
+    @property
+    def bytes_moved(self) -> float:
+        """Total layout memory traffic (gather + scatter + sort bytes)."""
+        return self.bytes_gathered + self.bytes_scattered + self.bytes_sorted
 
     @property
     def wall(self) -> float:
@@ -45,5 +62,64 @@ class OpCounter:
         if m > 1:
             self.sort_equivalents += m * math.log2(m) / max(d, 1)
 
+    def add_gather_bytes(self, b: float) -> None:
+        self.bytes_gathered += float(b)
+
+    def add_scatter_bytes(self, b: float) -> None:
+        self.bytes_scattered += float(b)
+
+    def add_sort_bytes(self, b: float) -> None:
+        self.bytes_sorted += float(b)
+
     def snapshot(self) -> float:
         return self.total
+
+    def profile(self) -> dict:
+        """Machine-readable counter state for ``fit(..., profile=True)``."""
+        return {
+            "distances": self.distances,
+            "inner_products": self.inner_products,
+            "additions": self.additions,
+            "sort_equivalents": self.sort_equivalents,
+            "total_ops": self.total,
+            "bytes_gathered": self.bytes_gathered,
+            "bytes_scattered": self.bytes_scattered,
+            "bytes_sorted": self.bytes_sorted,
+            "bytes_moved": self.bytes_moved,
+            "wall_s": self.wall,
+        }
+
+
+# state lanes that ride along with a moved row besides its d features:
+# (u, lo, w) — the point id travels inside the sort/scatter key charge
+LAYOUT_STATE_LANES = 3
+
+
+def charge_iteration(counter: OpCounter, *, n: int, d: int, k: int, kn: int,
+                     stats, resident: bool = False) -> float:
+    """Charge one k²-means iteration from its device ``StepStats``.
+
+    Paper ops: the k²-NN graph build, k_n candidate distances per recomputed
+    point, k movement norms, and the mean update's additions — ``n`` when the
+    update re-reduced every row (rebuild engines and resident re-sort
+    iterations), ``2*moved`` when the resident engine applied an incremental
+    delta (each moved row is subtracted from its old center sum and added to
+    its new one).
+
+    Memory traffic: ``moved`` rows × (d + state lanes) f32 gathered and
+    scattered by layout maintenance, plus m·log2(m) key-passes over the
+    same rows — the full argsort of a re-sort (``moved`` spans the whole
+    re-sorted arena(s), so partial shard re-sorts charge only the shards
+    that actually sorted) or the move-buffer compaction of a sparse
+    repair. Returns the iteration's post-update energy.
+    """
+    n_need, changed, energy, moved, resorted = (float(s) for s in stats)
+    counter.add_distances(k * k + n_need * kn + k)
+    full_update = (not resident) or resorted > 0
+    counter.add_additions(n if full_update else 2.0 * moved)
+    if moved > 0:
+        counter.add_gather_bytes(moved * (d + LAYOUT_STATE_LANES) * 4)
+        counter.add_scatter_bytes(moved * (d + LAYOUT_STATE_LANES) * 4)
+        counter.add_sort_bytes(moved * 8
+                               * max(1.0, math.log2(max(moved, 2.0))))
+    return energy

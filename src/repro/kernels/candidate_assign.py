@@ -20,9 +20,16 @@ Two generations of the kernel live here (DESIGN.md §3):
     and as the simplest correct realisation of the layout contract.
 
 Contract (both): points are pre-grouped so that every point block (bn
-points) shares one candidate list of k_n center indices
-(ops.group_by_cluster_device builds this layout from the current
-assignment: points sorted by cluster, clusters padded to block multiples).
+points) shares one candidate list of k_n center indices. Blocks need NOT
+be cluster-contiguous or hole-free — the scalar-prefetched ``rowsel``
+array is the only block -> candidate-list routing — which is what lets
+the resident layout (DESIGN.md §9) repair blocks in place across
+iterations instead of re-sorting. Rebuild callers derive the layout
+per call from the current assignment (ops.group_by_cluster_device:
+points sorted by cluster, clusters padded to block multiples); resident
+callers pass the carried arena (ops.resident_regroup /
+ops.plan_layout_repair) whose free blocks simply arrive with their skip
+flag set.
 
 Triangle-inequality adaptation (DESIGN.md §3): a per-block skip flag (from
 the Hamerly-style bounds) gates the whole compute with @pl.when — an entire

@@ -38,13 +38,24 @@ def choose_blocks(d: int, k: int):
     return 8, 8
 
 
-def choose_group_bn(n: int, k: int, bn_max: int = 128) -> int:
+def choose_group_bn(n: int, k: int, d: int | None = None,
+                    bn_max: int = 128, bkn: int = 8) -> int:
     """Point-block size for the cluster-grouped layout: the largest power of
     two <= the expected cluster size n/k (clamped to [8, bn_max]), so the
-    per-cluster padding overhead stays bounded even at small n/k."""
+    per-cluster padding overhead stays bounded even at small n/k.
+
+    When ``d`` is given the block additionally respects the VMEM budget the
+    same way :func:`choose_blocks` does — the tiled kernel holds a (bn, d)
+    point tile, a (bkn, d) candidate slab and ~4 bn-length scratch lanes per
+    step, so huge-d inputs (e.g. the yale config, d=32256) must shrink bn
+    below the n/k heuristic or the tile overflows the budget."""
     per = max(8, n // max(k, 1))
+    cap = bn_max
+    if d is not None:
+        while cap > 8 and cap * d + bkn * d + 4 * cap > _VMEM_BUDGET:
+            cap //= 2
     bn = 8
-    while bn * 2 <= min(per, bn_max):
+    while bn * 2 <= min(per, cap):
         bn *= 2
     return bn
 
@@ -76,6 +87,33 @@ def grouped_capacity(n: int, k: int, bn: int) -> int:
     return -(-n // bn) + k
 
 
+def _cluster_pack(a: jax.Array, k: int, bn: int, nb_total: int):
+    """Shared packing math of the grouped layout (DESIGN.md §3.3): stable
+    argsort by cluster, every cluster padded to a bn multiple, inside an
+    ``nb_total``-block arena. Returns (perm (nb_total*bn,) int32 with -1
+    padding, b2c (nb_total,) int32 — valid for blocks below the packed
+    extent, clamped to k-1 beyond it —, sizes (k,), sizes_pad (k,),
+    starts_pad (k,)). Both layout builders (per-iteration
+    :func:`group_by_cluster_device` and resident
+    :func:`resident_regroup`) are thin wrappers so a packing fix can
+    never break rebuild/resident parity."""
+    n = a.shape[0]
+    order = jnp.argsort(a, stable=True).astype(jnp.int32)
+    sizes = jnp.bincount(a, length=k)                       # (k,)
+    sizes_pad = ((sizes + bn - 1) // bn) * bn               # empty -> 0 blocks
+    starts_data = jnp.cumsum(sizes) - sizes                 # exclusive cumsum
+    starts_pad = jnp.cumsum(sizes_pad) - sizes_pad
+    ci = a[order]                                           # sorted cluster id
+    rank = jnp.arange(n, dtype=jnp.int32) - starts_data[ci].astype(jnp.int32)
+    dest = starts_pad[ci].astype(jnp.int32) + rank
+    perm = jnp.full((nb_total * bn,), -1, jnp.int32).at[dest].set(order)
+    bounds = jnp.cumsum(sizes_pad)                          # inclusive
+    block_starts = jnp.arange(nb_total, dtype=bounds.dtype) * bn
+    b2c = jnp.searchsorted(bounds, block_starts, side="right")
+    b2c = jnp.minimum(b2c, k - 1).astype(jnp.int32)
+    return perm, b2c, sizes, sizes_pad, starts_pad
+
+
 @functools.partial(jax.jit, static_argnames=("k", "bn"))
 def group_by_cluster_device(a: jax.Array, k: int, bn: int):
     """Device-side layout pass: sort point ids by cluster, pad every cluster
@@ -85,21 +123,8 @@ def group_by_cluster_device(a: jax.Array, k: int, bn: int):
     padding, block2cluster (cap,) int32; trailing capacity blocks beyond the
     data are all-padding with block2cluster clamped into range).
     """
-    n = a.shape[0]
-    nbcap = grouped_capacity(n, k, bn)
-    order = jnp.argsort(a, stable=True).astype(jnp.int32)
-    sizes = jnp.bincount(a, length=k)                       # (k,)
-    sizes_pad = ((sizes + bn - 1) // bn) * bn               # empty -> 0 blocks
-    starts_data = jnp.cumsum(sizes) - sizes                 # exclusive cumsum
-    starts_pad = jnp.cumsum(sizes_pad) - sizes_pad
-    ci = a[order]                                           # sorted cluster id
-    rank = jnp.arange(n, dtype=jnp.int32) - starts_data[ci].astype(jnp.int32)
-    dest = starts_pad[ci].astype(jnp.int32) + rank
-    perm = jnp.full((nbcap * bn,), -1, jnp.int32).at[dest].set(order)
-    bounds = jnp.cumsum(sizes_pad)                          # inclusive
-    block_starts = jnp.arange(nbcap, dtype=bounds.dtype) * bn
-    b2c = jnp.searchsorted(bounds, block_starts, side="right")
-    b2c = jnp.minimum(b2c, k - 1).astype(jnp.int32)
+    nbcap = grouped_capacity(a.shape[0], k, bn)
+    perm, b2c, _, _, _ = _cluster_pack(a, k, bn, nbcap)
     return perm, b2c
 
 
@@ -137,12 +162,123 @@ def scatter_from_grouped(perm: jax.Array, values: jax.Array,
     return prev.at[idx].set(values, mode="drop")
 
 
+# ---------------------------------------------------------------------------
+# Resident grouped layout (DESIGN.md §9): the cluster-grouped layout as a
+# persistent, incrementally repaired structure instead of a per-iteration
+# rebuild. Blocks need not be cluster-contiguous — the tiled kernel only
+# requires every point in a block to share the block's cluster (its rowsel
+# entry), so repairs move rows between blocks without re-sorting.
+# ---------------------------------------------------------------------------
+
+
+def resident_capacity(n: int, k: int, bn: int, spare: int | None = None) -> int:
+    """Static block capacity of the resident layout.
+
+    ``grouped_capacity`` is the re-sort worst case (every cluster size a bn
+    multiple); real assignments leave most of the +k partial-block slack
+    unused, and those unused blocks are the free pool the sparse repairs
+    allocate from. ``spare`` adds explicit headroom blocks on top (default
+    0: extra blocks enlarge the kernel grid, and a repair that would
+    exhaust the pool falls back to a full re-sort anyway)."""
+    return grouped_capacity(n, k, bn) + (spare or 0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "nb_total"))
+def resident_regroup(a: jax.Array, k: int, bn: int, nb_total: int):
+    """Full layout (re)build with resident free-slot metadata.
+
+    Same packing as :func:`group_by_cluster_device` (stable argsort by
+    cluster, every cluster padded to a bn multiple) inside a fixed
+    ``nb_total``-block arena, but with the resident-layout bookkeeping:
+    unowned blocks carry ``b2c == -1`` (the free pool), and every cluster's
+    append watermark is returned so sparse repairs can allocate without
+    re-sorting. Returns ``(perm (nb_total*bn,), b2c (nb_total,),
+    fill (k,), openb (k,))`` where ``perm`` holds point ids (-1 = free
+    slot), ``openb[c]`` is cluster c's open (append) block (-1 when the
+    cluster is empty) and ``fill[c]`` its watermark in (0, bn] (0 when
+    empty): slots >= fill of the open block have never been appended to
+    since the last re-sort and are guaranteed free."""
+    perm, b2c, sizes, sizes_pad, starts_pad = _cluster_pack(a, k, bn,
+                                                            nb_total)
+    used = (jnp.sum(sizes_pad) // bn).astype(jnp.int32)     # owned blocks
+    b2c = jnp.where(jnp.arange(nb_total) < used, b2c, -1).astype(jnp.int32)
+    empty = sizes == 0
+    openb = jnp.where(empty, -1,
+                      (starts_pad + sizes_pad) // bn - 1).astype(jnp.int32)
+    fill = jnp.where(empty, 0, sizes - (sizes_pad - bn)).astype(jnp.int32)
+    return perm, b2c, fill, openb
+
+
+def plan_layout_repair(b2c: jax.Array, fill: jax.Array, openb: jax.Array,
+                       active: jax.Array, dst: jax.Array, *, bn: int):
+    """Vectorized append-only slot allocation for a batch of moved rows.
+
+    ``active`` (M,) flags the live lanes of the move buffer and ``dst``
+    (M,) their destination clusters. Each move is appended at its
+    cluster's watermark: first into the remaining free tail of the open
+    block, then into fresh blocks popped from the free pool (``b2c ==
+    -1``), lowest block id first. Departing rows are *not* reclaimed —
+    they become holes below the watermark that only the next full
+    re-sort (:func:`resident_regroup`) repacks (DESIGN.md §9).
+
+    Returns ``(dst_slot, b2c', fill', openb', total_new, n_free)`` where
+    ``dst_slot`` (M,) carries the allocated slot per lane (inactive lanes
+    get the out-of-range sentinel ``nb*bn``, for ``mode="drop"``
+    scatters) and ``total_new``/``n_free`` let the caller detect pool
+    exhaustion (``total_new > n_free``) *before* committing — the
+    returned arrays are only valid when the pool sufficed.
+    """
+    k = fill.shape[0]
+    nbt = b2c.shape[0]
+    sentinel = nbt * bn
+    m = dst.shape[0]
+    seg = jnp.where(active, dst, k)
+    inc = jax.ops.segment_sum(active.astype(jnp.int32), seg,
+                              num_segments=k + 1)[:k]
+    # rank of each move within its destination cluster (stable in lane
+    # order so repair results are deterministic)
+    order = jnp.argsort(seg, stable=True)
+    sd = seg[order]
+    starts = jnp.searchsorted(sd, sd, side="left")
+    rank = jnp.zeros((m,), jnp.int32).at[order].set(
+        (jnp.arange(m) - starts).astype(jnp.int32))
+    rem = jnp.where(openb >= 0, bn - fill, 0)               # (k,) open tail
+    nf = (jnp.maximum(inc - rem, 0) + bn - 1) // bn         # fresh blocks
+    total_new = jnp.sum(nf)
+    free_mask = b2c < 0
+    n_free = jnp.sum(free_mask)
+    free_list = jnp.nonzero(free_mask, size=nbt,
+                            fill_value=nbt)[0].astype(jnp.int32)
+    base = jnp.cumsum(nf) - nf                              # exclusive
+    # per-lane placement
+    c_m = jnp.where(active, dst, 0)
+    rem_m = rem[c_m]
+    in_open = rank < rem_m
+    r2 = jnp.maximum(rank - rem_m, 0)
+    blk_fresh = free_list[jnp.minimum(base[c_m] + r2 // bn, nbt - 1)]
+    blk = jnp.where(in_open, openb[c_m], blk_fresh)
+    off = jnp.where(in_open, fill[c_m] + rank, r2 % bn)
+    dst_slot = jnp.where(active, blk * bn + off, sentinel).astype(jnp.int32)
+    # commit ownership of the allocated fresh blocks + new watermarks
+    alloc_blk = jnp.where(active & ~in_open, blk_fresh, nbt)
+    b2c2 = b2c.at[alloc_blk].set(c_m.astype(jnp.int32), mode="drop")
+    grew = inc > rem
+    last_fresh = free_list[jnp.minimum(base + jnp.maximum(nf - 1, 0),
+                                       nbt - 1)]
+    openb2 = jnp.where(grew, last_fresh, openb).astype(jnp.int32)
+    fill2 = jnp.where(grew, inc - rem - (nf - 1) * bn,
+                      jnp.where(inc > 0, fill + inc, fill)).astype(jnp.int32)
+    return dst_slot, b2c2, fill2, openb2, total_new, n_free
+
+
 def k2_bounded_assign(x: jax.Array, c: jax.Array, neighbors: jax.Array,
                       a: jax.Array, u: jax.Array, lo: jax.Array,
                       need: jax.Array, *, bn: int, bkn: int = 8,
                       interpret: bool | None = None):
     """Bound-gated grouped tiled assignment — the Pallas inner loop of the
-    k²-means iteration (engine layer, DESIGN.md §3 + §8).
+    *rebuild-residency* k²-means iteration (engine layer, DESIGN.md §3 +
+    §8; the resident iteration of §9 drives the tiled kernel directly
+    over its carried layout instead of rebuilding one here).
 
     Builds the cluster-grouped layout on device, derives the per-block
     Hamerly skip flags from ``need`` (a block is skipped iff no point in it
@@ -221,6 +357,7 @@ __all__ = ["assign_nearest_pallas", "candidate_assign",
            "cluster_major_pack", "distance_argmin", "group_by_cluster",
            "group_by_cluster_device", "grouped_capacity",
            "k2_assign_grouped", "k2_bounded_assign", "pad_candidates",
+           "plan_layout_repair", "resident_capacity", "resident_regroup",
            "rowwise_grid_steps",
            "scatter_from_grouped", "segmented_scan", "select_clusters",
            "tiled_grid_steps"]

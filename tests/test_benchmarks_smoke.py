@@ -1,0 +1,23 @@
+"""Benchmark bit-rot canary: ``python -m benchmarks.run --smoke`` must run
+every section at tiny shapes and keep every BENCH_*.json schema intact
+(ISSUE 4). Slow-marked — the full suite catches a bench that a refactor
+broke before the next release-grade benchmark run does."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_benchmarks_smoke_mode():
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    proc = subprocess.run([sys.executable, "-m", "benchmarks.run",
+                           "--smoke"], env=env, cwd=_ROOT,
+                          capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    assert "SMOKE OK" in proc.stdout, proc.stdout[-2000:]
+    # every section must have reported a wall time
+    assert proc.stdout.count("# section time") >= 9, proc.stdout[-2000:]

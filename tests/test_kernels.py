@@ -232,6 +232,23 @@ def test_choose_blocks_vmem_budget():
         assert bn * d + bk * d + 2 * bn * bk <= 12 * 2 ** 20 // 4
 
 
+def test_choose_group_bn_vmem_budget():
+    """The grouped-layout point block must respect the VMEM budget like
+    choose_blocks: at yale's d=32256 the n/k heuristic alone would pick a
+    (bn, d) tile far past the budget."""
+    from repro.kernels.ops import choose_group_bn
+    budget = 12 * 2 ** 20 // 4
+    for d in (50, 784, 3072, 32256):
+        for n, k in ((65536, 512), (2414, 20), (150000, 1000)):
+            bn = choose_group_bn(n, k, d)
+            assert bn >= 8
+            assert bn * d + 8 * d + 4 * bn <= budget or bn == 8, (n, k, d)
+    # the yale shape concretely: d alone caps the block
+    assert choose_group_bn(2414, 20, 32256) * 32256 <= budget
+    # without d the legacy heuristic is unchanged
+    assert choose_group_bn(65536, 512) == 128
+
+
 # --------------------------------------------------------------------------
 # cluster_attend: k²-attention decode kernel (cluster-major KV layout)
 # --------------------------------------------------------------------------

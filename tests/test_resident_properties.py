@@ -1,0 +1,24 @@
+"""Property-based tests (hypothesis) for the resident grouped layout:
+arbitrary repair sequences must match from-scratch grouping up to
+within-cluster order (DESIGN.md §9)."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, strategies as st  # noqa: E402
+
+from test_resident_layout import run_repair_sequence  # noqa: E402
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=15,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+@given(st.integers(8, 120), st.integers(2, 7), st.sampled_from([4, 8]),
+       st.integers(0, 10_000), st.integers(1, 4))
+def test_repair_sequence_matches_from_scratch(n, k, bn, seed, rounds):
+    """Random assignment-churn sequences through plan_layout_repair keep
+    the layout equal (up to within-cluster order) to a from-scratch
+    resident_regroup of the same assignment, falling back to the re-sort
+    exactly when the plan reports it must."""
+    run_repair_sequence(n, k, bn, seed, rounds)
