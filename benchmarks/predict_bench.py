@@ -1,0 +1,138 @@
+"""Query-time predict benchmark: bounded route vs brute-force assignment.
+
+The ISSUE 5 acceptance gate: at (n_queries=65536, k=512, kn=32) the
+bounded predict path (closure routing + kn-neighborhood resolution,
+core.model.KMeansModel / DESIGN.md §10) must spend >= 3x fewer *counted*
+distances than the brute-force ``chunked_argmin_sqdist`` comparator at
+recall@1 >= 0.99. The distance counts are the paper's machine-independent
+metric; interpret-mode wall-clock and query throughput ride along for
+reference only.
+
+The served model is a converged k²-means fit over blobs whose mode count
+matches k (the canonical serving scenario: one center per mode of the
+workload); queries are fresh held-out draws from the same mixture.
+
+    PYTHONPATH=src python -m benchmarks.predict_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _measure(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def run(fast: bool = False, out: str | None = None, *, n: int | None = None,
+        d: int | None = None, k: int | None = None, kn: int | None = None,
+        n_queries: int | None = None, batch_size: int | None = None,
+        backend: str = "xla", fit_iters: int | None = None):
+    from repro.core import OpCounter, assign_nearest, fit_k2means
+    from repro.core.distance import chunked_argmin_sqdist
+    from repro.core.model import KMeansModel
+    from repro.data import gmm_blobs
+
+    from benchmarks.common import emit
+
+    if out is None:
+        out = "BENCH_predict.fast.json" if fast else "BENCH_predict.json"
+    dn, dd, dk, dkn, dq = (8192, 16, 64, 16, 8192) if fast \
+        else (65536, 32, 512, 32, 65536)
+    n, d, k, kn = n or dn, d or dd, k or dk, kn or dkn
+    n_queries = n_queries or dq
+    batch_size = batch_size or min(8192, n_queries)
+    fit_iters = fit_iters or (10 if fast else 30)
+
+    key = jax.random.PRNGKey(0)
+    allx = gmm_blobs(key, n + n_queries, d, true_k=k)
+    x, q = allx[:n], allx[n:]
+    init = x[jax.random.choice(key, n, shape=(k,), replace=False)]
+    a0 = assign_nearest(x, init).astype(jnp.int32)
+    res = fit_k2means(x, init, a0, kn=kn, max_iters=fit_iters,
+                      backend="xla")
+    model = KMeansModel.from_result(res, kn=kn, backend=backend)
+
+    # brute-force comparator: one full (nq, k) assignment
+    (a_brute, _), wall_brute = _measure(
+        lambda qq: chunked_argmin_sqdist(qq, model.centers), q)
+    dist_brute = n_queries * k
+
+    a_pred, wall_pred = _measure(
+        lambda qq: model.predict(qq, batch_size=batch_size), q)
+    counter = OpCounter()
+    model.predict(q, batch_size=batch_size, counter=counter)
+    dist_bounded = int(counter.distances)       # measured bounded charge
+    assert dist_bounded <= n_queries * model.dense_distances_per_query()
+
+    a_brute = np.asarray(a_brute)
+    a_pred = np.asarray(a_pred)
+    recall = float((a_pred == a_brute).mean())
+    # exactness conditional on the route landing a neighborhood that
+    # contains the true nearest center (the bounded-route contract);
+    # batched like predict so the (m, probes*cap, d) gather stays bounded
+    routed = np.concatenate(
+        [np.asarray(model.route(q[lo:lo + batch_size]))
+         for lo in range(0, n_queries, batch_size)])
+    in_nb = (np.asarray(model.neighbors)[routed]
+             == a_brute[:, None]).any(axis=1)
+    exact_in_nb = bool((a_pred[in_nb] == a_brute[in_nb]).all())
+
+    ratio = dist_brute / dist_bounded
+    rows = [["brute", dist_brute, round(wall_brute, 3),
+             round(n_queries / wall_brute), 1.0],
+            ["bounded", dist_bounded, round(wall_pred, 3),
+             round(n_queries / wall_pred), round(recall, 4)]]
+    emit(rows, ["path", "distances", "wall_s", "queries_per_s",
+                "recall_at_1"])
+
+    summary = {
+        "n": n, "d": d, "k": k, "kn": kn, "n_queries": n_queries,
+        "batch_size": batch_size, "backend": backend,
+        "fit_iters": res.iterations,
+        "route_groups": model.route_groups,
+        "route_cap": model.route_cap,
+        "route_probes": model.route_probes,
+        "distances_per_query_measured": round(dist_bounded / n_queries, 2),
+        "distances_per_query_dense": model.dense_distances_per_query(),
+        "distances_bounded": dist_bounded,
+        "distances_brute": dist_brute,
+        "distance_ratio": round(float(ratio), 4),
+        "recall_at_1": round(recall, 6),
+        "in_neighborhood_frac": round(float(in_nb.mean()), 6),
+        "exact_when_in_neighborhood": exact_in_nb,
+        "wall_bounded_s": round(wall_pred, 4),
+        "wall_brute_s": round(wall_brute, 4),
+        "qps_bounded": round(n_queries / wall_pred, 1),
+        "qps_brute": round(n_queries / wall_brute, 1),
+        "meets_acceptance": bool(ratio >= 3.0 and recall >= 0.99),
+    }
+    print(f"# predict summary: bounded route {ratio:.2f}x fewer counted "
+          f"distances than brute force ({dist_bounded / n_queries:.1f} "
+          f"measured / {model.dense_distances_per_query()} dense vs {k} "
+          f"per query) at recall@1 {recall:.4f} "
+          f"(acceptance: >= 3x, >= 0.99) at n_queries={n_queries}, k={k}, "
+          f"kn={kn}")
+    with open(out, "w") as f:
+        json.dump({"fast": fast, "runs": rows, "summary": summary}, f,
+                  indent=2)
+    print(f"# wrote {out}")
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--backend", default="xla")
+    args = ap.parse_args()
+    run(fast=args.fast, backend=args.backend)

@@ -27,6 +27,7 @@ BENCH_SCHEMAS = {
     "BENCH_init.json": ("fast", "runs", "summary"),
     "BENCH_dist.json": ("fast", "runs", "summary"),
     "BENCH_iter.json": ("fast", "runs", "summary"),
+    "BENCH_predict.json": ("fast", "runs", "summary"),
     "BENCH_perf.json": ("fast", "sections", "summary_ok", "total_wall_s"),
 }
 
@@ -55,8 +56,8 @@ def _sections(args, outdir=None):
     """The section list; ``outdir`` (smoke mode) redirects every artifact
     and shrinks every shape to schema-check scale."""
     from . import (assign_bench, complexity, convergence_curves, dist_bench,
-                   init_bench, iter_bench, roofline, table4_init,
-                   table5_speedup)
+                   init_bench, iter_bench, predict_bench, roofline,
+                   table4_init, table5_speedup)
 
     if outdir is not None:
         out = lambda name: os.path.join(outdir, name)      # noqa: E731
@@ -91,6 +92,12 @@ def _sections(args, outdir=None):
              lambda: iter_bench.run(fast=True, out=out("BENCH_iter.json"),
                                     n=1024, d=16, k=16, kn=8, iters=8,
                                     regroup_every=4)),
+            ("predict",
+             "Predict (smoke) -> BENCH_predict.json",
+             lambda: predict_bench.run(fast=True,
+                                       out=out("BENCH_predict.json"),
+                                       n=2048, d=16, k=32, kn=8,
+                                       n_queries=512, fit_iters=4)),
             ("fig23_convergence",
              "Fig 2/3 (smoke)",
              lambda: convergence_curves.run(k=8, max_iters=3)),
@@ -128,6 +135,10 @@ def _sections(args, outdir=None):
          "Iteration residency: rebuild vs resident grouped layout "
          "(-> BENCH_iter.json)",
          lambda: iter_bench.run(fast=args.fast)),
+        ("predict",
+         "Predict: bounded route vs brute-force assignment "
+         "(-> BENCH_predict.json)",
+         lambda: predict_bench.run(fast=args.fast)),
         ("fig23_convergence",
          "Fig 2/3: convergence curves (energy vs counted ops)",
          lambda: convergence_curves.run(max_iters=15 if args.fast else 30)),

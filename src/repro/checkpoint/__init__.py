@@ -1,2 +1,3 @@
 from .checkpoint import (save_checkpoint, restore_checkpoint,
-                         latest_step, AsyncCheckpointer, reshard_restore)
+                         latest_step, load_meta, AsyncCheckpointer,
+                         reshard_restore)

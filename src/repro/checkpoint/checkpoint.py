@@ -25,7 +25,11 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+def save_checkpoint(ckpt_dir: str, step: int, tree,
+                    extra_meta: dict | None = None) -> str:
+    """``extra_meta`` (JSON-serializable) rides along in meta.json —
+    e.g. the static config a restorer needs to rebuild the like-tree
+    before it can call :func:`restore_checkpoint` (``load_meta``)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"tmp-{step}")
     final = os.path.join(ckpt_dir, f"step-{step:09d}")
@@ -42,13 +46,22 @@ def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
 
     arrays = {f"leaf_{i}": to_np(x) for i, x in enumerate(leaves)}
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step, "n_leaves": len(leaves), "treedef": str(treedef)}
+    if extra_meta is not None:
+        meta["extra"] = extra_meta
     with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump({"step": step, "n_leaves": len(leaves),
-                   "treedef": str(treedef)}, f)
+        json.dump(meta, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
+
+
+def load_meta(ckpt_dir: str, step: int) -> dict:
+    """Read a checkpoint's meta.json (including any ``extra_meta``)."""
+    path = os.path.join(ckpt_dir, f"step-{step:09d}", "meta.json")
+    with open(path) as f:
+        return json.load(f)
 
 
 def latest_step(ckpt_dir: str) -> int | None:

@@ -6,10 +6,12 @@ from .elkan import fit_elkan
 from .gdi import (frontier_round_bound, gdi_device_init, gdi_fixed_rounds,
                   gdi_init, gdi_parallel_init, gdi_round_step,
                   projective_split, segmented_split_sweep)
-from .engine import (K2State, K2Step, ResidentState, StepStats, init_state,
-                     init_resident_state, k2_iteration,
-                     k2_resident_iteration, resident_assignment)
+from .engine import (K2State, K2Step, ResidentState, StepStats,
+                     center_knn_graph, init_state, init_resident_state,
+                     k2_iteration, k2_resident_iteration,
+                     resident_assignment)
 from .k2means import fit_k2means, k2means_step
+from .model import KMeansModel
 from .kmeanspp import kmeanspp_init, random_init, assign_nearest
 from .lloyd import KMeansResult, fit_lloyd, lloyd_step, update_centers
 from .minibatch import fit_minibatch

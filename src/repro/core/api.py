@@ -56,8 +56,12 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
         kn: int = 30, m: int = 30, batch: int = 100,
         minibatch_iters: int | None = None,
         counter: OpCounter | None = None,
-        mesh: Any = None, profile: bool = False, **kw: Any) -> KMeansResult:
-    """Cluster ``x`` into ``k`` clusters. The paper's method is the default.
+        mesh: Any = None, profile: bool = False,
+        return_model: bool = False,
+        model_capacity: int | None = None, **kw: Any):
+    """Cluster ``x`` into ``k`` clusters -> :class:`KMeansResult` (or
+    ``(result, model)`` with ``return_model=True``). The paper's method
+    is the default.
 
     Extra keywords flow to the method's fit function — notably
     ``backend="pallas"`` selects the fused k²-means device step
@@ -77,6 +81,12 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
     result's ``profile`` field — the residency win is directly readable
     from ``bytes_moved``.
 
+    ``return_model=True`` returns ``(result, model)`` where ``model`` is
+    a :class:`core.model.KMeansModel` built over the fit (centers +
+    center kNN graph + per-cluster stats + resident member arena with
+    ``model_capacity`` total rows, default 2n) — the query-time subsystem
+    behind ``model.predict`` / ``model.partial_fit`` (DESIGN.md §10).
+
     ``mesh=<jax Mesh>`` places the same engine iteration sharded
     (core.distributed / DESIGN.md §7-8): points row-sharded over the
     mesh's data axes, centers replicated, convergence via the psum'd
@@ -93,6 +103,16 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
     def done(result: KMeansResult) -> KMeansResult:
         if profile:
             result.profile = counter.profile()
+        if return_model:
+            from .model import KMeansModel
+            # the mesh placement defaults backend to "pallas"; the served
+            # model follows the backend the fit actually ran on
+            backend = kw.get("backend") or \
+                ("pallas" if mesh is not None else "xla")
+            model = KMeansModel.from_result(
+                result, x, kn=min(kn, k), capacity=model_capacity,
+                backend=backend, interpret=kw.get("interpret"))
+            return result, model
         return result
 
     if mesh is not None:

@@ -22,6 +22,13 @@ from .opcount import OpCounter
 def elkan_step(x, c, a, u, lb, stale):
     """One Elkan iteration with full (n, k) lower bounds.
 
+    ``stale`` is Elkan's r(x) flag: True iff the cached upper bound ``u``
+    is not the exact assigned-center distance. It is cleared by the
+    tightening step (one exact distance) and set again only when the
+    bound adjustment actually loosened the bound (the assigned center
+    moved) — a point whose center stands still keeps its exact ``u`` and
+    skips the recompute entirely on the next iteration.
+
     Returns (c', a', u', lb', stale', (computed_count, changed)).
     """
     n, d = x.shape
@@ -59,7 +66,13 @@ def elkan_step(x, c, a, u, lb, stale):
     u_adj = u_new + delta[a_new]
     computed = jnp.sum(compute_u) + jnp.sum(cond)
     changed = jnp.sum(a_new != a)
-    return c_next, a_new, u_adj, lb_adj, jnp.ones((n,), bool), (computed, changed)
+    # r(x) after this iteration: u_new is exact for every active point
+    # (active & stale points recomputed it, active & ~stale points either
+    # kept an already-exact u or took a freshly computed distance on
+    # reassignment), so staleness survives only on skipped stale points —
+    # and the adjustment re-stales exactly the points whose center moved.
+    stale_next = (stale & ~compute_u) | (delta[a_new] > 0.0)
+    return c_next, a_new, u_adj, lb_adj, stale_next, (computed, changed)
 
 
 def fit_elkan(x: jax.Array, centers: jax.Array, *, max_iters: int = 100,
@@ -83,12 +96,16 @@ def fit_elkan(x: jax.Array, centers: jax.Array, *, max_iters: int = 100,
     c = c_next
     counter.add_distances(k)
     counter.add_additions(n)
-    stale = jnp.ones((n,), bool)
+    # u was exact before the adjustment: only moved-center points are stale
+    stale = delta[a] > 0.0
     history = [(counter.snapshot(), float(clustering_energy(x, c, a)))]
     it = 0
     for it in range(1, max_iters + 1):
         c, a, u, lb, stale, (computed, changed) = elkan_step(x, c, a, u, lb, stale)
-        counter.add_distances(k * k / 2 + int(computed) + k)
+        # k*k//2 symmetric inter-center distances (integer charge: the
+        # counter rejects fractional op counts), the recomputed point
+        # distances, and k movement norms
+        counter.add_distances(k * k // 2 + int(computed) + k)
         counter.add_additions(n)
         energy = float(clustering_energy(x, c, a))
         history.append((counter.snapshot(), energy))

@@ -134,8 +134,13 @@ def init_state(centers: jax.Array, assignment: jax.Array,
                    jnp.full((k, kn), -1, jnp.int32), jnp.array(True))
 
 
-def _center_knn(c: jax.Array, kn: int, backend: str, interpret: bool):
-    """Replicated k_n-NN graph over centers (self-inclusive)."""
+def center_knn_graph(c: jax.Array, kn: int, backend: str = "xla",
+                     interpret: bool = False) -> jax.Array:
+    """Replicated k_n-NN graph over centers (self-inclusive, (k, kn)).
+
+    Shared by the fit-time iteration bodies below and the query-time
+    subsystem (:mod:`core.model`, DESIGN.md §10), so both sides route
+    through identical neighborhoods."""
     if backend == "pallas":
         from ..kernels.center_knn import center_sqdist
         cc_sq = center_sqdist(c, interpret=interpret)
@@ -143,6 +148,9 @@ def _center_knn(c: jax.Array, kn: int, backend: str, interpret: bool):
         cc_sq = pairwise_sqdist(c, c)
     _, neighbors = jax.lax.top_k(-cc_sq, kn)                # (k, kn)
     return neighbors.astype(jnp.int32)
+
+
+_center_knn = center_knn_graph
 
 
 def k2_iteration(x: jax.Array, w: jax.Array, state: K2State, *, kn: int,
@@ -644,6 +652,6 @@ class K2Step:
         return jax.jit(sharded)(state)
 
 
-__all__ = ["K2State", "K2Step", "ResidentState", "StepStats", "init_state",
-           "init_resident_state", "k2_iteration", "k2_resident_iteration",
-           "resident_assignment"]
+__all__ = ["K2State", "K2Step", "ResidentState", "StepStats",
+           "center_knn_graph", "init_state", "init_resident_state",
+           "k2_iteration", "k2_resident_iteration", "resident_assignment"]

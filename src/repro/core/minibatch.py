@@ -35,6 +35,13 @@ def minibatch_step(xb, c, v):
     return c, v
 
 
+# Default batch-count target: enough iterations to cover the data this many
+# times. Sculley runs a *fixed* t regardless of n; scaling the default with
+# n/batch (a constant number of data passes) keeps the sequential scan count
+# bounded at benchmark n instead of the former max(n // 2, 1) blow-up.
+DEFAULT_PASSES = 2
+
+
 def fit_minibatch(x: jax.Array, centers: jax.Array, key: jax.Array, *,
                   batch: int = 100, iters: int | None = None,
                   counter: OpCounter | None = None,
@@ -42,19 +49,27 @@ def fit_minibatch(x: jax.Array, centers: jax.Array, key: jax.Array, *,
     counter = counter or OpCounter()
     n, d = x.shape
     k = centers.shape[0]
-    iters = iters if iters is not None else max(n // 2, 1)
+    if iters is None:
+        iters = max(1, (DEFAULT_PASSES * n + batch - 1) // batch)
     c = centers
     v = jnp.zeros((k,), x.dtype)
     keys = jax.random.split(key, iters)
     history = []
+    a = dmin = None
     for t in range(iters):
         idx = jax.random.randint(keys[t], (batch,), 0, n)
         c, v = minibatch_step(x[idx], c, v)
         counter.add_distances(batch * k)
         counter.add_additions(batch)
         if (t + 1) % eval_every == 0 or t == iters - 1:
+            # the energy evaluation is real measured work (n*k distances):
+            # charge it so the paper-metric history stays honest
+            counter.add_distances(n * k)
             a, dmin = chunked_argmin_sqdist(x, c)
             history.append((counter.snapshot(), float(jnp.sum(dmin))))
-    a, dmin = chunked_argmin_sqdist(x, c)
+    if a is None:                       # iters=0: evaluate the init as-is
+        counter.add_distances(n * k)
+        a, dmin = chunked_argmin_sqdist(x, c)
+        history.append((counter.snapshot(), float(jnp.sum(dmin))))
     return KMeansResult(c, a, float(jnp.sum(dmin)), iters, counter.total,
                         history)

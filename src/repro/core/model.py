@@ -1,0 +1,673 @@
+"""Query-time subsystem: bounded ``predict`` + streaming ``partial_fit``.
+
+DESIGN.md §10. After ``fit`` the clustering becomes a *served* structure:
+:class:`KMeansModel` wraps the centers, the center k_n-NN graph and the
+per-cluster statistics (running member sums/counts) — plus, when built
+from the training points, the resident grouped arena
+(:class:`core.engine.ResidentState`) holding the member rows cluster-major.
+
+``predict`` is the paper's assignment machinery turned into a query path,
+two-level:
+
+*Routing* is a cluster-closure coarse quantizer over the *centers* (the
+candidate-restriction idea of Wang et al., Fast Approximate K-Means via
+Cluster Closures): the k centers are grouped into ``route_groups`` groups
+by a tiny k-means, each group lists its assigned centers closure-filled
+to ``route_cap`` with the nearest outside centers (overlap kills the
+group-boundary misses a disjoint partition suffers in high d), and a
+query scans its ``route_probes`` nearest groups' lists. *Resolution*
+takes the routed winner's k_n-neighborhood from the center kNN graph —
+the paper's own fit-time candidate structure — through the bkn-tiled
+Pallas candidate kernel (``kernels.ops.bounded_predict_assign``) or the
+portable XLA gather (``core.distance.chunked_candidate_argmin``). The
+routed center is self-inclusive in its own neighborhood, so the final
+argmin dominates everything the router computed.
+
+Triangle-inequality bounds make the *counted* cost far smaller than the
+dense scan, exactly as in the fit-time iteration: with the g group
+distances in hand and one exact anchor distance per probed list (the
+member nearest the group centroid), a probed member survives only when
+``max(|d(q,gc_probed) − d(c,gc_probed)|, d(q,gc_owner) − d(c,gc_owner))``
+— two free lower bounds from precomputed member-to-centroid distances —
+undercuts the anchor upper bound, and a resolution neighbor only when
+``d(nb, routed) < 2 d(q, routed)`` (Elkan's condition). Pruned entries
+provably cannot win, so the bounds change the charge, never the
+assignment (the TPU execution stays dense; the counter reflects what the
+serial bounded algorithm computes, the repo-wide §2 methodology).
+
+Counted distances per query land around ``route_groups + survivors``
+instead of the brute-force ``k``: at the acceptance shape (k=512, kn=32,
+defaults g=45/cap=68/probes=2) ~162 measured vs 512 — a >3x op cut at
+recall@1 ≥ 0.99 on blobs (benchmarks/predict_bench.py).
+
+``partial_fit`` is the streaming side (Sculley-style per-center
+learning-rate updates — the running mean ``centers = sums / counts`` with
+optional exponential forgetting ``decay``): each batch is assigned by the
+bounded route, the center update is the incremental delta over the batch
+(2·m counted additions, never an O(n) re-reduction), and the batch rows
+are appended into the resident arena by the sparse-repair machinery
+(``kernels.ops.plan_layout_repair``; free-pool exhaustion falls back to a
+full ``resident_regroup``, exactly like the fit-time engine). The center
+kNN graph refreshes every ``refresh_every`` batches — the O(k²d) graph
+build is the only super-linear maintenance cost, so it is amortized.
+
+The arena parks not-yet-streamed capacity rows in cluster 0 at weight 0:
+every append is then a *move* (parked slot → assigned cluster's
+watermark), which keeps the §9.1 slot-ownership invariants intact after
+every batch and lets re-sorts run at one fixed static shape.
+
+Checkpointing: the model state is a pytree of arrays plus a small static
+config — ``save``/``restore`` ride the repo checkpointer
+(``checkpoint.save_checkpoint`` with the config in ``extra_meta``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from .distance import chunked_candidate_argmin, pairwise_sqdist, sqnorm
+from .engine import ResidentState
+from .lloyd import KMeansResult
+from .opcount import LAYOUT_STATE_LANES, OpCounter
+
+
+def _default_groups(k: int) -> int:
+    """Routing-group count: ~2 sqrt(k) (g=45 at the k=512 acceptance
+    shape), at least 4."""
+    return min(k, max(4, int(round(2.0 * math.sqrt(k)))))
+
+
+def _default_cap(k: int, g: int, kn: int) -> int:
+    """Member-list width: ~6x the mean group size (5x closure overlap on
+    top of the disjoint partition — the triangle-inequality pruning
+    absorbs most of the dense cost, so wide lists buy recall nearly for
+    free in counted ops), never below the kn-neighborhood."""
+    return min(k, max(kn, 6 * k // max(g, 1)))
+
+
+class Router(typing.NamedTuple):
+    """Cluster-closure routing structure, rebuilt with the kNN graph.
+
+    ``mdist``/``modist`` are the member-to-centroid true distances the
+    query-time triangle-inequality bounds read: ``mdist[j, i]`` to the
+    *listing* group's centroid, ``modist[j, i]`` to the member's *owner*
+    group's centroid (``mowner[j, i]``)."""
+    gc: jax.Array       # (g, d) group centroids
+    members: jax.Array  # (g, cap) int32 closure member lists
+    mdist: jax.Array    # (g, cap) d(member, gc[listing group])
+    mowner: jax.Array   # (g, cap) int32 owner group per member
+    modist: jax.Array   # (g, cap) d(member, gc[owner group])
+
+
+@functools.partial(jax.jit, static_argnames=("g", "cap", "iters"))
+def _build_router(c, g: int, cap: int, iters: int) -> Router:
+    """Cluster-closure router over the centers: a tiny k-means groups the
+    k centers into g groups (strided warm start), and each group lists
+    its assigned members closure-filled to ``cap`` with the nearest
+    non-members. Selection ranks assigned members (by distance to the
+    group centroid) strictly ahead of fills by squashing both scores
+    into disjoint [0,1) / [1,2) bands. The member-to-centroid distances
+    ride along for the query-time bounds."""
+    k = c.shape[0]
+    gc = c[jnp.linspace(0, k - 1, g).round().astype(jnp.int32)]
+    for _ in range(iters):
+        ga = jnp.argmin(pairwise_sqdist(c, gc), axis=1)
+        sums = jax.ops.segment_sum(c, ga, num_segments=g)
+        cnt = jax.ops.segment_sum(jnp.ones((k,), c.dtype), ga,
+                                  num_segments=g)
+        gc = jnp.where(cnt[:, None] > 0,
+                       sums / jnp.maximum(cnt, 1.0)[:, None], gc)
+    dgc = pairwise_sqdist(gc, c)                        # (g, k)
+    ga = jnp.argmin(dgc, axis=0)                        # (k,) owner group
+    norm = dgc / (jnp.max(dgc) + 1.0)                   # scores in [0, 1)
+    assigned = ga[None, :] == jnp.arange(g)[:, None]    # (g, k)
+    score = jnp.where(assigned, norm, 1.0 + norm)
+    _, members = jax.lax.top_k(-score, cap)
+    members = members.astype(jnp.int32)
+    dgc_true = jnp.sqrt(dgc)
+    mdist = jnp.take_along_axis(dgc_true, members, axis=1)
+    mowner = ga[members].astype(jnp.int32)
+    modist = dgc_true.T[members, mowner]                # d(c, gc_owner)
+    return Router(gc, members, mdist, mowner, modist)
+
+
+@functools.partial(jax.jit, static_argnames=("probes",))
+def _route(q, c, router: Router, probes: int):
+    """Route queries through the closure router.
+
+    Distances to the g group centroids, then a scan over the ``probes``
+    nearest groups' member lists with triangle-inequality pruning: one
+    exact anchor distance per probed list (its head member — the one
+    nearest the group centroid), every other member charged only when
+    ``max(|d(q,gc_probed) − mdist|, d(q,gc_owner) − modist)`` undercuts
+    the anchor bound. The dense (m, probes*cap) scan still executes —
+    pruned entries provably cannot win the argmin, so masking them
+    changes nothing; ``n_scanned`` is what the serial bounded algorithm
+    would compute (charged by the caller).
+
+    Returns (routed (m,) int32, u_routed (m,) true distance to the
+    routed center, n_scanned (m,) int32 per-query distance charge for
+    the stage)."""
+    m = q.shape[0]
+    cap = router.members.shape[1]
+    dg = jnp.sqrt(pairwise_sqdist(q, router.gc))        # (m, g)
+    _, gi = jax.lax.top_k(-dg, probes)
+    cand = router.members[gi].reshape(m, -1)            # (m, probes*cap)
+    lb1 = jnp.abs(jnp.take_along_axis(dg, gi, axis=1)[:, :, None]
+                  - router.mdist[gi]).reshape(m, -1)
+    own = router.mowner[gi].reshape(m, -1)
+    lb2 = jnp.take_along_axis(dg, own, axis=1) \
+        - router.modist[gi].reshape(m, -1)
+    lb = jnp.maximum(lb1, lb2)
+    cc = c[cand]
+    cross = jnp.einsum("md,mjd->mj", q, cc)
+    sq = jnp.maximum(sqnorm(q)[:, None] - 2.0 * cross + sqnorm(cc), 0.0)
+    anchor_cols = jnp.arange(probes) * cap
+    u_anchor = jnp.sqrt(jnp.min(sq[:, anchor_cols], axis=1))
+    passing = lb < u_anchor[:, None]
+    passing = passing.at[:, anchor_cols].set(True)
+    sq_m = jnp.where(passing, sq, jnp.inf)
+    j = jnp.argmin(sq_m, axis=1)
+    routed = jnp.take_along_axis(cand, j[:, None], axis=1)[:, 0]
+    u_routed = jnp.sqrt(jnp.take_along_axis(sq_m, j[:, None], axis=1)[:, 0])
+    n_scanned = router.gc.shape[0] + jnp.sum(passing, axis=1)
+    return routed, u_routed, n_scanned
+
+
+@functools.partial(jax.jit, static_argnames=("kn",))
+def _graph_with_dists(c, kn: int):
+    """Center kNN graph plus true neighbor distances from ONE O(k²d)
+    pairwise pass (the same top-k selection as
+    :func:`core.engine.center_knn_graph`, so fit and query sides route
+    through identical neighborhoods). The distances feed the resolution
+    stage's Elkan ``2u`` pruning charge."""
+    cc = pairwise_sqdist(c, c)
+    _, neighbors = jax.lax.top_k(-cc, kn)
+    neighbors = neighbors.astype(jnp.int32)
+    nb_dist = jnp.sqrt(jnp.take_along_axis(cc, neighbors, axis=1))
+    return neighbors, nb_dist
+
+
+@jax.jit
+def _delta_update(c, sums, counts, xb, wb, ab, decay):
+    """Sculley per-center running-mean update as an incremental delta:
+    ``sums/counts`` absorb the batch (with exponential forgetting
+    ``decay``) and every touched center lands on its new running mean —
+    the batched equivalent of sequential ``eta = 1/v[c]`` steps."""
+    k = c.shape[0]
+    sums2 = sums * decay + jax.ops.segment_sum(xb * wb[:, None], ab,
+                                               num_segments=k)
+    counts2 = counts * decay + jax.ops.segment_sum(wb, ab, num_segments=k)
+    c2 = jnp.where(counts2[:, None] > 0,
+                   sums2 / jnp.maximum(counts2, 1e-12)[:, None], c)
+    return c2, sums2, counts2
+
+
+@jax.jit
+def _batch_ids(wb, n_rows):
+    """Insertion ids for the live batch rows: dense from ``n_rows`` in
+    lane order, the sentinel -1 for w=0 padding lanes — padding neither
+    consumes ids/capacity nor appears in the mirrors (consumers map the
+    sentinel out of range and scatter with mode="drop")."""
+    live = wb > 0
+    return jnp.where(live, n_rows + jnp.cumsum(live) - 1, -1).astype(
+        jnp.int32)
+
+
+@jax.jit
+def _update_mirrors(x_pts, a_pts, w_pts, xb, wb, ab, ids):
+    """Write the live batch rows into the insertion-order mirrors
+    (re-sorts and ``assignment()`` read them); padding lanes (sentinel
+    ids) drop."""
+    cap = x_pts.shape[0]
+    idx = jnp.where(ids >= 0, ids, cap)
+    x_pts = x_pts.at[idx].set(xb.astype(x_pts.dtype), mode="drop")
+    a_pts = a_pts.at[idx].set(ab.astype(jnp.int32), mode="drop")
+    w_pts = w_pts.at[idx].set(wb.astype(w_pts.dtype), mode="drop")
+    return x_pts, a_pts, w_pts
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "cap"))
+def _arena_try_append(state: ResidentState, xb, wb, ab, ids, *, bn: int,
+                      cap: int):
+    """Sparse-repair append of one batch into the arena.
+
+    Every live batch row moves from its parked slot (cluster 0, weight 0)
+    to a slot allocated at its destination cluster's watermark
+    (``plan_layout_repair``); the parked slot becomes a hole reclaimed by
+    the next full re-sort. Returns ``(xg, pid, wg, b2c, fill, openb, ok)``
+    — the arrays are only valid when ``ok`` (the free pool sufficed);
+    the caller falls back to :func:`_arena_resort` otherwise."""
+    from ..kernels.ops import plan_layout_repair
+    s_total = state.pid.shape[0]
+    active = wb > 0
+    dst_slot, b2c2, fill2, openb2, total_new, n_free = plan_layout_repair(
+        state.b2c, state.fill, state.openb, active, ab, bn=bn)
+    ok = total_new <= n_free
+    # invert pid -> slot to find the batch rows' parked source slots
+    slot_idx = jnp.arange(s_total, dtype=jnp.int32)
+    slot_of = jnp.full((cap,), s_total, jnp.int32) \
+        .at[jnp.where(state.pid >= 0, state.pid, cap)] \
+        .set(slot_idx, mode="drop")
+    src = slot_of[jnp.clip(ids, 0, cap - 1)]             # (m,) parked slots
+    src = jnp.where(active, src, s_total)                # dead lanes drop
+    pid2 = state.pid.at[src].set(-1, mode="drop") \
+        .at[dst_slot].set(ids.astype(jnp.int32), mode="drop")
+    xg2 = state.xg.at[dst_slot].set(xb.astype(state.xg.dtype), mode="drop")
+    wg2 = state.wg.at[src].set(0.0, mode="drop") \
+        .at[dst_slot].set(wb.astype(state.wg.dtype), mode="drop")
+    return xg2, pid2, wg2, b2c2, fill2, openb2, ok
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "nbt"))
+def _arena_resort(x_pts, a_pts, w_pts, *, k: int, bn: int, nbt: int):
+    """Full re-sort from the insertion-order mirrors (static shape: the
+    mirrors cover the whole capacity, parked rows ride along in cluster 0
+    at weight 0). Same packing as the fit-time engine's re-sort."""
+    from ..kernels.ops import resident_regroup
+    perm, b2c, fill, openb = resident_regroup(a_pts, k, bn, nbt)
+    valid = perm >= 0
+    sp = jnp.maximum(perm, 0)
+    xg = jnp.where(valid[:, None], x_pts[sp], 0.0).astype(x_pts.dtype)
+    wg = jnp.where(valid, w_pts[sp], 0.0).astype(w_pts.dtype)
+    return xg, perm, wg, b2c, fill, openb
+
+
+@dataclasses.dataclass
+class KMeansModel:
+    """A served clustering: centers + center kNN graph + per-cluster stats
+    (+ optional resident member arena). Mutable — ``partial_fit`` updates
+    it in place; ``predict`` only reads.
+
+    ``state`` is a :class:`core.engine.ResidentState`: ``c`` the centers,
+    ``prev_nb`` the center kNN graph, ``sums``/``counts`` the running
+    per-cluster statistics, and the slot arrays the member arena (empty
+    — zero slots — for predict-only models built without points). The
+    ``ug``/``lo_g`` bound lanes are carried at zero: the query path
+    recomputes from scratch, so there are no bounds to keep warm.
+    """
+    state: ResidentState
+    router: Router              # closure routing structure (g groups)
+    nb_dist: jax.Array          # (k, kn) center-to-neighbor true distances
+    x_pts: jax.Array            # (cap, d) insertion-order mirror
+    a_pts: jax.Array            # (cap,) int32 assignment mirror
+    w_pts: jax.Array            # (cap,) weight mirror (0 = not streamed)
+    kn: int
+    bn: int
+    backend: str = "xla"        # "xla" | "pallas" (predict resolution)
+    bkn: int = 8
+    interpret: bool | None = None
+    route_probes: int = 2       # groups scanned per query
+    router_iters: int = 8       # tiny-k-means iterations per router build
+    refresh_every: int = 8      # partial_fit batches between graph builds
+    decay: float = 1.0          # exponential forgetting of sums/counts
+    n_rows: int = 0             # streamed rows (arena + mirrors prefix)
+    batches_seen: int = 0
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_result(cls, result: KMeansResult, x: jax.Array | None = None,
+                    *, kn: int = 30, capacity: int | None = None,
+                    backend: str = "xla", bkn: int = 8,
+                    interpret: bool | None = None,
+                    route_groups: int | None = None,
+                    route_cap: int | None = None, route_probes: int = 2,
+                    router_iters: int = 8,
+                    refresh_every: int = 8, decay: float = 1.0,
+                    bn: int | None = None) -> "KMeansModel":
+        """Build a model from any :class:`KMeansResult`.
+
+        Without ``x`` the model is predict-only plus stats-only
+        ``partial_fit`` (per-cluster counts seeded from the fit
+        assignment, sums from ``centers * counts`` — exact, since the
+        centers are the member means). With ``x`` the resident arena is
+        built over the training rows with headroom for
+        ``capacity - len(x)`` streamed rows (default capacity: 2n).
+        """
+        from ..kernels.ops import choose_group_bn, resident_capacity
+        c = jnp.asarray(result.centers, jnp.float32)
+        k, d = c.shape
+        kn = min(kn, k)
+        a0 = jnp.asarray(result.assignment, jnp.int32)
+        neighbors, nb_dist = _graph_with_dists(c, kn)
+        g = route_groups or _default_groups(k)
+        rcap = route_cap or _default_cap(k, g, kn)
+        router = _build_router(c, g, rcap, router_iters)
+        counts = jnp.bincount(a0, length=k).astype(jnp.float32)
+        sums = c * counts[:, None]
+        common = dict(router=router, nb_dist=nb_dist, kn=kn,
+                      backend=backend, bkn=bkn, interpret=interpret,
+                      route_probes=route_probes, router_iters=router_iters,
+                      refresh_every=refresh_every, decay=decay,
+                      batches_seen=0)
+        if x is None:
+            zerod = jnp.zeros((0, d), jnp.float32)
+            zero1 = jnp.zeros((0,), jnp.float32)
+            state = ResidentState(
+                c=c, prev_nb=neighbors, sums=sums, counts=counts,
+                it=jnp.zeros((), jnp.int32), first=jnp.array(False),
+                xg=zerod, pid=jnp.zeros((0,), jnp.int32), ug=zero1,
+                lo_g=zero1, wg=zero1, b2c=jnp.zeros((0,), jnp.int32),
+                fill=jnp.zeros((k,), jnp.int32),
+                openb=jnp.full((k,), -1, jnp.int32))
+            return cls(state=state, x_pts=zerod,
+                       a_pts=jnp.zeros((0,), jnp.int32), w_pts=zero1,
+                       bn=bn or 8, n_rows=0, **common)
+        x = jnp.asarray(x, jnp.float32)
+        n = x.shape[0]
+        cap = capacity or 2 * n
+        if cap < n:
+            raise ValueError(f"capacity={cap} < n={n} training rows")
+        bn = bn or choose_group_bn(cap, k, d, bkn=bkn)
+        nbt = resident_capacity(cap, k, bn)
+        # parked capacity tail: cluster 0 at weight 0 (module docstring)
+        x_pts = jnp.zeros((cap, d), jnp.float32).at[:n].set(x)
+        a_pts = jnp.zeros((cap,), jnp.int32).at[:n].set(a0)
+        w_pts = jnp.zeros((cap,), jnp.float32).at[:n].set(1.0)
+        xg, pid, wg, b2c, fill, openb = _arena_resort(
+            x_pts, a_pts, w_pts, k=k, bn=bn, nbt=nbt)
+        zero_s = jnp.zeros((pid.shape[0],), jnp.float32)
+        state = ResidentState(
+            c=c, prev_nb=neighbors, sums=sums, counts=counts,
+            it=jnp.zeros((), jnp.int32), first=jnp.array(False),
+            xg=xg, pid=pid, ug=zero_s, lo_g=zero_s, wg=wg, b2c=b2c,
+            fill=fill, openb=openb)
+        return cls(state=state, x_pts=x_pts, a_pts=a_pts, w_pts=w_pts,
+                   bn=bn, n_rows=n, **common)
+
+    # -- read-side properties ---------------------------------------------
+
+    @property
+    def centers(self) -> jax.Array:
+        return self.state.c
+
+    @property
+    def neighbors(self) -> jax.Array:
+        return self.state.prev_nb
+
+    @property
+    def counts(self) -> jax.Array:
+        return self.state.counts
+
+    @property
+    def sums(self) -> jax.Array:
+        return self.state.sums
+
+    @property
+    def k(self) -> int:
+        return self.state.c.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.state.c.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.x_pts.shape[0]
+
+    @property
+    def has_arena(self) -> bool:
+        return self.state.pid.shape[0] > 0
+
+    def assignment(self) -> jax.Array:
+        """Insertion-order assignment of every streamed row, (n_rows,)."""
+        return self.a_pts[:self.n_rows]
+
+    @property
+    def route_groups(self) -> int:
+        return self.router.gc.shape[0]
+
+    @property
+    def route_cap(self) -> int:
+        return self.router.members.shape[1]
+
+    def dense_distances_per_query(self) -> int:
+        """Dense (unpruned) distance evaluations per predicted query —
+        the upper bound on the counted charge; the triangle-inequality
+        bounds typically cut the measured charge well below it."""
+        return (self.route_groups + self.route_probes * self.route_cap
+                + self.kn)
+
+    # -- predict -----------------------------------------------------------
+
+    def route(self, q: jax.Array) -> jax.Array:
+        """Route queries through the closure router ((m,) int32): the
+        best center found among the ``route_probes`` nearest groups'
+        member lists. The resolution pass then scans this center's
+        kn-neighborhood, which contains it (self-inclusive graph), so the
+        final argmin dominates every distance the router computed."""
+        q = jnp.asarray(q, jnp.float32)
+        routed, _, _ = _route(q, self.state.c, self.router,
+                              self.route_probes)
+        return routed
+
+    def _resolve(self, qb: jax.Array, routed: jax.Array):
+        if self.backend == "pallas":
+            from ..kernels.ops import bounded_predict_assign, choose_group_bn
+            bn = choose_group_bn(qb.shape[0], self.k, self.d, bkn=self.bkn)
+            return bounded_predict_assign(
+                qb, self.state.c, self.state.prev_nb, routed, bn=bn,
+                bkn=self.bkn, interpret=self.interpret)
+        return _resolve_xla(qb, self.state.c, self.state.prev_nb, routed)
+
+    def _predict_batch(self, qb: jax.Array):
+        """Route + resolve one batch. Returns (a, sqdist, routed,
+        n_counted (m,)) with n_counted the per-query distance charge of
+        the serial bounded algorithm: group scan + surviving members
+        (from :func:`_route`) + resolution neighbors passing Elkan's
+        ``d(nb, routed) < 2 d(q, routed)`` condition."""
+        routed, u_routed, n_scan = _route(qb, self.state.c, self.router,
+                                          self.route_probes)
+        a_b, d_b = self._resolve(qb, routed)
+        # the self-neighbor (distance 0) always passes 2u when u > 0, but
+        # the serial algorithm already holds d(q, routed) from the routing
+        # stage — don't charge it twice
+        n_nb = jnp.maximum(
+            jnp.sum(self.nb_dist[routed] < 2.0 * u_routed[:, None],
+                    axis=1) - 1, 0)
+        return a_b, d_b, routed, n_scan + n_nb
+
+    def predict(self, queries: jax.Array, *, batch_size: int = 8192,
+                counter: OpCounter | None = None,
+                return_sqdist: bool = False):
+        """Bounded nearest-center assignment of ``queries``.
+
+        Processes ``batch_size`` queries at a time (one compiled program:
+        the tail batch is padded up). Charges the *measured* bounded
+        distance count to ``counter`` (at most
+        ``n * dense_distances_per_query()``); the brute-force comparator
+        (:func:`core.distance.chunked_argmin_sqdist`) costs ``n * k``.
+        Returns the assignment (n,) int32, plus each query's squared
+        distance to it when ``return_sqdist``.
+        """
+        q = jnp.asarray(queries, jnp.float32)
+        nq = q.shape[0]
+        if nq == 0:
+            empty_a = jnp.zeros((0,), jnp.int32)
+            return (empty_a, jnp.zeros((0,), jnp.float32)) \
+                if return_sqdist else empty_a
+        bs = min(batch_size, nq)
+        a_parts, d_parts, counted = [], [], []
+        for lo in range(0, nq, bs):
+            qb = q[lo:lo + bs]
+            m = qb.shape[0]
+            pad = bs - m
+            if pad:                          # pad the tail batch
+                qb = jnp.pad(qb, ((0, pad), (0, 0)))
+            a_b, d_b, routed, n_c = self._predict_batch(qb)
+            a_parts.append(a_b[:m])
+            d_parts.append(d_b[:m])
+            if counter is not None:           # padding rows charge nothing
+                counted.append(jnp.sum(n_c[:m]))
+        if counter is not None:
+            counter.add_distances(int(sum(int(c) for c in counted)))
+        a = jnp.concatenate(a_parts) if len(a_parts) > 1 else a_parts[0]
+        if not return_sqdist:
+            return a
+        d1 = jnp.concatenate(d_parts) if len(d_parts) > 1 else d_parts[0]
+        return a, d1
+
+    # -- partial_fit -------------------------------------------------------
+
+    def partial_fit(self, batch: jax.Array, w: jax.Array | None = None,
+                    *, counter: OpCounter | None = None) -> jax.Array:
+        """Fold one streamed mini-batch into the served clustering.
+
+        Assigns the batch by the bounded route, applies the incremental
+        per-center running-mean update, appends the rows into the
+        resident arena (sparse repair; full re-sort on free-pool
+        exhaustion) and refreshes the center kNN graph every
+        ``refresh_every`` batches. Returns the batch assignment.
+
+        Each distinct batch length compiles its own append program —
+        stream fixed-size batches (pad with ``w=0`` rows) to stay on one
+        program.
+        """
+        xb = jnp.asarray(batch, jnp.float32)
+        if xb.ndim != 2 or xb.shape[1] != self.d:
+            raise ValueError(f"batch shape {xb.shape} != (m, {self.d})")
+        m = xb.shape[0]
+        wb = jnp.ones((m,), jnp.float32) if w is None \
+            else jnp.asarray(w, jnp.float32)
+
+        ab, _, _, n_counted = self._predict_batch(xb)
+
+        c2, sums2, counts2 = _delta_update(
+            self.state.c, self.state.sums, self.state.counts, xb, wb, ab,
+            jnp.float32(self.decay))
+        st = self.state._replace(c=c2, sums=sums2, counts=counts2,
+                                 it=self.state.it + 1)
+
+        resorted = False
+        m_live = int(jnp.sum(wb > 0))
+        if self.has_arena and m_live:
+            if self.n_rows + m_live > self.capacity:
+                raise ValueError(
+                    f"arena full: {self.n_rows} rows + batch {m_live} > "
+                    f"capacity {self.capacity}")
+            ids = _batch_ids(wb, self.n_rows)
+            self.x_pts, self.a_pts, self.w_pts = _update_mirrors(
+                self.x_pts, self.a_pts, self.w_pts, xb, wb, ab, ids)
+            xg, pid, wg, b2c, fill, openb, ok = _arena_try_append(
+                st, xb, wb, ab, ids, bn=self.bn, cap=self.capacity)
+            if not bool(ok):
+                resorted = True
+                xg, pid, wg, b2c, fill, openb = _arena_resort(
+                    self.x_pts, self.a_pts, self.w_pts, k=self.k,
+                    bn=self.bn, nbt=st.b2c.shape[0])
+            st = st._replace(xg=xg, pid=pid, wg=wg, b2c=b2c, fill=fill,
+                             openb=openb)
+            self.n_rows += m_live
+
+        self.batches_seen += 1
+        refreshed = self.batches_seen % self.refresh_every == 0
+        if refreshed:
+            # center-derived structures re-sync with the drifted centers:
+            # the kNN graph (resolution) and the closure router (routing)
+            nb, self.nb_dist = _graph_with_dists(st.c, self.kn)
+            st = st._replace(prev_nb=nb)
+            self.router = _build_router(
+                st.c, self.route_groups, self.route_cap, self.router_iters)
+        self.state = st
+
+        if counter is not None:
+            # w=0 padding rows (the fixed-batch-size idiom) charge nothing
+            counter.add_distances(int(jnp.sum(jnp.where(wb > 0, n_counted,
+                                                        0))))
+            counter.add_additions(2 * m_live)       # incremental delta
+            if refreshed:                           # graph + router build
+                counter.add_distances(
+                    self.k * self.k
+                    + (self.router_iters + 1) * self.route_groups * self.k)
+            if self.has_arena:
+                moved = self.capacity if resorted else m_live
+                row_bytes = (self.d + LAYOUT_STATE_LANES) * 4
+                counter.add_gather_bytes(moved * row_bytes)
+                counter.add_scatter_bytes(moved * row_bytes)
+                if resorted:
+                    counter.add_sort_bytes(
+                        moved * 8 * max(1.0, math.log2(max(moved, 2))))
+        return ab
+
+    # -- checkpointing -----------------------------------------------------
+
+    def _config(self) -> dict:
+        return {"k": self.k, "d": self.d, "kn": self.kn, "bn": self.bn,
+                "nbt": int(self.state.b2c.shape[0]),
+                "capacity": self.capacity, "backend": self.backend,
+                "bkn": self.bkn, "route_groups": self.route_groups,
+                "route_cap": self.route_cap,
+                "route_probes": self.route_probes,
+                "router_iters": self.router_iters,
+                "refresh_every": self.refresh_every, "decay": self.decay,
+                "n_rows": self.n_rows, "batches_seen": self.batches_seen}
+
+    def _tree(self) -> dict:
+        return {"state": self.state, "router": self.router,
+                "nb_dist": self.nb_dist, "x_pts": self.x_pts,
+                "a_pts": self.a_pts, "w_pts": self.w_pts}
+
+    @classmethod
+    def _like_tree(cls, cfg: dict) -> dict:
+        k, d, kn = cfg["k"], cfg["d"], cfg["kn"]
+        nbt, bn, cap = cfg["nbt"], cfg["bn"], cfg["capacity"]
+        s = nbt * bn if nbt else 0
+        f32, i32 = jnp.float32, jnp.int32
+        state = ResidentState(
+            c=jnp.zeros((k, d), f32), prev_nb=jnp.zeros((k, kn), i32),
+            sums=jnp.zeros((k, d), f32), counts=jnp.zeros((k,), f32),
+            it=jnp.zeros((), i32), first=jnp.array(False),
+            xg=jnp.zeros((s, d), f32), pid=jnp.zeros((s,), i32),
+            ug=jnp.zeros((s,), f32), lo_g=jnp.zeros((s,), f32),
+            wg=jnp.zeros((s,), f32), b2c=jnp.zeros((nbt,), i32),
+            fill=jnp.zeros((k,), i32), openb=jnp.zeros((k,), i32))
+        g, rcap = cfg["route_groups"], cfg["route_cap"]
+        router = Router(gc=jnp.zeros((g, d), f32),
+                        members=jnp.zeros((g, rcap), i32),
+                        mdist=jnp.zeros((g, rcap), f32),
+                        mowner=jnp.zeros((g, rcap), i32),
+                        modist=jnp.zeros((g, rcap), f32))
+        return {"state": state, "router": router,
+                "nb_dist": jnp.zeros((k, kn), f32),
+                "x_pts": jnp.zeros((cap, d), f32),
+                "a_pts": jnp.zeros((cap,), i32),
+                "w_pts": jnp.zeros((cap,), f32)}
+
+    def save(self, ckpt_dir: str, step: int = 0) -> str:
+        """Atomic checkpoint of the full model (arrays + config)."""
+        from ..checkpoint import save_checkpoint
+        return save_checkpoint(ckpt_dir, step, self._tree(),
+                               extra_meta={"kmeans_model": self._config()})
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, step: int | None = None) -> "KMeansModel":
+        from ..checkpoint import latest_step, load_meta, restore_checkpoint
+        if step is None:
+            step = latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+        cfg = load_meta(ckpt_dir, step)["extra"]["kmeans_model"]
+        tree = restore_checkpoint(ckpt_dir, step, cls._like_tree(cfg))
+        return cls(state=tree["state"], router=tree["router"],
+                   nb_dist=tree["nb_dist"], x_pts=tree["x_pts"],
+                   a_pts=tree["a_pts"], w_pts=tree["w_pts"],
+                   kn=cfg["kn"], bn=cfg["bn"], backend=cfg["backend"],
+                   bkn=cfg["bkn"], route_probes=cfg["route_probes"],
+                   router_iters=cfg["router_iters"],
+                   refresh_every=cfg["refresh_every"], decay=cfg["decay"],
+                   n_rows=cfg["n_rows"], batches_seen=cfg["batches_seen"])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _resolve_xla(q, c, neighbors, routed, chunk: int = 2048):
+    cand = neighbors[routed]                                # (m, kn)
+    return chunked_candidate_argmin(q, c, cand, chunk=chunk)
+
+
+__all__ = ["KMeansModel", "Router"]

@@ -48,14 +48,26 @@ class OpCounter:
     def wall(self) -> float:
         return time.perf_counter() - self.wall_t0
 
+    @staticmethod
+    def _integral(n, kind: str) -> float:
+        """Whole-op charges must be integral: a fractional distance count
+        (e.g. a Python-float ``k * k / 2`` at odd k) silently corrupts
+        ``total`` for the paper's speedup tables. Sort *equivalents* are
+        the one legitimately fractional lane (``add_sort``)."""
+        v = float(n)
+        if v != int(v):
+            raise ValueError(f"{kind} charge must be an integer op count, "
+                             f"got {n!r}")
+        return v
+
     def add_distances(self, n: float) -> None:
-        self.distances += float(n)
+        self.distances += self._integral(n, "distances")
 
     def add_inner(self, n: float) -> None:
-        self.inner_products += float(n)
+        self.inner_products += self._integral(n, "inner_products")
 
     def add_additions(self, n: float) -> None:
-        self.additions += float(n)
+        self.additions += self._integral(n, "additions")
 
     def add_sort(self, m: float, d: int) -> None:
         """Charge an m-element sort as m*log2(m)/d vector ops (paper §2.2)."""

@@ -29,7 +29,11 @@ per call from the current assignment (ops.group_by_cluster_device:
 points sorted by cluster, clusters padded to block multiples); resident
 callers pass the carried arena (ops.resident_regroup /
 ops.plan_layout_repair) whose free blocks simply arrive with their skip
-flag set.
+flag set. The same contract serves *queries* at decode time: the
+query-time subsystem (DESIGN.md §10, ops.bounded_predict_assign) groups
+queries by their routed center and resolves each block against that
+center's neighbor list — fit-time and query-time assignment share this
+one kernel.
 
 Triangle-inequality adaptation (DESIGN.md §3): a per-block skip flag (from
 the Hamerly-style bounds) gates the whole compute with @pl.when — an entire

@@ -307,6 +307,35 @@ def k2_bounded_assign(x: jax.Array, c: jax.Array, neighbors: jax.Array,
     return a_new, u_new, lo_new
 
 
+@functools.partial(jax.jit, static_argnames=("bn", "bkn", "interpret"))
+def bounded_predict_assign(q: jax.Array, c: jax.Array, neighbors: jax.Array,
+                           routed: jax.Array, *, bn: int = 128, bkn: int = 8,
+                           interpret: bool | None = None):
+    """Query-time analogue of :func:`k2_bounded_assign` (DESIGN.md §10):
+    resolve routed queries against their route center's k_n-neighborhood
+    through the bkn-tiled candidate kernel.
+
+    q: (m, d) queries; c: (k, d) centers; neighbors: (k, kn) per-center
+    candidate lists (self-inclusive); routed: (m,) int32 route center per
+    query (from the kNN-graph descent). Queries are grouped by route
+    center on device so every point block shares one candidate list —
+    the same layout contract as the fit-time iteration — and only blocks
+    that hold at least one real query compute (all-padding capacity
+    blocks ride the skip flag). Returns (assignment (m,) int32,
+    best squared distance (m,) f32) in query order.
+    """
+    m = q.shape[0]
+    k = c.shape[0]
+    perm, b2c = group_by_cluster_device(routed, k, bn)
+    nb = perm.shape[0] // bn
+    skip = (~jnp.any((perm >= 0).reshape(nb, bn), axis=1)).astype(jnp.int32)
+    zeros = jnp.zeros((m,), jnp.float32)
+    a, d1, _ = k2_assign_grouped(q, c, neighbors, perm, b2c, skip,
+                                 routed.astype(jnp.int32), zeros, zeros,
+                                 bn=bn, bkn=bkn, interpret=interpret)
+    return a, d1
+
+
 def segmented_scan(x: jax.Array, w: jax.Array, block2seg: jax.Array,
                    *, bn: int = 128, interpret: bool | None = None):
     """Segmented inclusive scan of (x, ||x||^2, 1) over the cluster-grouped
@@ -350,7 +379,8 @@ def k2_assign_grouped(x: jax.Array, c: jax.Array, neighbors: jax.Array,
     return a_new, d1_new, d2_new
 
 
-__all__ = ["assign_nearest_pallas", "candidate_assign",
+__all__ = ["assign_nearest_pallas", "bounded_predict_assign",
+           "candidate_assign",
            "candidate_assign_rowwise", "candidate_assign_tiled",
            "candidate_tables", "center_knn", "center_sqdist",
            "choose_blocks", "choose_group_bn", "cluster_attend",

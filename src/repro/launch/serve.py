@@ -4,6 +4,14 @@ CPU-scale demo: PYTHONPATH=src python -m repro.launch.serve \
                     --arch qwen3-8b --smoke --prompt-len 48 --decode 16
 Compares full-attention decode with k²-attention (clustered KV) decode and
 reports agreement + the attention read volume saved.
+
+The clustered decode loop is *streaming* (DESIGN.md §10): decode steps
+append fresh K/V to the exact recent-token ring (tables stay read-only
+inside the jitted step), and every ``--fold-every`` steps the loop folds
+the ring into the cluster-major tables with ``kv_partial_fit`` — Sculley
+per-center learning-rate updates, the KV-domain analogue of
+``KMeansModel.partial_fit`` — so the served clustering keeps absorbing
+decoded tokens instead of leaving the ring write-only until overflow.
 """
 from __future__ import annotations
 
@@ -59,6 +67,26 @@ def attach_clusters(cfg, cache, length: int | None = None):
     return new
 
 
+def fold_ring(cache, counts):
+    """Fold every layer's ring into its cluster-major tables via
+    ``kv_partial_fit`` (vmapped over the stacked layer axis). ``counts``
+    is the per-center Sculley state carried by the serve loop. Returns
+    (cache', counts', slots_folded) — slots_folded counts live ring
+    slots across layers; each slot holds one K/V row per (batch, kv
+    head), so the member-table delta is slots x B x Hkv."""
+    from repro.models.kv_cluster import kv_partial_fit
+    st = cache["stack"]
+    folded = int(jnp.sum(jnp.minimum(st["ring_fill"],
+                                     st["ring_k"].shape[3])))
+    kt, vt, cent, sizes, counts, rk, rv, rf = jax.vmap(kv_partial_fit)(
+        st["kt"], st["vt"], st["cent"], st["sizes"], counts,
+        st["ring_k"], st["ring_v"], st["ring_fill"])
+    new = dict(cache)
+    new["stack"] = dict(st, kt=kt, vt=vt, cent=cent, sizes=sizes,
+                        ring_k=rk, ring_v=rv, ring_fill=rf)
+    return new, counts, folded
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
@@ -66,6 +94,10 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--decode", type=int, default=16)
+    ap.add_argument("--fold-every", type=int, default=0,
+                    help="decode steps between partial_fit folds of the "
+                         "ring into the cluster tables (0: the ring "
+                         "size, i.e. fold just before it would wrap)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -96,23 +128,40 @@ def main():
         return
 
     # k²-attention path: reuse the prefilled K/V, cluster the keys with
-    # k²-means (build_kv_clusters), then decode against the clusters
+    # k²-means (build_kv_clusters), then decode against the clusters,
+    # folding decoded tokens into the cluster-major cache as they stream
     cache2 = attach_clusters(cfg, dict(cache), length=args.prompt_len)
+    counts = cache2["stack"]["sizes"].astype(jnp.float32)
+    fold_every = args.fold_every or cfg.cluster_ring
+    sizes0 = int(jnp.sum(cache2["stack"]["sizes"]))
     tok = prompt[:, -1:]
     clus_toks, t0 = [], time.time()
+    total_folded = 0
     step2 = jax.jit(lambda p, c, t, i: serve_step(cfg, p, c, t, i))
     for i in range(args.decode):
         logits, cache2 = step2(params, cache2, tok,
                                jnp.int32(args.prompt_len + i))
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         clus_toks.append(np.asarray(tok[:, 0]))
+        if (i + 1) % fold_every == 0:
+            cache2, counts, folded = fold_ring(cache2, counts)
+            total_folded += folded
+    cache2, counts, folded = fold_ring(cache2, counts)   # drain the tail
+    total_folded += folded
     t_clus = time.time() - t0
+    sizes1 = int(jnp.sum(cache2["stack"]["sizes"]))
 
     agree = np.mean([ (a == b).mean() for a, b in zip(full_toks, clus_toks)])
     reads_full = S_total
     reads_clus = cfg.kv_clusters + cfg.cluster_top_p * cfg.cluster_cap
     print(f"decoded {args.decode} tokens: full={t_full:.2f}s "
           f"clustered={t_clus:.2f}s  token agreement={agree:.2f}")
+    n_layers = cache2["stack"]["ring_fill"].shape[0]
+    print(f"partial_fit folds: {total_folded} ring slots "
+          f"({total_folded // max(n_layers, 1)} tokens x {n_layers} "
+          f"layers) absorbed into the cluster tables "
+          f"({sizes1 - sizes0} member rows, {sizes0} -> {sizes1}), "
+          f"fold every {fold_every} steps")
     print(f"attention reads/token: full={reads_full} "
           f"clustered={reads_clus} ({reads_full / reads_clus:.1f}x fewer)")
 

@@ -102,18 +102,22 @@ def build_cluster_major(keys: jax.Array, values: jax.Array, kc: int,
     return kt, vt, cent, sizes
 
 
-@jax.jit
-def recluster_ring(kt, vt, centroids, sizes, ring_k, ring_v, fill):
-    """Maintenance op (runs every ~R decode steps, off the critical path):
-    absorb the recent-token ring into the cluster-major tables — each ring
-    row appends to its nearest cluster (k²-means assignment), centroids
-    drift by the running mean, and the ring resets. Decode steps themselves
-    never write the tables (see gqa_decode_cluster_major)."""
+def _ring_fold(kt, vt, centroids, sizes, extra, ring_k, ring_v, fill,
+               centroid_rule):
+    """Shared ring-absorb scan behind :func:`recluster_ring` and
+    :func:`kv_partial_fit`: each live ring row appends to its nearest
+    cluster's table (full clusters drop the row), then ``centroid_rule``
+    applies the caller's drift policy.
+
+    ``centroid_rule(cent, extra, bi, hi, c, krow, live, ok, sizes)``
+    returns ``(cent', extra')`` — ``sizes`` is post-insert, ``ok`` flags
+    rows that actually landed in the table, ``live`` rows that were in
+    the ring at all. Returns the updated tables plus a reset ring."""
     B, H, kc, cap, d = kt.shape
     R = ring_k.shape[2]
 
     def insert_one(carry, r):
-        kt, vt, cent, sizes = carry
+        kt, vt, cent, sizes, extra = carry
         krow = ring_k[:, :, r]                         # (B, H, d)
         vrow = ring_v[:, :, r]
         live = r < jnp.minimum(fill, R)
@@ -130,19 +134,68 @@ def recluster_ring(kt, vt, centroids, sizes, ring_k, ring_v, fill):
             jnp.where(ok[..., None], vrow.astype(vt.dtype),
                       vt[bi, hi, c, slot]))
         sizes = sizes.at[bi, hi, c].add(ok.astype(jnp.int32))
+        cent, extra = centroid_rule(cent, extra, bi, hi, c, krow, live, ok,
+                                    sizes)
+        return (kt, vt, cent, sizes, extra), None
+
+    (kt, vt, centroids, sizes, extra), _ = jax.lax.scan(
+        insert_one, (kt, vt, centroids, sizes, extra), jnp.arange(R))
+    return (kt, vt, centroids, sizes, extra,
+            jnp.zeros_like(ring_k), jnp.zeros_like(ring_v),
+            jnp.zeros_like(fill))
+
+
+@jax.jit
+def recluster_ring(kt, vt, centroids, sizes, ring_k, ring_v, fill):
+    """Maintenance op (runs every ~R decode steps, off the critical path):
+    absorb the recent-token ring into the cluster-major tables — each ring
+    row appends to its nearest cluster (k²-means assignment), centroids
+    drift by the running mean over *table* rows, and the ring resets.
+    Decode steps themselves never write the tables (see
+    gqa_decode_cluster_major)."""
+
+    def rule(cent, extra, bi, hi, c, krow, live, ok, sizes):
         n = sizes[bi, hi, c].astype(jnp.float32)[..., None]
         cent = cent.at[bi, hi, c].set(jnp.where(
             ok[..., None],
             cent[bi, hi, c] + (krow.astype(cent.dtype) - cent[bi, hi, c])
             / jnp.maximum(n, 1.0).astype(cent.dtype),
             cent[bi, hi, c]))
-        return (kt, vt, cent, sizes), None
+        return cent, extra
 
-    (kt, vt, centroids, sizes), _ = jax.lax.scan(
-        insert_one, (kt, vt, centroids, sizes), jnp.arange(R))
-    return (kt, vt, centroids, sizes,
-            jnp.zeros_like(ring_k), jnp.zeros_like(ring_v),
-            jnp.zeros_like(fill))
+    kt, vt, centroids, sizes, _, rk, rv, f = _ring_fold(
+        kt, vt, centroids, sizes, jnp.zeros(()), ring_k, ring_v, fill, rule)
+    return kt, vt, centroids, sizes, rk, rv, f
+
+
+@jax.jit
+def kv_partial_fit(kt, vt, centroids, sizes, counts, ring_k, ring_v, fill):
+    """Streaming ``partial_fit`` over the cluster-major KV tables
+    (DESIGN.md §10): fold the live ring rows into (kt, vt) by
+    nearest-centroid append, moving each winning centroid by the
+    Sculley per-center learning rate ``eta = 1 / counts`` — the running
+    mean over everything the centroid has ever absorbed — instead of
+    the fixed-EMA drift of :func:`cluster_append` / the table-row mean
+    of :func:`recluster_ring`. ``counts`` (B, H, kc) f32 is the
+    per-center Sculley state (seed it from ``sizes`` at attach time); it
+    keeps growing past ``cap`` even when a full table drops the row
+    itself. Returns (kt, vt, centroids, sizes, counts, ring_k, ring_v,
+    fill) with the ring reset — the serve decode loop calls this every
+    ``fold_every`` steps so the big tables absorb decoded tokens instead
+    of the ring being write-only."""
+
+    def rule(cent, counts, bi, hi, c, krow, live, ok, sizes):
+        counts = counts.at[bi, hi, c].add(live.astype(counts.dtype))
+        eta = 1.0 / jnp.maximum(counts[bi, hi, c], 1.0)
+        cent = cent.at[bi, hi, c].set(jnp.where(
+            live[..., None],
+            cent[bi, hi, c] + eta[..., None].astype(cent.dtype)
+            * (krow.astype(cent.dtype) - cent[bi, hi, c]),
+            cent[bi, hi, c]))
+        return cent, counts
+
+    return _ring_fold(kt, vt, centroids, sizes, counts, ring_k, ring_v,
+                      fill, rule)
 
 
 @jax.jit
