@@ -28,6 +28,7 @@ BENCH_SCHEMAS = {
     "BENCH_dist.json": ("fast", "runs", "summary"),
     "BENCH_iter.json": ("fast", "runs", "summary"),
     "BENCH_predict.json": ("fast", "runs", "summary"),
+    "BENCH_ft.json": ("fast", "runs", "summary"),
     "BENCH_perf.json": ("fast", "sections", "summary_ok", "total_wall_s"),
 }
 
@@ -56,7 +57,7 @@ def _sections(args, outdir=None):
     """The section list; ``outdir`` (smoke mode) redirects every artifact
     and shrinks every shape to schema-check scale."""
     from . import (assign_bench, complexity, convergence_curves, dist_bench,
-                   init_bench, iter_bench, predict_bench, roofline,
+                   ft_bench, init_bench, iter_bench, predict_bench, roofline,
                    table4_init, table5_speedup)
 
     if outdir is not None:
@@ -98,6 +99,10 @@ def _sections(args, outdir=None):
                                        out=out("BENCH_predict.json"),
                                        n=2048, d=16, k=32, kn=8,
                                        n_queries=512, fit_iters=4)),
+            ("ft",
+             "Fault tolerance (smoke) -> BENCH_ft.json",
+             lambda: ft_bench.run(fast=True, out=out("BENCH_ft.json"),
+                                  shape=(2048, 16, 32, 8, 10))),
             ("fig23_convergence",
              "Fig 2/3 (smoke)",
              lambda: convergence_curves.run(k=8, max_iters=3)),
@@ -139,6 +144,10 @@ def _sections(args, outdir=None):
          "Predict: bounded route vs brute-force assignment "
          "(-> BENCH_predict.json)",
          lambda: predict_bench.run(fast=args.fast)),
+        ("ft",
+         "Fault tolerance: chaos vs fault-free self-healing "
+         "(-> BENCH_ft.json)",
+         lambda: ft_bench.run(fast=args.fast)),
         ("fig23_convergence",
          "Fig 2/3: convergence curves (energy vs counted ops)",
          lambda: convergence_curves.run(max_iters=15 if args.fast else 30)),

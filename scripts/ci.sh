@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI gate, cheapest first:
+#   1. tier-1: the fast suite (everything not slow-marked) — includes
+#      the -m faults fault-injection / self-healing recovery tests
+#   2. slow tier: distributed + serve integration and the benchmark
+#      smoke (every BENCH_*.json schema, incl. BENCH_ft.json)
+#
+# Usage: scripts/ci.sh [--tier1-only]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src
+
+echo "== tier 1: fast suite (incl. -m faults recovery tests) =="
+python -m pytest -x -q -m "not slow"
+
+if [[ "${1:-}" == "--tier1-only" ]]; then
+    exit 0
+fi
+
+echo "== tier 2: slow integration + benchmark smoke =="
+python -m pytest -x -q -m "slow"

@@ -1,3 +1,4 @@
 from .checkpoint import (save_checkpoint, restore_checkpoint,
                          latest_step, load_meta, AsyncCheckpointer,
-                         reshard_restore)
+                         reshard_restore, verify_checkpoint, all_steps,
+                         CheckpointCorruptError)

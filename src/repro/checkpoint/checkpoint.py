@@ -1,7 +1,15 @@
 """Checkpoint/restart without external deps (orbax-free, numpy .npz).
 
-- atomic: write to <dir>/tmp-<step> then rename (a crashed writer never
-  corrupts the latest complete checkpoint);
+- atomic: arrays + meta are written (and fsync'd) into <dir>/tmp-<step>,
+  the directory is renamed into place and the parent directory fsync'd —
+  a writer crashing at ANY point never corrupts the latest complete
+  checkpoint, and a torn rename is detectable;
+- validated: every read-side entry point (:func:`latest_step`,
+  :func:`restore_checkpoint`) verifies a checkpoint is complete before
+  trusting it. Truncated or partially-written checkpoints are *skipped*
+  (``latest_step`` falls back to the newest complete one) or *reported*
+  (:class:`CheckpointCorruptError` with the reason) instead of crashing
+  the restore path with a bare deserialization error;
 - async: AsyncCheckpointer snapshots device arrays to host and writes on a
   worker thread so the train loop never blocks on disk;
 - elastic: reshard_restore places restored host arrays with NEW shardings,
@@ -15,9 +23,16 @@ import os
 import queue
 import shutil
 import threading
+import warnings
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint directory exists but cannot be restored (truncated
+    arrays, unparseable meta, missing files). Carries the reason so
+    callers can report exactly what was lost."""
 
 
 def _flatten(tree):
@@ -25,11 +40,34 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    except OSError:                       # platforms without dir-open
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree,
                     extra_meta: dict | None = None) -> str:
-    """``extra_meta`` (JSON-serializable) rides along in meta.json —
-    e.g. the static config a restorer needs to rebuild the like-tree
-    before it can call :func:`restore_checkpoint` (``load_meta``)."""
+    """Atomic checkpoint write: temp dir + fsync'd files + ``os.rename``
+    + parent-dir fsync. ``extra_meta`` (JSON-serializable) rides along in
+    meta.json — e.g. the static config a restorer needs to rebuild the
+    like-tree before it can call :func:`restore_checkpoint`
+    (``load_meta``)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"tmp-{step}")
     final = os.path.join(ckpt_dir, f"step-{step:09d}")
@@ -45,44 +83,122 @@ def save_checkpoint(ckpt_dir: str, step: int, tree,
         return a
 
     arrays = {f"leaf_{i}": to_np(x) for i, x in enumerate(leaves)}
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    np.savez(arrays_path, **arrays)
+    _fsync_file(arrays_path)
     meta = {"step": step, "n_leaves": len(leaves), "treedef": str(treedef)}
     if extra_meta is not None:
         meta["extra"] = extra_meta
-    with open(os.path.join(tmp, "meta.json"), "w") as f:
+    meta_path = os.path.join(tmp, "meta.json")
+    with open(meta_path, "w") as f:
         json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_dir(ckpt_dir)
     return final
+
+
+def verify_checkpoint(ckpt_dir: str, step: int) -> str | None:
+    """Return None when the checkpoint at ``step`` is complete, else a
+    human-readable reason (missing/truncated/unparseable). Loads the npz
+    header + every array lazily — cheap relative to a restore."""
+    path = os.path.join(ckpt_dir, f"step-{step:09d}")
+    if not os.path.isdir(path):
+        return "missing checkpoint directory"
+    meta_path = os.path.join(path, "meta.json")
+    try:
+        with open(meta_path) as f:
+            meta = json.load(f)
+    except FileNotFoundError:
+        return "missing meta.json"
+    except (json.JSONDecodeError, OSError) as e:
+        return f"unreadable meta.json ({e})"
+    n_leaves = meta.get("n_leaves")
+    if not isinstance(n_leaves, int):
+        return "meta.json missing n_leaves"
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            names = set(data.files)
+            missing = [i for i in range(n_leaves)
+                       if f"leaf_{i}" not in names]
+            if missing:
+                return f"arrays.npz missing leaves {missing[:4]}"
+            for i in range(n_leaves):
+                data[f"leaf_{i}"]          # forces the zip member read
+    except FileNotFoundError:
+        return "missing arrays.npz"
+    except Exception as e:                 # zipfile/np errors: truncation
+        return f"truncated or corrupt arrays.npz ({e})"
+    return None
 
 
 def load_meta(ckpt_dir: str, step: int) -> dict:
     """Read a checkpoint's meta.json (including any ``extra_meta``)."""
     path = os.path.join(ckpt_dir, f"step-{step:09d}", "meta.json")
-    with open(path) as f:
-        return json.load(f)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint step {step} in {ckpt_dir}: unreadable meta.json "
+            f"({e})") from e
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    """Every step directory present (complete or not), ascending."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(int(d.split("-")[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith("step-"))
 
 
 def latest_step(ckpt_dir: str) -> int | None:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("-")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step-")]
-    return max(steps) if steps else None
+    """Newest *complete* checkpoint step (None when there is none).
+
+    Truncated or partially-written checkpoints — a crashed writer, a torn
+    copy — are skipped with a warning naming the reason, never returned:
+    a restart always lands on restorable state."""
+    best = None
+    for step in all_steps(ckpt_dir):
+        reason = verify_checkpoint(ckpt_dir, step)
+        if reason is None:
+            best = step
+        else:
+            warnings.warn(f"skipping checkpoint step {step} in {ckpt_dir}: "
+                          f"{reason}", stacklevel=2)
+    return best
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, like_tree):
     """Restore into the structure of like_tree (shape + dtype restored —
-    bf16 leaves round-trip through an f32 escrow)."""
+    bf16 leaves round-trip through an f32 escrow). Raises
+    :class:`CheckpointCorruptError` naming the defect on a truncated or
+    partially-written checkpoint instead of a bare deserialization
+    crash."""
     import jax.numpy as jnp
+    reason = verify_checkpoint(ckpt_dir, step)
+    if reason is not None:
+        raise CheckpointCorruptError(
+            f"checkpoint step {step} in {ckpt_dir}: {reason}")
     path = os.path.join(ckpt_dir, f"step-{step:09d}", "arrays.npz")
     data = np.load(path)
     leaves, treedef = _flatten(like_tree)
     restored = []
     for i, want in enumerate(leaves):
-        got = data[f"leaf_{i}"]
-        assert got.shape == tuple(want.shape), (got.shape, want.shape)
+        try:
+            got = data[f"leaf_{i}"]
+        except KeyError as e:
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} in {ckpt_dir}: leaf_{i} absent "
+                f"(saved tree had fewer leaves than like_tree)") from e
+        if got.shape != tuple(want.shape):
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} in {ckpt_dir}: leaf_{i} shape "
+                f"{got.shape} != expected {tuple(want.shape)}")
         restored.append(jnp.asarray(got).astype(want.dtype))
     return jax.tree_util.tree_unflatten(treedef, restored)
 

@@ -58,7 +58,8 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
         counter: OpCounter | None = None,
         mesh: Any = None, profile: bool = False,
         return_model: bool = False,
-        model_capacity: int | None = None, **kw: Any):
+        model_capacity: int | None = None,
+        validate: str = "raise", **kw: Any):
     """Cluster ``x`` into ``k`` clusters -> :class:`KMeansResult` (or
     ``(result, model)`` with ``return_model=True``). The paper's method
     is the default.
@@ -94,11 +95,34 @@ def fit(x: jax.Array, k: int, *, method: str = "k2means", init: str = "gdi",
     ``init`` in ("random", "kmeanspp", "gdi", "gdi_replicated") (the
     "gdi" seeding runs the frontier rounds per shard-group). The same
     extra keywords apply (``backend`` defaults to "pallas" there).
+
+    ``validate``: "raise" (default) rejects inputs carrying non-finite
+    rows with an error naming them; "sanitize" zeroes those rows before
+    fitting (quarantine, counted on ``counter.sanitized_rows``); "none"
+    skips the check (DESIGN.md §11.5).
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     counter = counter or OpCounter()
     k_init, k_fit = jax.random.split(key)
     x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"x must be 2-D (n, d), got shape {x.shape}")
+    if validate not in ("raise", "sanitize", "none"):
+        raise ValueError(f"validate must be 'raise' | 'sanitize' | "
+                         f"'none', got {validate!r}")
+    if validate != "none":
+        import numpy as np
+        bad = ~jnp.isfinite(x).all(axis=1)
+        n_bad = int(jnp.sum(bad))
+        if n_bad:
+            if validate == "raise":
+                idx = np.flatnonzero(np.asarray(bad))[:8]
+                raise ValueError(
+                    f"fit input: {n_bad} non-finite rows (first at "
+                    f"{idx.tolist()}); pass validate='sanitize' to zero "
+                    f"them")
+            x = jnp.where(bad[:, None], 0.0, x)
+            counter.count_sanitized_rows(n_bad)
 
     def done(result: KMeansResult) -> KMeansResult:
         if profile:

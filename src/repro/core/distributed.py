@@ -41,10 +41,13 @@ whose Hamerly bounds (or candidate lists) demand it.
 from __future__ import annotations
 
 import functools
+import math
+import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
 
 from ..compat import shard_map
 from ..launch.mesh import dp_axes
@@ -272,7 +275,11 @@ def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
                             data_axes=None, split_iters: int = 2,
                             residency: str | None = None,
                             regroup_every: int = 16,
-                            move_cap: int | None = None) -> KMeansResult:
+                            move_cap: int | None = None,
+                            guards: bool | None = None,
+                            ckpt_dir: str | None = None,
+                            ckpt_every: int = 0, resume: bool = False,
+                            straggler_policy=None) -> KMeansResult:
     """Host-loop driver around the sharded engine step.
 
     Points (and the per-point bound state) are placed row-sharded over
@@ -302,10 +309,31 @@ def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
     Counted ops charge per-shard recomputed points exactly like the
     single-device backends (k² + n_need·k_n + k distances + n additions
     per iteration).
+
+    Self-healing hooks (DESIGN.md §11), all free when unused: an active
+    ``ft.chaos.FaultInjector`` corrupts inputs/state at iteration
+    boundaries; runtime guards (``guards``, default on iff an injector is
+    installed) check invariants at the monitor-flush cadence and run the
+    repair lattice (``ft.invariants.heal_fit``); ``ckpt_dir`` +
+    ``ckpt_every`` take atomic mesh-independent mid-fit checkpoints and
+    ``resume=True`` restarts from the newest one; a simulated host loss
+    (``drop_host``) or a ``straggler_policy`` escalation triggers
+    failover — snapshot (and checkpoint, when configured), replan the
+    mesh over the survivors (``ft.plan_remesh``, the escalated straggler
+    is cordoned), re-place, and resume with ``first=True`` (counted as a
+    ``restore`` repair). Guards/heal need the engine step, so the
+    ``legacy`` baseline backend gets chaos + failover but no guard.
     """
+    from .. import ft
+    from ..ft import chaos as chaos_mod
+    from ..ft.invariants import heal_fit, make_guard
+
     counter = counter or OpCounter()
     if monitor_every < 1:
         raise ValueError(f"monitor_every must be >= 1, got {monitor_every}")
+    if backend not in ("legacy", "xla", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}; expected "
+                         "'pallas', 'xla' or 'legacy'")
     x_global = jnp.asarray(x_global)
     n, d = x_global.shape
     kn = min(kn, k)
@@ -315,6 +343,9 @@ def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
     n_pad = n + pad
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if residency is None:
+        residency = "resident" if backend == "pallas" else "rebuild"
+    resident = backend != "legacy" and residency == "resident"
 
     xspec, rowspec, rep = clustering_specs(mesh, data_axes)
     xsh = NamedSharding(mesh, xspec)
@@ -329,8 +360,26 @@ def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
                          jnp.zeros((pad,), x.dtype)]) if pad
         else jnp.ones((n,), x.dtype), rowsh)
 
-    # --- initialization ---------------------------------------------------
+    inj = chaos_mod.active()
+    if guards is None:
+        guards = inj is not None
+    ckpt = ft.FitCheckpointer(ckpt_dir, every=ckpt_every,
+                              extra={"n": n, "k": k, "d": d, "kn": kn}) \
+        if ckpt_dir else None
+    it0 = 0
     a0 = None
+    b_host = None            # rebuild-residency Hamerly state {u, lo, nb}
+    if resume and ckpt is not None:
+        got = ckpt.latest(n, k, d)
+        if got is not None:
+            # checkpoints are mesh-independent {c, a, it}: restoring onto
+            # this mesh just re-pads + re-places the point-order arrays
+            it0, c_h, a_h, b_host = got
+            init_centers = c_h
+            a0 = np.concatenate([a_h, a_h[:pad]]) if pad else a_h
+            counter.count_repair("restore")
+
+    # --- initialization (skipped on resume) -------------------------------
     if init_centers is None:
         if init == "random":
             idx = jax.random.choice(key, n, shape=(k,), replace=False)
@@ -360,60 +409,195 @@ def fit_distributed_k2means(x_global, k: int, kn: int, mesh, key, *,
     a0 = jax.device_put(jnp.asarray(a0).astype(jnp.int32), rowsh)
 
     # --- iteration: engine step under shard_map (or the legacy baseline) -
-    if residency is None:
-        residency = "resident" if backend == "pallas" else "rebuild"
-    sb = None
-    if backend == "legacy":
-        legacy = jax.jit(make_distributed_k2means_step(
-            mesh, kn, k, data_axes=data_axes, chunk=chunk))
-        a_cur = a0
-    elif backend in ("xla", "pallas"):
-        sb = K2Step(k=k, kn=kn, backend=backend, mesh=mesh,
-                    data_axes=data_axes, chunk=chunk, bn=bn, bkn=bkn,
-                    interpret=interpret, residency=residency,
-                    regroup_every=regroup_every, move_cap=move_cap)
-        step = sb.build(n_pad, d)
-        if residency == "resident":
-            state = sb.init_resident(x, w, c, a0)
-        else:
-            state = K2State(
-                c, a0,
-                jax.device_put(jnp.zeros((n_pad,), x.dtype), rowsh),
-                jax.device_put(jnp.zeros((n_pad,), x.dtype), rowsh),
-                jax.device_put(jnp.full((k, kn), -1, jnp.int32), repsh),
-                jnp.array(True))
-    else:
-        raise ValueError(f"unknown backend {backend!r}; expected "
-                         "'pallas', 'xla' or 'legacy'")
-
-    resident = backend != "legacy" and residency == "resident"
-    # deferred-flush protocol shared with the single-device drivers
+    # The epoch loop: one epoch per mesh incarnation. A failover
+    # (simulated host loss / straggler cordon) snapshots the
+    # mesh-independent (c, a), replans the survivor mesh, re-places, and
+    # starts the next epoch from the completed iteration.
     from .k2means import _MonitorLoop
     mon = _MonitorLoop(counter, n=n, d=d, k=k, kn=kn, resident=resident)
+    pol = straggler_policy
 
-    for it in range(1, max_iters + 1):
-        if backend == "legacy":
-            c, a_cur, energy, changed = legacy(x, w, c, a_cur)
-            # bound-free: every row recomputes, no grouped layout
-            mon.pending.append((n, changed, energy, 0, 0))
+    cur_mesh, cur_axes = mesh, data_axes
+    first_epoch = True
+    c_host = a_host = None                 # host snapshot across epochs
+    epoch_it0 = it0
+
+    while True:
+        if first_epoch:
+            x_e, w_e, c_e, a0_e = x, w, c, a0
+            nsh_e, n_pad_e = nsh, n_pad
+            rowsh_e, repsh_e = rowsh, repsh
         else:
-            state, stats = step(x, w, state)
-            mon.pending.append(tuple(stats))
-        if it % monitor_every == 0 or it == max_iters:
-            mon.flush()
-            if mon.converged:
-                break
+            nsh_e = _nshards(cur_mesh, cur_axes)
+            pad_e = (-n) % nsh_e
+            n_pad_e = n + pad_e
+            xspec_e, rowspec_e, rep_e = clustering_specs(cur_mesh,
+                                                         cur_axes)
+            rowsh_e = NamedSharding(cur_mesh, rowspec_e)
+            repsh_e = NamedSharding(cur_mesh, rep_e)
+            xg = np.asarray(x_global)
+            x_e = jax.device_put(
+                jnp.asarray(np.concatenate([xg, xg[:pad_e]]) if pad_e
+                            else xg), NamedSharding(cur_mesh, xspec_e))
+            w_e = jax.device_put(
+                jnp.concatenate([jnp.ones((n,), x_e.dtype),
+                                 jnp.zeros((pad_e,), x_e.dtype)]) if pad_e
+                else jnp.ones((n,), x_e.dtype), rowsh_e)
+            c_e = jax.device_put(jnp.asarray(c_host), repsh_e)
+            a_pad = np.concatenate([a_host, a_host[:pad_e]]) if pad_e \
+                else a_host
+            a0_e = jax.device_put(jnp.asarray(a_pad).astype(jnp.int32),
+                                  rowsh_e)
+
+        sb = None
+        state = None
+        a_cur = a0_e
+        if backend == "legacy":
+            legacy = jax.jit(make_distributed_k2means_step(
+                cur_mesh, kn, k, data_axes=cur_axes, chunk=chunk))
+        else:
+            sb = K2Step(k=k, kn=kn, backend=backend, mesh=cur_mesh,
+                        data_axes=cur_axes, chunk=chunk, bn=bn, bkn=bkn,
+                        interpret=interpret, residency=residency,
+                        regroup_every=regroup_every, move_cap=move_cap)
+            step = sb.build(n_pad_e, d)
+            if resident:
+                state = sb.init_resident(x_e, w_e, c_e, a0_e)
+            elif b_host is not None and \
+                    b_host["nb"].shape == (k, kn):
+                # restored/carried Hamerly state: resume the gated
+                # trajectory bit-for-bit (pad rows copy the head rows'
+                # bounds — they carry weight 0 and cannot affect real
+                # rows, only their own recompute-count stats)
+                pad_e_ = n_pad_e - n
+
+                def _padrows(v):
+                    return np.concatenate([v, v[:pad_e_]]) if pad_e_ \
+                        else v
+                state = K2State(
+                    c_e, a0_e,
+                    jax.device_put(jnp.asarray(_padrows(b_host["u"])),
+                                   rowsh_e),
+                    jax.device_put(jnp.asarray(_padrows(b_host["lo"])),
+                                   rowsh_e),
+                    jax.device_put(jnp.asarray(b_host["nb"]), repsh_e),
+                    jnp.array(False))
+            else:
+                state = K2State(
+                    c_e, a0_e,
+                    jax.device_put(jnp.zeros((n_pad_e,), x_e.dtype),
+                                   rowsh_e),
+                    jax.device_put(jnp.zeros((n_pad_e,), x_e.dtype),
+                                   rowsh_e),
+                    jax.device_put(jnp.full((k, kn), -1, jnp.int32),
+                                   repsh_e),
+                    jnp.array(True))
+        guard = make_guard(sb, n_pad_e) if (guards and sb is not None) \
+            else None
+
+        def _snapshot():
+            """Mesh-independent (c, a, bounds) host snapshot of the live
+            state; bounds is the point-order Hamerly state on the
+            rebuild engines (None otherwise — legacy is stateless and
+            already exact, resident rebuilds loose)."""
+            bounds = None
+            if backend == "legacy":
+                c_s, a_s = c_e, a_cur
+            elif resident:
+                c_s = state.c
+                a_s = sb.final_assignment(state, n_pad_e)
+            else:
+                c_s, a_s = state.c, state.a
+                bounds = {
+                    "u": np.array(jax.device_get(state.u),
+                                  np.float32)[:n],
+                    "lo": np.array(jax.device_get(state.lo),
+                                   np.float32)[:n],
+                    "nb": np.array(jax.device_get(state.prev_nb),
+                                   np.int32)}
+            return (np.array(jax.device_get(c_s), np.float32),
+                    np.array(jax.device_get(a_s), np.int32)[:n], bounds)
+
+        failover_drop = None
+        for it in range(epoch_it0 + 1, max_iters + 1):
+            t_it = time.perf_counter()
+            if inj is not None:
+                inj.check_preempt(it)
+                inj.maybe_stall(it)
+                x_e, w_e = inj.corrupt_inputs(it, x_e, w_e)
+                if state is not None:
+                    if resident:
+                        state = inj.mirror_into_arena(state, x_e, nsh_e)
+                    state = inj.corrupt_state(it, state, resident)
+                drop = inj.host_drop_at(it)
+                if drop is not None and cur_mesh.devices.size > 1:
+                    failover_drop = drop
+                    epoch_it0 = it - 1     # it never ran: replay it
+                    break
+            if backend == "legacy":
+                c_e, a_cur, _energy_d, changed = legacy(x_e, w_e, c_e,
+                                                        a_cur)
+                # bound-free: every row recomputes, no grouped layout
+                mon.pending.append((n, changed, _energy_d, 0, 0))
+            else:
+                state, stats = step(x_e, w_e, state)
+                mon.pending.append(tuple(stats))
+            if it % monitor_every == 0 or it == max_iters:
+                mon.flush()
+                healed = False
+                if guard is not None:
+                    vio = np.asarray(jax.device_get(guard(state)))
+                    bad_energy = bool(mon.history) and \
+                        not math.isfinite(mon.history[-1][1])
+                    if vio.any() or bad_energy:
+                        if bad_energy and not vio.any():
+                            vio = np.array([0, 1, 0, 0])  # full heal
+                        x_e, w_e, state = heal_fit(x_e, w_e, state, sb,
+                                                   n_pad_e, counter, key,
+                                                   vio)
+                        mon.converged = False
+                        healed = True
+                if ckpt is not None and not healed and ckpt.due(it):
+                    c_s, a_s, b_s = _snapshot()
+                    ckpt.save(it, c_s, a_s, **(b_s or {}))
+                if mon.converged:
+                    break
+            if pol is not None:
+                verdict = pol.observe(time.perf_counter() - t_it)
+                if verdict == "escalate" and cur_mesh.devices.size > 1:
+                    # cordon the straggler (last device of the mesh in
+                    # this host-local simulation) and fail over
+                    failover_drop = cur_mesh.devices.size - 1
+                    epoch_it0 = it         # it completed: keep it
+                    break
+        else:
+            break                          # max_iters exhausted
+        if failover_drop is None:
+            break                          # converged
+
+        # --- failover: snapshot -> replan -> next epoch -------------------
+        c_host, a_host, b_host = _snapshot()
+        if ckpt is not None and epoch_it0 > 0:
+            # coordinated-eviction checkpoint at the last completed step
+            ckpt.save(epoch_it0, c_host, a_host, **(b_host or {}))
+        devices = [dev for i, dev in enumerate(cur_mesh.devices.flat)
+                   if i != failover_drop % cur_mesh.devices.size]
+        plan = ft.plan_remesh(len(devices), model_parallel=1)
+        cur_mesh = Mesh(np.array(devices[:plan["chips"]]), ("data",))
+        cur_axes = ("data",)
+        counter.count_repair("restore")
+        first_epoch = False
 
     if backend == "legacy":
-        a_final = a_cur
+        c_fin, a_final = c_e, a_cur
     elif resident:
-        c, a_final = state.c, sb.final_assignment(state, n_pad)
+        c_fin, a_final = state.c, sb.final_assignment(state, n_pad_e)
     else:
-        c, a_final = state.c, state.a
-    if mon.history:
+        c_fin, a_final = state.c, state.a
+    if mon.history and math.isfinite(mon.history[-1][1]):
         energy = mon.history[-1][1]
     else:
-        energy = float(jnp.sum(w * sqnorm(x - c[a_final])))
+        energy = float(jnp.sum(w_e * sqnorm(x_e - c_fin[a_final])))
     assignment = jnp.asarray(jax.device_get(a_final)[:n])
-    return KMeansResult(c, assignment, energy, mon.it_done, counter.total,
-                        mon.history)
+    return KMeansResult(c_fin, assignment, energy, mon.it_done,
+                        counter.total, mon.history)

@@ -57,11 +57,13 @@ the same bodies the distributed shard_map step executes per shard
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .distance import clustering_energy
+from .distance import sqnorm
 from .engine import K2State, K2Step, init_state, k2_iteration
 from .lloyd import KMeansResult
 from .opcount import OpCounter, charge_iteration
@@ -131,56 +133,96 @@ class _MonitorLoop:
         self.pending.clear()
 
 
-def _fit_k2means_resident(x, centers, assignment, *, kn, max_iters, counter,
-                          monitor_every, backend, chunk, bn, bkn, interpret,
-                          regroup_every, move_cap):
+def _fit_k2means_engine(x, centers, assignment, *, kn, max_iters, counter,
+                        monitor_every, backend, residency, chunk, bn, bkn,
+                        interpret, regroup_every, move_cap, guards=None,
+                        ckpt_dir=None, ckpt_every=0, resume=False,
+                        key=None):
+    """The one engine-layer fit loop behind every (backend, residency)
+    combination, with the self-healing hooks of DESIGN.md §11: an active
+    ``ft.chaos.FaultInjector`` corrupts inputs/state at iteration
+    boundaries, runtime invariant guards (``ft.invariants.make_guard``)
+    fire at the monitor-flush cadence and trigger the repair lattice
+    (``heal_fit``), and ``ckpt_dir``/``ckpt_every``/``resume`` give the
+    loop atomic mid-fit checkpoints + restart (``ft.FitCheckpointer``).
+    Hooks cost nothing when unused: no injector + ``guards=False`` is
+    exactly the old loop."""
+    from .. import ft
+    from ..ft import chaos as chaos_mod
+    from ..ft.invariants import heal_fit, make_guard
+
     n, d = x.shape
     k = centers.shape[0]
+    resident = residency == "resident"
     sb = K2Step(k=k, kn=kn, backend=backend, chunk=chunk, bn=bn, bkn=bkn,
-                interpret=interpret, residency="resident",
+                interpret=interpret, residency=residency,
                 regroup_every=regroup_every, move_cap=move_cap)
     step = sb.build(n, d)
     w = jnp.ones((n,), x.dtype)
-    state = sb.init_resident(x, w, centers, assignment)
-    mon = _MonitorLoop(counter, n=n, d=d, k=k, kn=kn, resident=True)
-    for it in range(1, max_iters + 1):
+    inj = chaos_mod.active()
+    if guards is None:
+        guards = inj is not None
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ckpt = ft.FitCheckpointer(ckpt_dir, every=ckpt_every) \
+        if ckpt_dir else None
+    it0 = 0
+    bnds = None
+    if resume and ckpt is not None:
+        got = ckpt.latest(n, k, d)
+        if got is not None:
+            it0, c_h, a_h, bnds = got
+            centers = jnp.asarray(c_h)
+            assignment = jnp.asarray(a_h)
+            counter.count_repair("restore")
+    if resident:
+        state = sb.init_resident(x, w, centers, assignment)
+    else:
+        state = init_state(centers,
+                           jnp.asarray(assignment).astype(jnp.int32), kn)
+        if bnds is not None and bnds["nb"].shape == state.prev_nb.shape:
+            # restored Hamerly state: resume the gated trajectory
+            # bit-for-bit rather than forcing a full recompute
+            state = K2State(state.c, state.a, jnp.asarray(bnds["u"]),
+                            jnp.asarray(bnds["lo"]),
+                            jnp.asarray(bnds["nb"]), jnp.array(False))
+    guard = make_guard(sb, n) if guards else None
+    mon = _MonitorLoop(counter, n=n, d=d, k=k, kn=kn, resident=resident)
+
+    for it in range(it0 + 1, max_iters + 1):
+        if inj is not None:
+            x, w, state = chaos_mod.apply_fit_faults(inj, it, x, w, state,
+                                                     resident)
         state, stats = step(x, w, state)
         mon.pending.append(tuple(stats))
         if it % monitor_every == 0 or it == max_iters:
             mon.flush()
+            healed = False
+            if guard is not None:
+                vio = np.asarray(jax.device_get(guard(state)))
+                bad_energy = bool(mon.history) and \
+                    not math.isfinite(mon.history[-1][1])
+                if vio.any() or bad_energy:
+                    if bad_energy and not vio.any():
+                        vio = np.array([0, 1, 0, 0])   # full-heal route
+                    x, w, state = heal_fit(x, w, state, sb, n, counter,
+                                           key, vio)
+                    mon.converged = False   # healed state must re-iterate
+                    healed = True
+            if ckpt is not None and not healed and ckpt.due(it):
+                if resident:
+                    ckpt.save(it, state.c, sb.final_assignment(state, n))
+                else:
+                    ckpt.save(it, state.c, state.a, u=state.u,
+                              lo=state.lo, nb=state.prev_nb)
             if mon.converged:
                 break
-    a = sb.final_assignment(state, n)
-    energy = mon.history[-1][1] if mon.history else \
-        float(clustering_energy(x, state.c, a))
-    return KMeansResult(state.c, a, energy, mon.it_done, counter.total,
-                        mon.history)
 
-
-def _fit_k2means_pallas(x, centers, assignment, *, kn, max_iters, counter,
-                        monitor_every, bn, bkn, interpret):
-    from ..kernels.ops import choose_group_bn
-
-    n, d = x.shape
-    k = centers.shape[0]
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    bn = bn or choose_group_bn(n, k, d, bkn=bkn)
-    c, a, u, lo, prev_nb, first = init_state(centers, assignment, kn)
-    mon = _MonitorLoop(counter, n=n, d=d, k=k, kn=kn, resident=False)
-    for it in range(1, max_iters + 1):
-        c, a, u, lo, prev_nb, stats = k2means_pallas_step(
-            x, c, a, u, lo, prev_nb, first, kn, bn, bkn, interpret)
-        first = jnp.array(False)
-        mon.pending.append(stats)
-        if it % monitor_every == 0 or it == max_iters:
-            mon.flush()
-            if mon.converged:
-                break
-    # history[-1] already holds the energy of the final recorded state (any
-    # post-convergence pending iterations were identical fixed points)
-    energy = mon.history[-1][1] if mon.history else \
-        float(clustering_energy(x, c, a))
+    a = sb.final_assignment(state, n) if resident else state.a
+    c = state.c
+    if mon.history and math.isfinite(mon.history[-1][1]):
+        energy = mon.history[-1][1]
+    else:       # no iterations ran, or the last flush preceded a heal
+        energy = float(jnp.sum(w * sqnorm(x - c[a])))
     return KMeansResult(c, a, energy, mon.it_done, counter.total,
                         mon.history)
 
@@ -192,7 +234,10 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
                 monitor_every: int = 1, bn: int | None = None,
                 bkn: int = 8, interpret: bool | None = None,
                 residency: str | None = None, regroup_every: int = 16,
-                move_cap: int | None = None) -> KMeansResult:
+                move_cap: int | None = None, guards: bool | None = None,
+                ckpt_dir: str | None = None, ckpt_every: int = 0,
+                resume: bool = False,
+                key: jax.Array | None = None) -> KMeansResult:
     """Run k²-means from an initialisation (centers + assignments).
 
     GDI provides assignments for free (device-resident ones stay on
@@ -213,6 +258,16 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
     and candidate-tile sizes (bn=None auto-selects from n/k within the
     VMEM budget); interpret=None runs the kernels in interpret mode
     off-TPU.
+
+    Self-healing hooks (DESIGN.md §11): ``guards=True`` evaluates the
+    runtime invariant guards at every monitor flush and self-heals via
+    the repair lattice (``None``: on exactly when a
+    ``ft.chaos.FaultInjector`` is active); ``ckpt_dir``/``ckpt_every``
+    write atomic mid-fit checkpoints of (centers, assignment, it) and
+    ``resume=True`` restarts from the newest complete one — bounds are
+    rebuilt loose, so the resumed trajectory's final assignment is
+    bit-identical to the uninterrupted run's on the rebuild engines;
+    ``key`` seeds the split-repair rung.
     """
     counter = counter or OpCounter()
     n, d = x.shape
@@ -228,37 +283,10 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
     if residency not in ("rebuild", "resident"):
         raise ValueError(f"unknown residency {residency!r}; "
                          "expected 'rebuild' or 'resident'")
-    if residency == "resident":
-        return _fit_k2means_resident(
-            x, centers, assignment, kn=kn, max_iters=max_iters,
-            counter=counter, monitor_every=monitor_every, backend=backend,
-            chunk=chunk, bn=bn, bkn=bkn, interpret=interpret,
-            regroup_every=regroup_every, move_cap=move_cap)
-    if backend == "pallas":
-        return _fit_k2means_pallas(
-            x, centers, assignment, kn=kn, max_iters=max_iters,
-            counter=counter, monitor_every=monitor_every, bn=bn, bkn=bkn,
-            interpret=interpret)
-    c, a, u, lo, prev_nb, first = init_state(centers, assignment, kn)
-    history = []
-    it = 0                       # max_iters=0 evaluates the init as-is
-    for it in range(1, max_iters + 1):
-        c, a, u, lo, prev_nb, stats = k2means_step(
-            x, c, a, u, lo, prev_nb, first, kn, chunk)
-        first = jnp.array(False)
-        # Paper accounting: k^2 graph distances + k_n distances per
-        # recomputed point + k movement norms + n additions (update step);
-        # post-update energy from the step's device stats (monitoring,
-        # not counted). The xla backend never builds the grouped layout,
-        # so it pays no layout bytes.
-        energy = charge_iteration(counter, n=n, d=d, k=k, kn=kn,
-                                  stats=jax.device_get(stats),
-                                  resident=False)
-        history.append((counter.snapshot(), float(energy)))
-        # converged when assignments are stable ACROSS an update; iteration 1
-        # trivially reports changed==0 when the initial assignment was
-        # nearest-w.r.t.-init-centers (centers still moved in its update)
-        if it > 1 and int(stats[1]) == 0:
-            break
-    energy = float(clustering_energy(x, c, a))
-    return KMeansResult(c, a, energy, it, counter.total, history)
+    return _fit_k2means_engine(
+        x, centers, assignment, kn=kn, max_iters=max_iters,
+        counter=counter, monitor_every=monitor_every, backend=backend,
+        residency=residency, chunk=chunk, bn=bn, bkn=bkn,
+        interpret=interpret, regroup_every=regroup_every,
+        move_cap=move_cap, guards=guards, ckpt_dir=ckpt_dir,
+        ckpt_every=ckpt_every, resume=resume, key=key)

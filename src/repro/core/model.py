@@ -69,11 +69,36 @@ import typing
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .distance import chunked_candidate_argmin, pairwise_sqdist, sqnorm
 from .engine import ResidentState
 from .lloyd import KMeansResult
 from .opcount import LAYOUT_STATE_LANES, OpCounter
+
+
+_VALIDATE_MODES = ("raise", "sanitize", "none")
+
+
+def _validate_rows(x, mode: str, *, what: str):
+    """Input validation for the serving paths (DESIGN.md §11): "raise"
+    rejects non-finite rows with an error naming them, "sanitize" zeroes
+    them, "none" skips the check."""
+    if mode not in _VALIDATE_MODES:
+        raise ValueError(f"validate must be one of {_VALIDATE_MODES}, "
+                         f"got {mode!r}")
+    if mode == "none":
+        return x
+    bad = ~jnp.isfinite(x).all(axis=1)
+    n_bad = int(jnp.sum(bad))
+    if n_bad == 0:
+        return x
+    if mode == "raise":
+        idx = np.flatnonzero(np.asarray(bad))[:8]
+        raise ValueError(
+            f"{what}: {n_bad} non-finite rows (first at {idx.tolist()}); "
+            f"pass validate='sanitize' to zero them")
+    return jnp.where(bad[:, None], 0.0, x)
 
 
 def _default_groups(k: int) -> int:
@@ -308,6 +333,7 @@ class KMeansModel:
     decay: float = 1.0          # exponential forgetting of sums/counts
     n_rows: int = 0             # streamed rows (arena + mirrors prefix)
     batches_seen: int = 0
+    degraded_folds: int = 0     # arena-full batches folded stats-only
 
     # -- construction ------------------------------------------------------
 
@@ -475,7 +501,8 @@ class KMeansModel:
 
     def predict(self, queries: jax.Array, *, batch_size: int = 8192,
                 counter: OpCounter | None = None,
-                return_sqdist: bool = False):
+                return_sqdist: bool = False, validate: str = "raise",
+                retries: int = 3):
         """Bounded nearest-center assignment of ``queries``.
 
         Processes ``batch_size`` queries at a time (one compiled program:
@@ -485,13 +512,24 @@ class KMeansModel:
         (:func:`core.distance.chunked_argmin_sqdist`) costs ``n * k``.
         Returns the assignment (n,) int32, plus each query's squared
         distance to it when ``return_sqdist``.
+
+        ``validate``: "raise" (default) rejects non-finite query rows
+        with an error naming them, "sanitize" zeroes them (the caller
+        filters), "none" skips the check. Transient per-batch failures
+        (``ft.chaos.TransientError``) are absorbed with exponential
+        backoff up to ``retries`` times per batch
+        (``ft.retry_transient``; absorbed failures land on
+        ``counter.retries``).
         """
         q = jnp.asarray(queries, jnp.float32)
+        q = _validate_rows(q, validate, what="predict queries")
         nq = q.shape[0]
         if nq == 0:
             empty_a = jnp.zeros((0,), jnp.int32)
             return (empty_a, jnp.zeros((0,), jnp.float32)) \
                 if return_sqdist else empty_a
+        from ..ft import chaos as _chaos
+        from ..ft.runtime import retry_transient
         bs = min(batch_size, nq)
         a_parts, d_parts, counted = [], [], []
         for lo in range(0, nq, bs):
@@ -500,7 +538,15 @@ class KMeansModel:
             pad = bs - m
             if pad:                          # pad the tail batch
                 qb = jnp.pad(qb, ((0, pad), (0, 0)))
-            a_b, d_b, routed, n_c = self._predict_batch(qb)
+
+            def _one_batch(qb=qb):
+                inj = _chaos.active()
+                if inj is not None:
+                    inj.maybe_fail("predict")
+                return self._predict_batch(qb)
+
+            a_b, d_b, routed, n_c = retry_transient(
+                _one_batch, retries=retries, counter=counter)
             a_parts.append(a_b[:m])
             d_parts.append(d_b[:m])
             if counter is not None:           # padding rows charge nothing
@@ -516,7 +562,9 @@ class KMeansModel:
     # -- partial_fit -------------------------------------------------------
 
     def partial_fit(self, batch: jax.Array, w: jax.Array | None = None,
-                    *, counter: OpCounter | None = None) -> jax.Array:
+                    *, counter: OpCounter | None = None,
+                    validate: str = "raise",
+                    on_full: str = "raise") -> jax.Array:
         """Fold one streamed mini-batch into the served clustering.
 
         Assigns the batch by the bounded route, applies the incremental
@@ -528,13 +576,49 @@ class KMeansModel:
         Each distinct batch length compiles its own append program —
         stream fixed-size batches (pad with ``w=0`` rows) to stay on one
         program.
+
+        ``validate``: "raise" (default) rejects batches carrying
+        non-finite rows with an error naming the batch, "sanitize"
+        quarantines those rows to weight 0 (counted on
+        ``counter.sanitized_rows``), "none" skips the check.
+        ``on_full``: when the batch would overflow the arena capacity,
+        "raise" (default) refuses the batch; "degrade" folds it into the
+        per-center Sculley statistics only — centers keep tracking the
+        stream, member rows are dropped — and surfaces the degradation
+        on ``self.degraded_folds`` / ``counter.degraded_folds``
+        (DESIGN.md §11.5).
         """
+        if on_full not in ("raise", "degrade"):
+            raise ValueError(f"on_full must be 'raise' or 'degrade', "
+                             f"got {on_full!r}")
         xb = jnp.asarray(batch, jnp.float32)
         if xb.ndim != 2 or xb.shape[1] != self.d:
             raise ValueError(f"batch shape {xb.shape} != (m, {self.d})")
         m = xb.shape[0]
         wb = jnp.ones((m,), jnp.float32) if w is None \
             else jnp.asarray(w, jnp.float32)
+
+        from ..ft import chaos as _chaos
+        inj = _chaos.active()
+        if inj is not None:
+            xb = inj.corrupt_batch(xb)
+        if validate not in _VALIDATE_MODES:
+            raise ValueError(f"validate must be one of {_VALIDATE_MODES}, "
+                             f"got {validate!r}")
+        if validate != "none":
+            bad = ~jnp.isfinite(xb).all(axis=1)
+            n_bad = int(jnp.sum(bad & (wb > 0)))
+            if n_bad:
+                if validate == "raise":
+                    idx = np.flatnonzero(np.asarray(bad))[:8]
+                    raise ValueError(
+                        f"partial_fit batch {self.batches_seen}: {n_bad} "
+                        f"non-finite rows (first at {idx.tolist()}); pass "
+                        f"validate='sanitize' to quarantine them")
+                xb = jnp.where(bad[:, None], 0.0, xb)
+                wb = jnp.where(bad, 0.0, wb)
+                if counter is not None:
+                    counter.count_sanitized_rows(n_bad)
 
         ab, _, _, n_counted = self._predict_batch(xb)
 
@@ -545,12 +629,21 @@ class KMeansModel:
                                  it=self.state.it + 1)
 
         resorted = False
+        degraded = False
         m_live = int(jnp.sum(wb > 0))
         if self.has_arena and m_live:
             if self.n_rows + m_live > self.capacity:
-                raise ValueError(
-                    f"arena full: {self.n_rows} rows + batch {m_live} > "
-                    f"capacity {self.capacity}")
+                if on_full == "raise":
+                    raise ValueError(
+                        f"arena full: {self.n_rows} rows + batch "
+                        f"{m_live} > capacity {self.capacity}")
+                # graceful degradation: the Sculley stats fold above
+                # already absorbed the batch; skip the member append
+                degraded = True
+                self.degraded_folds += 1
+                if counter is not None:
+                    counter.count_degraded_fold()
+        if self.has_arena and m_live and not degraded:
             ids = _batch_ids(wb, self.n_rows)
             self.x_pts, self.a_pts, self.w_pts = _update_mirrors(
                 self.x_pts, self.a_pts, self.w_pts, xb, wb, ab, ids)
@@ -585,7 +678,7 @@ class KMeansModel:
                 counter.add_distances(
                     self.k * self.k
                     + (self.router_iters + 1) * self.route_groups * self.k)
-            if self.has_arena:
+            if self.has_arena and not degraded:
                 moved = self.capacity if resorted else m_live
                 row_bytes = (self.d + LAYOUT_STATE_LANES) * 4
                 counter.add_gather_bytes(moved * row_bytes)

@@ -13,6 +13,17 @@ stop paying the O(n log n + nd) grouping traffic, and these byte counters
 are what make that win measurable (``benchmarks/iter_bench.py``,
 ``fit(..., profile=True)``). Bytes are reported separately and never mix
 into ``total`` — the paper's op metric is unchanged.
+
+A third lane makes the self-healing execution layer observable
+(DESIGN.md §11): layout-event totals (``rows_moved``/``resorts`` from the
+engine's :class:`StepStats`) and repair counters, one per rung of the
+repair lattice (``bound_reset`` < ``regroup`` < ``split`` < ``restore``)
+plus the serving-side ``degraded_folds`` (arena-full ``partial_fit``
+falling back to the Sculley-sums-only fold), ``retries`` (transient
+predict/serve failures absorbed by backoff) and ``sanitized_rows``
+(non-finite inputs quarantined at weight 0). Healing is never silent:
+every repair lands on the counter and surfaces through
+``fit(..., profile=True)`` and the benchmark summary lines.
 """
 from __future__ import annotations
 
@@ -32,6 +43,15 @@ class OpCounter:
     bytes_gathered: float = 0.0
     bytes_scattered: float = 0.0
     bytes_sorted: float = 0.0
+    # robustness lane (DESIGN.md §11): layout events + repair lattice
+    rows_moved: float = 0.0
+    resorts: float = 0.0
+    repairs: dict = dataclasses.field(
+        default_factory=lambda: {"bound_reset": 0, "regroup": 0,
+                                 "split": 0, "restore": 0})
+    degraded_folds: float = 0.0
+    retries: float = 0.0
+    sanitized_rows: float = 0.0
     wall_t0: float = dataclasses.field(default_factory=time.perf_counter)
 
     @property
@@ -83,6 +103,27 @@ class OpCounter:
     def add_sort_bytes(self, b: float) -> None:
         self.bytes_sorted += float(b)
 
+    @property
+    def total_repairs(self) -> int:
+        return int(sum(self.repairs.values()))
+
+    def count_repair(self, kind: str, n: int = 1) -> None:
+        """Record ``n`` self-heal repairs of one lattice rung
+        (``bound_reset`` | ``regroup`` | ``split`` | ``restore``)."""
+        if kind not in self.repairs:
+            raise ValueError(f"unknown repair kind {kind!r}; expected one "
+                             f"of {sorted(self.repairs)}")
+        self.repairs[kind] += int(n)
+
+    def count_degraded_fold(self, n: int = 1) -> None:
+        self.degraded_folds += int(n)
+
+    def count_retry(self, n: int = 1) -> None:
+        self.retries += int(n)
+
+    def count_sanitized_rows(self, n: int) -> None:
+        self.sanitized_rows += int(n)
+
     def snapshot(self) -> float:
         return self.total
 
@@ -98,6 +139,13 @@ class OpCounter:
             "bytes_scattered": self.bytes_scattered,
             "bytes_sorted": self.bytes_sorted,
             "bytes_moved": self.bytes_moved,
+            "rows_moved": self.rows_moved,
+            "resorts": self.resorts,
+            "repairs": dict(self.repairs),
+            "total_repairs": self.total_repairs,
+            "degraded_folds": self.degraded_folds,
+            "retries": self.retries,
+            "sanitized_rows": self.sanitized_rows,
             "wall_s": self.wall,
         }
 
@@ -129,6 +177,8 @@ def charge_iteration(counter: OpCounter, *, n: int, d: int, k: int, kn: int,
     counter.add_distances(k * k + n_need * kn + k)
     full_update = (not resident) or resorted > 0
     counter.add_additions(n if full_update else 2.0 * moved)
+    counter.rows_moved += moved
+    counter.resorts += resorted
     if moved > 0:
         counter.add_gather_bytes(moved * (d + LAYOUT_STATE_LANES) * 4)
         counter.add_scatter_bytes(moved * (d + LAYOUT_STATE_LANES) * 4)

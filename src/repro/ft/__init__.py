@@ -1,2 +1,4 @@
-from .runtime import (HeartbeatMonitor, StragglerPolicy, plan_remesh,
-                      FaultTolerantLoop)
+from .chaos import FaultInjector, Preemption, TransientError
+from .chaos import active as active_injector
+from .runtime import (FaultTolerantLoop, FitCheckpointer, HeartbeatMonitor,
+                      StragglerPolicy, plan_remesh, retry_transient)

@@ -1,0 +1,335 @@
+"""Deterministic fault injection for the self-healing execution layer.
+
+DESIGN.md §11. A :class:`FaultInjector` carries a *seeded schedule* of
+faults keyed by fit-iteration (or, for the serving paths, by call
+index) and is installed as a context manager::
+
+    with FaultInjector(seed=0, nan_rows={3: 32}, drop_host={8: 1}):
+        fit(x, k, ...)                    # the loops pick it up
+
+The fit/serve loops poll :func:`active` at their hook points — nothing
+in the hot device step ever branches on the injector; faults and their
+repairs both happen at host boundaries (the monitor-flush cadence), so
+chaos costs nothing when no injector is installed.
+
+Fault taxonomy (one knob per failure mode the guards must survive):
+
+``nan_rows`` / ``inf_rows``
+    {iteration: count} — overwrite that many input rows with NaN/Inf
+    (a poisoned ingest batch). Healed by quarantine: the rows drop to
+    weight 0 (``OpCounter.sanitized_rows``).
+``dup_rows``
+    {iteration: count} — overwrite rows with copies of one row
+    (adversarial duplicates: mass ties, degenerate clusters). Not an
+    invariant violation — the algorithm must simply survive it.
+``poison_centers``
+    {iteration: count} — NaN that many center rows (a torn collective /
+    bad reduction). Healed by quarantine + one GDI Lemma-1 split of the
+    highest-energy donor cluster per lost center.
+``poison_bounds``
+    {iteration: count} — NaN that many Hamerly bound lanes. Healed by
+    the bound reset to the safe loose state (stale-zero + ``first``).
+``poison_slots``
+    {iteration: count} — duplicate that many arena ``pid`` entries
+    (slot-ownership corruption). Healed by assignment recovery + full
+    ``resident_regroup``.
+``exhaust_pool``
+    iterable of iterations — mark every free arena block as owned, so
+    the next sparse repair finds ``n_free == 0`` and the engine's own
+    re-sort fallback must kick in (observable as ``OpCounter.resorts``).
+``stall``
+    {iteration: seconds} — host-side sleep before the step (straggler
+    simulation; feeds ``ft.StragglerPolicy``).
+``drop_host``
+    {iteration: device_index} — simulate losing one device of the debug
+    mesh: the driver checkpoints, replans the mesh over the survivors
+    (``ft.plan_remesh``) and resumes.
+``preempt_at``
+    iteration — raise :class:`Preemption` *before* that iteration runs
+    (SIGTERM with no grace); a later ``resume=True`` fit picks the run
+    back up from the last atomic checkpoint.
+``fail_calls``
+    {op_name: iterable of call indices} — raise
+    :class:`TransientError` on the i-th call to ``maybe_fail(op_name)``
+    (flaky RPC / transient device error); absorbed by
+    ``ft.retry_transient`` backoff.
+``nan_batches``
+    {batch_index: count} — per-call input corruption for the streaming
+    paths (``KMeansModel.partial_fit``), counted by ``corrupt_batch``
+    calls rather than fit iterations.
+
+All row/slot/center choices are drawn from ``numpy`` generators seeded
+by (seed, kind, iteration) — the same schedule replays bit-identically,
+which is what makes the chaos benchmark (``benchmarks/ft_bench.py``)
+and the recovery tests deterministic.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class TransientError(RuntimeError):
+    """A failure that is expected to succeed on retry (flaky RPC,
+    transient device error). ``ft.retry_transient`` absorbs these with
+    exponential backoff; anything else propagates."""
+
+
+class Preemption(RuntimeError):
+    """Simulated hard preemption (no grace period): the loop dies where
+    it stands and a restart must resume from the last atomic
+    checkpoint."""
+
+
+_ACTIVE: "FaultInjector | None" = None
+
+
+def active() -> "FaultInjector | None":
+    """The installed injector, or None outside any chaos context."""
+    return _ACTIVE
+
+
+# kind tags folded into the per-event RNG seed
+_TAGS = {"nan": 1, "inf": 2, "dup": 3, "centers": 4, "bounds": 5,
+         "slots": 6, "batch": 7}
+
+
+def _norm(sched: Mapping[int, int] | None) -> dict[int, int]:
+    return {int(k): int(v) for k, v in (sched or {}).items()}
+
+
+class FaultInjector:
+    """Seeded, scheduled fault injector (see module docstring).
+
+    Context manager: installs itself as the process-wide active
+    injector; the fit/serve loops poll :func:`active`. Injectors do not
+    nest. ``events`` records every fault actually fired as
+    ``(where, kind, detail)`` tuples for assertions and bench reports.
+    """
+
+    def __init__(self, seed: int = 0, *,
+                 nan_rows: Mapping[int, int] | None = None,
+                 inf_rows: Mapping[int, int] | None = None,
+                 dup_rows: Mapping[int, int] | None = None,
+                 poison_centers: Mapping[int, int] | None = None,
+                 poison_bounds: Mapping[int, int] | None = None,
+                 poison_slots: Mapping[int, int] | None = None,
+                 exhaust_pool: Iterable[int] = (),
+                 stall: Mapping[int, float] | None = None,
+                 drop_host: Mapping[int, int] | None = None,
+                 preempt_at: int | None = None,
+                 fail_calls: Mapping[str, Iterable[int]] | None = None,
+                 nan_batches: Mapping[int, int] | None = None):
+        self.seed = int(seed)
+        self.nan_rows = _norm(nan_rows)
+        self.inf_rows = _norm(inf_rows)
+        self.dup_rows = _norm(dup_rows)
+        self.poison_centers = _norm(poison_centers)
+        self.poison_bounds = _norm(poison_bounds)
+        self.poison_slots = _norm(poison_slots)
+        self.exhaust_pool = {int(i) for i in exhaust_pool}
+        self.stall = {int(k): float(v) for k, v in (stall or {}).items()}
+        self.drop_host = _norm(drop_host)
+        self.preempt_at = preempt_at
+        self.fail_calls = {str(op): {int(i) for i in idxs}
+                           for op, idxs in (fail_calls or {}).items()}
+        self.nan_batches = _norm(nan_batches)
+        self.events: list[tuple[int, str, int | float]] = []
+        self._calls: dict[str, int] = {}
+        self._batches = 0
+        self._last_rows: list[int] = []
+
+    # -- context manager ---------------------------------------------------
+
+    def __enter__(self) -> "FaultInjector":
+        global _ACTIVE
+        if _ACTIVE is not None:
+            raise RuntimeError("a FaultInjector is already active; "
+                               "injectors do not nest")
+        _ACTIVE = self
+        return self
+
+    def __exit__(self, *exc) -> None:
+        global _ACTIVE
+        _ACTIVE = None
+
+    def _rng(self, kind: str, where: int) -> np.random.Generator:
+        return np.random.default_rng([self.seed, _TAGS[kind], where])
+
+    # -- input corruption --------------------------------------------------
+
+    def corrupt_inputs(self, it: int, x, w):
+        """Apply this iteration's input faults to point-order (x, w).
+
+        Only live rows (w > 0) are corrupted — poisoning a padding row
+        would be invisible by construction. Returns (x, w) (w is
+        returned unchanged; quarantine is the *healer's* job)."""
+        todo = [(kind, sched[it]) for kind, sched in
+                (("nan", self.nan_rows), ("inf", self.inf_rows),
+                 ("dup", self.dup_rows)) if it in sched]
+        self._last_rows = []
+        if not todo:
+            return x, w
+        live = np.flatnonzero(np.asarray(w) > 0)
+        for kind, count in todo:
+            count = min(count, live.size)
+            if count == 0:
+                continue
+            rng = self._rng(kind, it)
+            idx = rng.choice(live, size=count, replace=False)
+            if kind == "nan":
+                x = x.at[jnp.asarray(idx)].set(jnp.nan)
+            elif kind == "inf":
+                x = x.at[jnp.asarray(idx)].set(jnp.inf)
+            else:                                        # adversarial dups
+                src = int(rng.choice(live))
+                x = x.at[jnp.asarray(idx)].set(x[src])
+            self._last_rows.extend(int(i) for i in idx)
+            self.events.append((it, kind, count))
+        return x, w
+
+    def mirror_into_arena(self, state, x, nsh: int = 1):
+        """Propagate the rows just corrupted by :meth:`corrupt_inputs`
+        into the resident arena's grouped copy ``xg``.
+
+        The resident engine reads ``xg``, not ``x`` — point-order rows
+        are only re-read at re-sorts — so a mid-fit row fault that never
+        touched the arena would be invisible for up to ``regroup_every``
+        iterations. Physically the poisoned ingest lands in both copies
+        at once; the mirror models that. ``pid`` entries are *local*
+        shard indices, so under a mesh the global row ids are mapped
+        through the (shard, local) layout (``nsh`` shards)."""
+        rows = getattr(self, "_last_rows", [])
+        if not rows or not hasattr(state, "xg"):
+            return state
+        pid = np.asarray(state.pid)
+        n = x.shape[0]
+        s_loc, n_loc = pid.shape[0] // nsh, n // nsh
+        slots, gids = [], []
+        for s in range(nsh):
+            pidl = pid[s * s_loc:(s + 1) * s_loc]
+            local = np.asarray([r - s * n_loc for r in rows
+                                if s * n_loc <= r < (s + 1) * n_loc])
+            if local.size == 0:
+                continue
+            sl = np.flatnonzero(np.isin(pidl, local))
+            slots.extend((sl + s * s_loc).tolist())
+            gids.extend((pidl[sl] + s * n_loc).tolist())
+        if not slots:
+            return state
+        xg = state.xg.at[jnp.asarray(slots)].set(
+            jnp.asarray(np.asarray(x)[gids]))
+        return state._replace(xg=xg)
+
+    def corrupt_batch(self, xb):
+        """Per-call streaming-batch corruption (``nan_batches`` keyed by
+        the corrupt_batch call index, starting at 0)."""
+        b = self._batches
+        self._batches += 1
+        count = self.nan_batches.get(b, 0)
+        if count:
+            rng = self._rng("batch", b)
+            idx = rng.choice(xb.shape[0], size=min(count, xb.shape[0]),
+                             replace=False)
+            xb = xb.at[jnp.asarray(idx)].set(jnp.nan)
+            self.events.append((b, "nan_batch", int(count)))
+        return xb
+
+    # -- state corruption --------------------------------------------------
+
+    def corrupt_state(self, it: int, state, resident: bool):
+        """Apply this iteration's state faults to a K2State /
+        ResidentState (returns the possibly-modified state)."""
+        k = state.c.shape[0]
+        if it in self.poison_centers:
+            rng = self._rng("centers", it)
+            cnt = min(self.poison_centers[it], k)
+            ids = jnp.asarray(rng.choice(k, size=cnt, replace=False))
+            state = state._replace(c=state.c.at[ids].set(jnp.nan))
+            self.events.append((it, "poison_centers", cnt))
+        if it in self.poison_bounds:
+            rng = self._rng("bounds", it)
+            u = state.ug if resident else state.u
+            cnt = min(self.poison_bounds[it], u.shape[0])
+            ids = jnp.asarray(rng.choice(u.shape[0], size=cnt,
+                                         replace=False))
+            if resident:
+                state = state._replace(ug=state.ug.at[ids].set(jnp.nan))
+            else:
+                state = state._replace(u=state.u.at[ids].set(jnp.nan))
+            self.events.append((it, "poison_bounds", cnt))
+        if resident and it in self.poison_slots:
+            rng = self._rng("slots", it)
+            pid = np.array(state.pid)
+            owned = np.flatnonzero(pid >= 0)
+            cnt = min(self.poison_slots[it], owned.size // 2)
+            if cnt:
+                victims = rng.choice(owned, size=2 * cnt, replace=False)
+                # duplicate ownership: slot i claims slot j's point
+                pid[victims[:cnt]] = pid[victims[cnt:2 * cnt]]
+                state = state._replace(pid=jnp.asarray(pid))
+                self.events.append((it, "poison_slots", cnt))
+        if resident and it in self.exhaust_pool:
+            b2c = state.b2c
+            n_free = int(jnp.sum(b2c < 0))
+            state = state._replace(b2c=jnp.where(b2c < 0, 0, b2c))
+            self.events.append((it, "exhaust_pool", n_free))
+        return state
+
+    # -- scheduling faults -------------------------------------------------
+
+    def maybe_stall(self, it: int) -> float:
+        """Sleep out this iteration's scheduled straggler stall; returns
+        the seconds slept (0.0 when none)."""
+        secs = self.stall.get(it, 0.0)
+        if secs > 0:
+            self.events.append((it, "stall", secs))
+            time.sleep(secs)
+        return secs
+
+    def host_drop_at(self, it: int) -> int | None:
+        """Device index to lose at this iteration (None = no drop).
+        One-shot: the drop is consumed so the survivor loop does not
+        re-lose the same host every iteration."""
+        idx = self.drop_host.pop(it, None)
+        if idx is not None:
+            self.events.append((it, "drop_host", idx))
+        return idx
+
+    def check_preempt(self, it: int) -> None:
+        """Raise :class:`Preemption` when this iteration is the
+        scheduled kill point (one-shot)."""
+        if self.preempt_at is not None and it == self.preempt_at:
+            self.preempt_at = None
+            self.events.append((it, "preempt", it))
+            raise Preemption(f"simulated preemption before iteration {it}")
+
+    def maybe_fail(self, op: str) -> None:
+        """Raise :class:`TransientError` when this call index of ``op``
+        is scheduled to fail (per-op call counter starts at 0)."""
+        i = self._calls.get(op, 0)
+        self._calls[op] = i + 1
+        if i in self.fail_calls.get(op, ()):
+            self.events.append((i, f"transient:{op}", i))
+            raise TransientError(f"injected transient failure: {op} "
+                                 f"call {i}")
+
+
+def apply_fit_faults(inj: FaultInjector, it: int, x, w, state,
+                     resident: bool, nsh: int = 1):
+    """One-call driver hook: preemption check, straggler stall, input and
+    state corruption for fit iteration ``it``. Returns (x, w, state)."""
+    inj.check_preempt(it)
+    inj.maybe_stall(it)
+    x, w = inj.corrupt_inputs(it, x, w)
+    if resident:
+        state = inj.mirror_into_arena(state, x, nsh)
+    state = inj.corrupt_state(it, state, resident)
+    return x, w, state
+
+
+__all__ = ["FaultInjector", "TransientError", "Preemption", "active",
+           "apply_fit_faults"]

@@ -1,0 +1,332 @@
+"""Runtime invariant guards + self-heal for the fit engines.
+
+DESIGN.md §11. The §9.1 slot-ownership invariants (previously asserted
+only by ``tests/test_resident_layout.check_layout``) become cheap
+device-side *violation counters* evaluated at the drivers' monitor-flush
+cadence, plus host-side repair orchestration when one fires.
+
+Guard cost: everything checked is O(n + k·d + k·kn) — finiteness of
+centers / running sums / bound lanes, arena index ranges, watermark
+consistency, and a slot-ownership occupancy scatter. The O(n·d) point
+rows are deliberately NOT scanned every check: non-finite rows poison
+the segment-sums within one iteration, so the ``centers``/``sums``
+counters (and the free NaN-energy signal the monitor already reads)
+catch them at the same flush, and the healer then pays the one O(n·d)
+host sweep. That keeps steady-state guard overhead inside the ≤2%
+acceptance budget at monitor cadence.
+
+Violation vector lanes (device int32, psum'd across shards on a mesh)::
+
+    [0] centers   non-finite center entries
+    [1] sums      non-finite / negative running sums or counts
+    [2] bounds    non-finite Hamerly bound entries
+    [3] arena     slot-ownership / watermark / index-range violations
+
+The repair lattice (cheapest sufficient rung wins, every rung counted on
+``OpCounter.repairs``):
+
+``bound_reset``
+    bounds lane only → zero the bound lanes and set ``first`` (the
+    stale-zero safe loose state: iteration 1 semantics, a full exact
+    recompute — recomputation can only tighten bounds, so this never
+    changes any assignment).
+``regroup``
+    arena / sums / rows corrupted → recover the point-order assignment
+    from the surviving slots (untrusted rows re-assigned exactly),
+    quarantine non-finite inputs to weight 0, and rebuild the arena +
+    exact sums from scratch (``K2Step.init_resident``).
+``split``
+    a non-finite center cannot be averaged back — quarantine it and
+    re-seat it with one GDI Lemma-1 ``projective_split`` of the
+    highest-energy donor cluster (rides on top of a regroup / reset).
+``restore``
+    counted by the drivers when they fall back to a checkpoint
+    (preemption resume, host-loss failover) — nothing here reaches it.
+
+Healing is host-side and rare; correctness leans on the same exactness
+argument as everything else in this repo: the healed state re-enters the
+loop with ``first=True``, the next iteration recomputes every live row
+exactly, and from there the trajectory is indistinguishable from a fit
+seeded at the healed (centers, assignment).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.distance import chunked_argmin_sqdist, sqnorm
+from ..core.engine import K2State, ResidentState, init_state
+
+VIOLATION_LANES = ("centers", "sums", "bounds", "arena")
+
+
+# ---------------------------------------------------------------------------
+# Device-side violation counters
+# ---------------------------------------------------------------------------
+
+
+def resident_violations(state: ResidentState, *, n: int) -> jax.Array:
+    """(4,) int32 violation counters of a (local) resident state; ``n``
+    is the local point count the arena must cover exactly once."""
+    k = state.fill.shape[0]
+    s_total = state.pid.shape[0]
+    nbt = state.b2c.shape[0]
+    bn = s_total // nbt
+    i32 = jnp.int32
+
+    centers = jnp.sum(~jnp.isfinite(state.c)).astype(i32)
+    sums = (jnp.sum(~jnp.isfinite(state.sums))
+            + jnp.sum(~jnp.isfinite(state.counts))
+            + jnp.sum(state.counts < 0)).astype(i32)
+    bounds = (jnp.sum(~jnp.isfinite(state.ug))
+              + jnp.sum(~jnp.isfinite(state.lo_g))).astype(i32)
+
+    # arena: index ranges
+    arena = jnp.sum((state.b2c < -1) | (state.b2c >= k)).astype(i32)
+    arena += jnp.sum((state.fill < 0) | (state.fill > bn)).astype(i32)
+    arena += jnp.sum(state.pid >= n).astype(i32)
+    # slot ownership: every local point owns exactly one slot
+    occ = jnp.zeros((n,), i32).at[jnp.clip(state.pid, 0, n - 1)] \
+        .add((state.pid >= 0).astype(i32))
+    arena += jnp.sum(occ != 1).astype(i32)
+    # free blocks own nothing
+    freeb = jnp.repeat(state.b2c < 0, bn)
+    arena += jnp.sum(freeb & (state.pid >= 0)).astype(i32)
+    # watermarks: the open block belongs to its cluster and its tail
+    # (slots >= fill) is free; clusters without an open block have fill 0
+    ob = state.openb
+    has_open = ob >= 0
+    obc = state.b2c[jnp.clip(ob, 0, nbt - 1)]
+    arena += jnp.sum(jnp.where(has_open,
+                               (obc != jnp.arange(k)) | (state.fill < 1),
+                               state.fill != 0)).astype(i32)
+    tail_rows = jnp.clip(ob, 0, nbt - 1)[:, None] * bn \
+        + jnp.arange(bn)[None, :]                       # (k, bn)
+    tail_pid = state.pid[jnp.clip(tail_rows, 0, s_total - 1)]
+    in_tail = has_open[:, None] & (jnp.arange(bn)[None, :]
+                                   >= state.fill[:, None])
+    arena += jnp.sum(in_tail & (tail_pid >= 0)).astype(i32)
+    return jnp.stack([centers, sums, bounds, arena])
+
+
+def k2_violations(state: K2State, *, n: int) -> jax.Array:
+    """(4,) int32 violation counters of a (local) rebuild-residency
+    state (no arena, no running sums — those lanes check assignment
+    range / nothing)."""
+    del n
+    k = state.c.shape[0]
+    i32 = jnp.int32
+    centers = jnp.sum(~jnp.isfinite(state.c)).astype(i32)
+    sums = jnp.sum((state.a < 0) | (state.a >= k)).astype(i32)
+    bounds = (jnp.sum(~jnp.isfinite(state.u))
+              + jnp.sum(~jnp.isfinite(state.lo))).astype(i32)
+    return jnp.stack([centers, sums, bounds, jnp.zeros((), i32)])
+
+
+def make_guard(sb, n: int):
+    """Jitted ``guard(state) -> (4,)`` violation counters for a
+    :class:`core.engine.K2Step` builder (placement-aware: on a mesh the
+    per-shard counters are psum'd)."""
+    resident = sb.residency == "resident"
+    n_loc = n // sb.shards()
+    local = functools.partial(
+        resident_violations if resident else k2_violations, n=n_loc)
+    if sb.mesh is None:
+        return jax.jit(local)
+    from ..compat import shard_map
+    from ..launch.sharding import clustering_specs
+    axes = sb.axes()
+    _, rowspec, rep = clustering_specs(sb.mesh, axes)
+
+    def body(state):
+        v = local(state)
+        for ax in reversed(axes):
+            v = jax.lax.psum(v, ax)
+        return v
+
+    specs = sb._resident_specs() if resident else \
+        K2State(rep, rowspec, rowspec, rowspec, rep, rep)
+    return jax.jit(shard_map(body, mesh=sb.mesh, in_specs=(specs,),
+                             out_specs=rep, check_rep=False))
+
+
+# ---------------------------------------------------------------------------
+# Host-side recovery primitives
+# ---------------------------------------------------------------------------
+
+
+def recover_assignment_np(pid, b2c, bn: int, n: int,
+                          nsh: int = 1) -> np.ndarray:
+    """Best-effort point-order assignment from a (possibly corrupted)
+    arena, host-side. Slot arrays arrive as the global device_get
+    concatenation of ``nsh`` shard-local arenas (local pids in
+    ``[0, n/nsh)``). Rows with ambiguous ownership (claimed by zero or
+    several slots) or an out-of-range cluster come back as -1 —
+    *untrusted*, to be re-assigned exactly by the healer."""
+    pid = np.asarray(pid).astype(np.int64)
+    b2c = np.asarray(b2c).astype(np.int64)
+    s_loc = pid.shape[0] // nsh
+    nbt_loc = b2c.shape[0] // nsh
+    n_loc = n // nsh
+    a = np.full((n,), -1, np.int64)
+    for s in range(nsh):
+        pidl = pid[s * s_loc:(s + 1) * s_loc]
+        b2cl = b2c[s * nbt_loc:(s + 1) * nbt_loc]
+        a_slot = np.repeat(np.clip(b2cl, 0, None), bn)
+        owned = (pidl >= 0) & (pidl < n_loc)
+        occ = np.zeros((n_loc,), np.int64)
+        np.add.at(occ, pidl[owned], 1)
+        trust = occ[pidl[owned]] == 1
+        gl = pidl[owned][trust] + s * n_loc
+        a[gl] = a_slot[owned][trust]
+    return a
+
+
+def split_repair(x, w, a, c, bad: np.ndarray, key, counter=None):
+    """Quarantine the ``bad`` (non-finite) centers and re-seat each with
+    one GDI Lemma-1 split of the highest-energy healthy donor cluster
+    (``core.gdi.projective_split``): donor keeps side A, the repaired
+    center takes side B and its members. Degenerate fallback (no donor
+    with ≥2 members): re-seat on a live data row. Returns (c, a); every
+    split lands on ``counter.repairs['split']``."""
+    from ..core.gdi import projective_split
+    k = c.shape[0]
+    c = jnp.where(jnp.isfinite(c), c, 0.0)
+    bad_set = set(int(b) for b in bad)
+    live = np.flatnonzero(np.asarray(w) > 0)
+    for i, j in enumerate(sorted(bad_set)):
+        d2 = sqnorm(x - c[a])
+        e = np.array(jax.device_get(jax.ops.segment_sum(
+            jnp.asarray(w) * d2, a, num_segments=k)))
+        cnt = np.array(jax.device_get(jax.ops.segment_sum(
+            jnp.asarray(w), a, num_segments=k)))
+        e[list(bad_set)] = -np.inf
+        e[cnt < 2] = -np.inf
+        donor = int(np.argmax(e))
+        if not np.isfinite(e[donor]):
+            seat = int(live[i % max(live.size, 1)]) if live.size else 0
+            c = c.at[j].set(x[seat])
+        else:
+            mask = (a == donor) & (jnp.asarray(w) > 0)
+            _ma, mb, ca, cb, _pa, _pb = projective_split(
+                x, mask, jax.random.fold_in(key, i))
+            c = c.at[donor].set(ca).at[j].set(cb)
+            a = jnp.where(mb, j, a)
+        bad_set.discard(j)
+        if counter is not None:
+            counter.count_repair("split")
+    return c, a
+
+
+# ---------------------------------------------------------------------------
+# Heal orchestration (driver hook)
+# ---------------------------------------------------------------------------
+
+
+def heal_fit(x, w, state, sb, n: int, counter, key, vio):
+    """Repair a fit loop's (x, w, state) after a guard fired.
+
+    ``sb`` is the :class:`core.engine.K2Step` the driver built the step
+    from (carries residency + placement, including the shardings needed
+    to re-place the healed arrays on a mesh); ``vio`` the host (4,)
+    violation counters. Chooses the cheapest sufficient rung of the
+    repair lattice (module docstring) and returns the healed
+    (x, w, state) — the healed state always carries ``first=True``, so
+    the next iteration recomputes everything exactly.
+    """
+    resident = sb.residency == "resident"
+    vio = np.asarray(vio)
+    only_bounds = bool(vio[2]) and not (vio[0] or vio[1] or vio[3])
+    if only_bounds:
+        # cheapest rung: the stale-zero safe loose state
+        if resident:
+            zeros = jnp.zeros_like(state.ug)
+            state = state._replace(ug=zeros, lo_g=zeros,
+                                   first=jnp.array(True))
+        else:
+            zeros = jnp.zeros_like(state.u)
+            state = state._replace(u=zeros, lo=zeros,
+                                   first=jnp.array(True))
+        counter.count_repair("bound_reset")
+        return x, w, state
+
+    k = state.c.shape[0]
+    nsh = sb.shards()
+    x_h = np.array(jax.device_get(x), dtype=np.float32)
+    w_h = np.array(jax.device_get(w), dtype=np.float32)
+
+    # 1. quarantine non-finite rows (weight 0, zeroed features)
+    bad_rows = ~np.isfinite(x_h).all(axis=1)
+    n_sanitized = int((bad_rows & (w_h > 0)).sum())
+    if bad_rows.any():
+        x_h[bad_rows] = 0.0
+        w_h[bad_rows] = 0.0
+    if n_sanitized:
+        counter.count_sanitized_rows(n_sanitized)
+
+    # 2. best-effort assignment recovery from the surviving state
+    if resident:
+        pid_h = np.asarray(jax.device_get(state.pid))
+        b2c_h = np.asarray(jax.device_get(state.b2c))
+        bn = pid_h.shape[0] // b2c_h.shape[0]
+        a_h = recover_assignment_np(pid_h, b2c_h, bn, n, nsh)
+    else:
+        a_h = np.array(jax.device_get(state.a), dtype=np.int64)
+    a_h[(a_h < 0) | (a_h >= k)] = -1
+    untrusted = a_h < 0
+    a_h[untrusted] = 0                    # placeholder until re-assigned
+
+    # 3. quarantine + split-repair non-finite centers
+    c_h = np.array(jax.device_get(state.c), dtype=np.float32)
+    bad_centers = np.flatnonzero(~np.isfinite(c_h).all(axis=1))
+    c_dev = jnp.asarray(np.where(np.isfinite(c_h), c_h, 0.0))
+    x_dev = jnp.asarray(x_h)
+    a_dev = jnp.asarray(a_h.astype(np.int32))
+    if bad_centers.size:
+        # untrusted rows must not anchor a split: weight them out of the
+        # donor-energy scan (they are re-assigned exactly right after)
+        w_trust = jnp.asarray(np.where(untrusted, 0.0, w_h))
+        c_dev, a_dev = split_repair(x_dev, w_trust, a_dev, c_dev,
+                                    bad_centers, key, counter)
+        a_h = np.array(jax.device_get(a_dev), dtype=np.int64)
+
+    # 4. exact re-assignment of untrusted live rows
+    unc = np.flatnonzero(untrusted & (w_h > 0))
+    if unc.size:
+        au, _ = chunked_argmin_sqdist(jnp.asarray(x_h[unc]), c_dev)
+        a_h[unc] = np.asarray(jax.device_get(au))
+    a_dev = jnp.asarray(a_h.astype(np.int32))
+
+    # 5. rebuild the loop state from the healed primals
+    if sb.mesh is not None:
+        from jax.sharding import NamedSharding
+        from ..launch.sharding import clustering_specs
+        xspec, rowspec, rep = clustering_specs(sb.mesh, sb.axes())
+        x_dev = jax.device_put(jnp.asarray(x_h), NamedSharding(sb.mesh,
+                                                               xspec))
+        w_dev = jax.device_put(jnp.asarray(w_h), NamedSharding(sb.mesh,
+                                                               rowspec))
+        a_dev = jax.device_put(a_dev, NamedSharding(sb.mesh, rowspec))
+        c_dev = jax.device_put(c_dev, NamedSharding(sb.mesh, rep))
+    else:
+        x_dev = jnp.asarray(x_h)
+        w_dev = jnp.asarray(w_h)
+    if resident:
+        state = sb.init_resident(x_dev, w_dev, c_dev, a_dev)
+        counter.count_repair("regroup")
+    else:
+        state = init_state(c_dev, a_dev, min(sb.kn, k))
+        if sb.mesh is not None:
+            state = jax.device_put(state, jax.tree.map(
+                lambda s: NamedSharding(sb.mesh, s),
+                K2State(rep, rowspec, rowspec, rowspec, rep, rep)))
+        counter.count_repair("bound_reset")
+    return x_dev, w_dev, state
+
+
+__all__ = ["VIOLATION_LANES", "resident_violations", "k2_violations",
+           "make_guard", "recover_assignment_np", "split_repair",
+           "heal_fit"]

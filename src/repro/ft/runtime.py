@@ -11,11 +11,15 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import statistics
 import time
 from typing import Callable
 
 import jax
+import numpy as np
+
+from .chaos import TransientError
 
 
 @dataclasses.dataclass
@@ -87,6 +91,103 @@ def plan_remesh(n_alive_chips: int, *, model_parallel: int = 16):
     return {"data": data, "model": model_parallel,
             "chips": data * model_parallel,
             "accum_factor_vs": lambda old_data: max(1, old_data // data)}
+
+
+def retry_transient(fn: Callable, *, retries: int = 3,
+                    base_delay: float = 0.05, counter=None):
+    """Call ``fn()``; absorb :class:`ft.chaos.TransientError` with
+    exponential backoff (base_delay * 2^attempt between tries). Every
+    absorbed failure lands on ``counter.retries`` so recovery is never
+    silent; the last failure propagates when the budget runs out.
+    Non-transient exceptions propagate immediately."""
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except TransientError:
+            if attempt >= retries:
+                raise
+            if counter is not None:
+                counter.count_retry()
+            time.sleep(base_delay * (2 ** attempt))
+
+
+class FitCheckpointer:
+    """Periodic atomic checkpoints of the *minimal* fit state.
+
+    The payload is mesh-independent on purpose — centers (k, d), the
+    point-order unpadded assignment (n,), and the completed iteration —
+    so a checkpoint taken single-device restores onto any mesh (and vice
+    versa). On the rebuild engines the Hamerly bound state rides along
+    (point-order ``u``/``lo`` plus the replicated center-graph ``nb``):
+    restoring it resumes the *gated* trajectory bit-for-bit. Without it
+    (resident arenas, legacy) bounds are rebuilt as the stale-zero safe
+    loose state with ``first=True`` — still exact per-row, but the full
+    recompute may take kn-restricted moves the gated run never evaluated,
+    so the resumed trajectory is equivalent-quality rather than
+    bit-identical (DESIGN.md §11.3).
+    """
+
+    def __init__(self, ckpt_dir: str, *, every: int = 0, keep: int = 3,
+                 extra: dict | None = None):
+        self.ckpt_dir = ckpt_dir
+        self.every = int(every)
+        self.keep = keep
+        self.extra = dict(extra or {})
+        self.saved: list[int] = []
+
+    def due(self, it: int) -> bool:
+        return self.every > 0 and it > 0 and it % self.every == 0
+
+    def save(self, it: int, c, a, u=None, lo=None, nb=None) -> str:
+        """Atomic write of {c, a} (+ optional bound state {u, lo, nb})
+        at iteration ``it`` (rides ``checkpoint.save_checkpoint``: temp
+        dir + fsync + rename)."""
+        import shutil
+        from ..checkpoint import save_checkpoint
+        payload = {"c": np.asarray(jax.device_get(c), np.float32),
+                   "a": np.asarray(jax.device_get(a), np.int32)}
+        fit_meta = dict(self.extra, it=it)
+        if u is not None:
+            payload["u"] = np.asarray(jax.device_get(u), np.float32)
+            payload["lo"] = np.asarray(jax.device_get(lo), np.float32)
+            payload["nb"] = np.asarray(jax.device_get(nb), np.int32)
+            fit_meta["kn_nb"] = int(payload["nb"].shape[1])
+        path = save_checkpoint(self.ckpt_dir, it, payload,
+                               extra_meta={"fit": fit_meta})
+        self.saved.append(it)
+        for s in self.saved[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step-{s:09d}"),
+                          ignore_errors=True)
+        self.saved = self.saved[-self.keep:] if self.keep else self.saved
+        return path
+
+    def latest(self, n: int, k: int, d: int):
+        """Newest complete checkpoint as ``(it, c, a, bounds)`` numpy
+        arrays — ``bounds`` is a ``{u, lo, nb}`` dict when the
+        checkpoint carried the Hamerly state, else None — or None when
+        the directory holds no restorable checkpoint (truncated ones are
+        skipped by ``checkpoint.latest_step``)."""
+        from ..checkpoint import latest_step, load_meta, restore_checkpoint
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return None
+        fit_meta = load_meta(self.ckpt_dir, step).get("extra", {}) \
+            .get("fit", {})
+        like = {"c": np.zeros((k, d), np.float32),
+                "a": np.zeros((n,), np.int32)}
+        kn_nb = fit_meta.get("kn_nb")
+        if kn_nb:
+            like["u"] = np.zeros((n,), np.float32)
+            like["lo"] = np.zeros((n,), np.float32)
+            like["nb"] = np.zeros((k, kn_nb), np.int32)
+        tree = restore_checkpoint(self.ckpt_dir, step, like)
+        bounds = None
+        if kn_nb:
+            bounds = {"u": np.asarray(tree["u"], np.float32),
+                      "lo": np.asarray(tree["lo"], np.float32),
+                      "nb": np.asarray(tree["nb"], np.int32)}
+        return (step, np.asarray(tree["c"], np.float32),
+                np.asarray(tree["a"], np.int32), bounds)
 
 
 class FaultTolerantLoop:

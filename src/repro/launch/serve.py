@@ -12,6 +12,11 @@ the ring into the cluster-major tables with ``kv_partial_fit`` — Sculley
 per-center learning-rate updates, the KV-domain analogue of
 ``KMeansModel.partial_fit`` — so the served clustering keeps absorbing
 decoded tokens instead of leaving the ring write-only until overflow.
+
+Transient failures of the clustered decode step or the fold (flaky
+device/RPC, simulated by ``ft.chaos.FaultInjector(fail_calls=...)``) are
+absorbed with exponential backoff (``ft.retry_transient``, budget
+``--retries``) instead of killing the serving loop — DESIGN.md §11.5.
 """
 from __future__ import annotations
 
@@ -98,6 +103,9 @@ def main():
                     help="decode steps between partial_fit folds of the "
                          "ring into the cluster tables (0: the ring "
                          "size, i.e. fold just before it would wrap)")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="transient-failure retry budget per clustered "
+                         "decode step / ring fold (ft.retry_transient)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -138,15 +146,35 @@ def main():
     clus_toks, t0 = [], time.time()
     total_folded = 0
     step2 = jax.jit(lambda p, c, t, i: serve_step(cfg, p, c, t, i))
+
+    from repro.core.opcount import OpCounter
+    from repro.ft import active_injector, retry_transient
+    retry_ctr = OpCounter()
+
+    def guarded(op, fn):
+        """Run one serving op under the transient-retry envelope; an
+        installed chaos injector gets to fail the call first."""
+        def call():
+            inj = active_injector()
+            if inj is not None:
+                inj.maybe_fail(op)
+            return fn()
+        return retry_transient(call, retries=args.retries,
+                               counter=retry_ctr)
+
     for i in range(args.decode):
-        logits, cache2 = step2(params, cache2, tok,
-                               jnp.int32(args.prompt_len + i))
+        logits, cache2 = guarded(
+            "decode_step",
+            lambda: step2(params, cache2, tok,
+                          jnp.int32(args.prompt_len + i)))
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         clus_toks.append(np.asarray(tok[:, 0]))
         if (i + 1) % fold_every == 0:
-            cache2, counts, folded = fold_ring(cache2, counts)
+            cache2, counts, folded = guarded(
+                "fold_ring", lambda: fold_ring(cache2, counts))
             total_folded += folded
-    cache2, counts, folded = fold_ring(cache2, counts)   # drain the tail
+    cache2, counts, folded = guarded(            # drain the tail
+        "fold_ring", lambda: fold_ring(cache2, counts))
     total_folded += folded
     t_clus = time.time() - t0
     sizes1 = int(jnp.sum(cache2["stack"]["sizes"]))
@@ -164,6 +192,9 @@ def main():
           f"fold every {fold_every} steps")
     print(f"attention reads/token: full={reads_full} "
           f"clustered={reads_clus} ({reads_full / reads_clus:.1f}x fewer)")
+    if retry_ctr.retries:
+        print(f"transient failures absorbed: {int(retry_ctr.retries)} "
+              f"(retry budget {args.retries} per call)")
 
 
 if __name__ == "__main__":

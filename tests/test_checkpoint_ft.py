@@ -7,8 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import (AsyncCheckpointer, latest_step,
-                              restore_checkpoint, save_checkpoint)
+from repro.checkpoint import (AsyncCheckpointer, CheckpointCorruptError,
+                              latest_step, restore_checkpoint,
+                              save_checkpoint, verify_checkpoint)
 from repro.data import ShardedBatcher
 from repro.ft import FaultTolerantLoop, HeartbeatMonitor, StragglerPolicy, \
     plan_remesh
@@ -110,6 +111,60 @@ def test_heartbeat_dead_host():
     hb.beat("h0")
     t[0] = 12.0
     assert hb.dead_hosts() == ["h1"]
+
+
+def test_latest_step_skips_truncated(tmp_path):
+    """A torn write (truncated arrays.npz) is skipped with a warning
+    naming the defect; a restart lands on the last complete step."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 4, _state())
+    save_checkpoint(d, 8, _state())
+    npz = os.path.join(d, "step-%09d" % 8, "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    with pytest.warns(UserWarning, match="skipping checkpoint step 8"):
+        assert latest_step(d) == 4
+    reason = verify_checkpoint(d, 8)
+    assert reason is not None and "arrays.npz" in reason
+    with pytest.raises(CheckpointCorruptError, match="step 8"):
+        restore_checkpoint(d, 8, _state())
+
+
+def test_latest_step_skips_missing_meta(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, _state())
+    os.remove(os.path.join(d, "step-%09d" % 3, "meta.json"))
+    with pytest.warns(UserWarning, match="missing meta.json"):
+        assert latest_step(d) is None
+
+
+def test_fit_checkpointer_roundtrip_and_gc(tmp_path):
+    """FitCheckpointer: cadence, atomic payloads, keep-window GC, and the
+    optional Hamerly bound state riding along (DESIGN.md §11.3)."""
+    from repro.ft import FitCheckpointer
+    n, k, d_, kn = 12, 3, 4, 2
+    ck = FitCheckpointer(str(tmp_path / "fit"), every=2, keep=2)
+    assert ck.due(2) and not ck.due(3) and not ck.due(0)
+    c = jnp.arange(k * d_, dtype=jnp.float32).reshape(k, d_)
+    a = jnp.arange(n, dtype=jnp.int32) % k
+    ck.save(2, c, a)                                   # {c, a} only
+    u = jnp.arange(n, dtype=jnp.float32)
+    nb = jnp.tile(jnp.arange(kn, dtype=jnp.int32), (k, 1))
+    ck.save(4, c + 1, a, u=u, lo=u * 0.5, nb=nb)
+    ck.save(6, c + 2, a, u=u, lo=u * 0.5, nb=nb)
+    it, c_got, a_got, bounds = ck.latest(n, k, d_)
+    assert it == 6
+    np.testing.assert_array_equal(c_got, np.asarray(c) + 2)
+    np.testing.assert_array_equal(a_got, np.asarray(a))
+    assert bounds is not None and bounds["nb"].shape == (k, kn)
+    np.testing.assert_array_equal(bounds["u"], np.asarray(u))
+    assert os.listdir(str(tmp_path / "fit")) == \
+        ["step-%09d" % 4, "step-%09d" % 6]             # keep=2 GC'd step 2
+    # a {c, a}-only checkpoint restores with bounds=None
+    ck2 = FitCheckpointer(str(tmp_path / "fit2"))
+    ck2.save(1, c, a)
+    it2, _, _, bounds2 = ck2.latest(n, k, d_)
+    assert it2 == 1 and bounds2 is None
 
 
 def test_plan_remesh_keeps_tp():

@@ -1,0 +1,224 @@
+"""Self-healing recovery paths (DESIGN.md §11): kill-and-resume parity on
+both placements, guard-driven arena regroup, dying-center split repair,
+and the arena-full graceful degradation of the served partial_fit.
+
+The mesh-placement tests need >1 host-platform devices, so they run in a
+subprocess with XLA_FLAGS set (the main pytest process keeps 1 device).
+Select the whole fault-tolerance surface with ``-m faults``.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OpCounter, assign_nearest, fit, init_state
+from repro.core.engine import K2Step
+from repro.core.k2means import fit_k2means
+from repro.data import gmm_blobs
+from repro.ft import FaultInjector, Preemption
+from repro.ft.invariants import heal_fit, make_guard
+
+pytestmark = pytest.mark.faults
+
+_N, _D, _K, _KN = 2048, 16, 32, 8
+
+
+def _data(seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = gmm_blobs(key, _N, _D, true_k=20)
+    c0 = x[jax.random.choice(key, _N, shape=(_K,), replace=False)]
+    a0 = assign_nearest(x, c0).astype(jnp.int32)
+    return x, c0, a0
+
+
+def test_kill_and_resume_single_device_bitexact(tmp_path):
+    """Preempt a checkpointing single-device fit mid-run; resume= True
+    reproduces the uninterrupted run's final assignment bit-for-bit (the
+    checkpoint carries the Hamerly bound state, §11.3) and counts the
+    restore repair."""
+    x, c0, a0 = _data()
+    kw = dict(kn=_KN, max_iters=12, backend="xla", residency="rebuild",
+              key=jax.random.PRNGKey(1))
+    base = fit_k2means(x, c0, a0, **kw)
+    d = str(tmp_path / "ckpt")
+    with pytest.raises(Preemption):
+        with FaultInjector(seed=0, preempt_at=7):
+            fit_k2means(x, c0, a0, ckpt_dir=d, ckpt_every=3, **kw)
+    ctr = OpCounter()
+    r = fit_k2means(x, c0, a0, ckpt_dir=d, ckpt_every=3, resume=True,
+                    counter=ctr, **kw)
+    np.testing.assert_array_equal(np.asarray(r.assignment),
+                                  np.asarray(base.assignment))
+    assert abs(r.energy - base.energy) <= 1e-5 * abs(base.energy)
+    assert ctr.profile()["repairs"]["restore"] == 1
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import tempfile
+import jax
+import numpy as np
+from repro.core.distributed import fit_distributed_k2means
+from repro.core.opcount import OpCounter
+from repro.ft import FaultInjector, Preemption
+from repro.launch.mesh import make_debug_cluster_mesh
+from repro.data import gmm_blobs
+
+mesh = make_debug_cluster_mesh()
+key = jax.random.PRNGKey(3)
+n, k, kn = 2048, 32, 8
+x = gmm_blobs(jax.random.PRNGKey(0), n, 16, true_k=20)
+kw = dict(max_iters=10, init="random", backend="xla",
+          residency="rebuild")
+out = {"devices": len(jax.devices())}
+
+base = fit_distributed_k2means(x, k, kn, mesh, key, **kw)
+a_base = np.asarray(base.assignment)
+
+# kill at iteration 6, resume from the step-4 checkpoint
+with tempfile.TemporaryDirectory() as td:
+    try:
+        with FaultInjector(seed=0, preempt_at=6):
+            fit_distributed_k2means(x, k, kn, mesh, key, ckpt_dir=td,
+                                    ckpt_every=2, **kw)
+        out["preempted"] = False
+    except Preemption:
+        out["preempted"] = True
+    ctr = OpCounter()
+    r = fit_distributed_k2means(x, k, kn, mesh, key, ckpt_dir=td,
+                                ckpt_every=2, resume=True, counter=ctr,
+                                **kw)
+    out["resume_bitexact"] = bool(np.array_equal(np.asarray(r.assignment),
+                                                 a_base))
+    out["resume_restores"] = ctr.profile()["repairs"]["restore"]
+
+# one simulated host loss mid-fit: checkpoint + remesh onto the
+# survivors, trajectory unchanged
+ctr2 = OpCounter()
+with FaultInjector(seed=0, drop_host={5: 1}):
+    r2 = fit_distributed_k2means(x, k, kn, mesh, key, counter=ctr2, **kw)
+out["drop_bitexact"] = bool(np.array_equal(np.asarray(r2.assignment),
+                                           a_base))
+out["drop_restores"] = ctr2.profile()["repairs"]["restore"]
+print("RESULT " + json.dumps(out))
+"""
+
+
+def test_kill_and_resume_mesh_bitexact():
+    """The same parity on the 4-device mesh, plus host-loss failover onto
+    the survivor mesh — both must keep the fault-free trajectory."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")]
+    out = json.loads(line[0][len("RESULT "):])
+    assert out["devices"] == 4
+    assert out["preempted"]
+    assert out["resume_bitexact"]
+    assert out["resume_restores"] == 1
+    assert out["drop_bitexact"]
+    assert out["drop_restores"] == 1
+
+
+def test_arena_poison_heals_by_regroup():
+    """Slot-ownership corruption of a quiet (converged) resident arena:
+    the guard's arena lane fires, heal_fit rebuilds the arena from the
+    recovered assignment (regroup rung) and the healed state carries the
+    pre-poison assignment."""
+    x, c0, a0 = _data()
+    w = jnp.ones((_N,), jnp.float32)
+    sb = K2Step(k=_K, kn=_KN, backend="xla", residency="resident",
+                regroup_every=100, move_cap=256)
+    step = sb.build(_N, _D)
+    state = sb.init_resident(x, w, c0, a0)
+    for _ in range(6):                      # settle so no resort pends
+        state, _stats = step(x, w, state)
+    a_before = np.asarray(sb.final_assignment(state, _N))
+    guard = make_guard(sb, _N)
+    assert int(np.sum(np.asarray(guard(state)))) == 0
+
+    pid = np.array(state.pid)               # duplicate-ownership poison
+    owned = np.flatnonzero(pid >= 0)
+    pid[owned[3]] = pid[owned[11]]
+    state = state._replace(pid=jnp.asarray(pid))
+    vio = np.asarray(jax.device_get(guard(state)))
+    assert vio[3] > 0, vio
+
+    ctr = OpCounter()
+    x2, w2, healed = heal_fit(x, w, state, sb, _N, ctr,
+                              jax.random.PRNGKey(9), vio)
+    assert ctr.profile()["repairs"]["regroup"] == 1
+    assert int(np.sum(np.asarray(guard(healed)))) == 0
+    a_after = np.asarray(sb.final_assignment(healed, _N))
+    # every row with unambiguous surviving ownership keeps its cluster;
+    # the poisoned rows were re-assigned exactly — to the same nearest
+    # center, so the whole assignment survives the regroup
+    np.testing.assert_array_equal(a_after, a_before)
+
+
+def test_dying_center_heals_by_split():
+    """A non-finite center cannot be averaged back: heal_fit quarantines
+    it and re-seats it with one GDI Lemma-1 split of the highest-energy
+    donor (split rung); the healed state is guard-clean and finite."""
+    x, c0, a0 = _data()
+    w = jnp.ones((_N,), jnp.float32)
+    sb = K2Step(k=_K, kn=_KN, backend="xla", residency="rebuild")
+    state = init_state(c0, a0, _KN)
+    state = state._replace(c=state.c.at[5].set(jnp.nan))
+    guard = make_guard(sb, _N)
+    vio = np.asarray(jax.device_get(guard(state)))
+    assert vio[0] > 0, vio
+
+    ctr = OpCounter()
+    _x2, _w2, healed = heal_fit(x, w, state, sb, _N, ctr,
+                                jax.random.PRNGKey(2), vio)
+    assert ctr.profile()["repairs"]["split"] == 1
+    assert bool(jnp.isfinite(healed.c).all())
+    assert int(np.sum(np.asarray(guard(healed)))) == 0
+    # the re-seated center is live: it owns rows after the exact
+    # re-assignment step of the healer
+    assert int(jnp.sum(healed.a == 5)) > 0
+
+
+def test_partial_fit_degraded_fold_exact_centers():
+    """Arena-full graceful degradation: on_full='degrade' folds the batch
+    into the Sculley per-center statistics only. The center update must
+    be bit-identical to a model with arena headroom absorbing the same
+    batch — degradation drops member rows, never center accuracy."""
+    x, _c0, _a0 = _data(seed=4)
+    res, tight = fit(x, _K, method="k2means", init="random", kn=_KN,
+                     max_iters=8, key=jax.random.PRNGKey(0),
+                     return_model=True, model_capacity=_N)
+    _res2, roomy = fit(x, _K, method="k2means", init="random", kn=_KN,
+                       max_iters=8, key=jax.random.PRNGKey(0),
+                       return_model=True, model_capacity=2 * _N)
+    batch = gmm_blobs(jax.random.PRNGKey(7), 64, _D, true_k=20)
+
+    with pytest.raises(ValueError, match="arena full"):
+        tight.partial_fit(batch)            # default on_full="raise"
+    assert tight.degraded_folds == 0 and tight.n_rows == _N
+
+    ctr = OpCounter()
+    ab_t = tight.partial_fit(batch, counter=ctr, on_full="degrade")
+    ab_r = roomy.partial_fit(batch)
+    assert tight.degraded_folds == 1
+    assert ctr.profile()["degraded_folds"] == 1
+    assert tight.n_rows == _N               # no member rows appended
+    assert roomy.n_rows == 2048 + 64
+    np.testing.assert_array_equal(np.asarray(ab_t), np.asarray(ab_r))
+    np.testing.assert_array_equal(np.asarray(tight.state.c),
+                                  np.asarray(roomy.state.c))
+    np.testing.assert_array_equal(np.asarray(tight.state.counts),
+                                  np.asarray(roomy.state.counts))
