@@ -29,6 +29,7 @@ BENCH_SCHEMAS = {
     "BENCH_iter.json": ("fast", "runs", "summary"),
     "BENCH_predict.json": ("fast", "runs", "summary"),
     "BENCH_ft.json": ("fast", "runs", "summary"),
+    "BENCH_serve.json": ("fast", "runs", "summary"),
     "BENCH_perf.json": ("fast", "sections", "summary_ok", "total_wall_s"),
 }
 
@@ -58,7 +59,7 @@ def _sections(args, outdir=None):
     and shrinks every shape to schema-check scale."""
     from . import (assign_bench, complexity, convergence_curves, dist_bench,
                    ft_bench, init_bench, iter_bench, predict_bench, roofline,
-                   table4_init, table5_speedup)
+                   serve_bench, table4_init, table5_speedup)
 
     if outdir is not None:
         out = lambda name: os.path.join(outdir, name)      # noqa: E731
@@ -103,6 +104,15 @@ def _sections(args, outdir=None):
              "Fault tolerance (smoke) -> BENCH_ft.json",
              lambda: ft_bench.run(fast=True, out=out("BENCH_ft.json"),
                                   shape=(2048, 16, 32, 8, 10))),
+            ("serve",
+             "Serving plane (smoke) -> BENCH_serve.json",
+             lambda: serve_bench.run(fast=True,
+                                     out=out("BENCH_serve.json"),
+                                     n=2048, d=16, k=32, kn=8,
+                                     n_queries=512, fit_iters=4,
+                                     horizon=0.01, rows_per_request=32,
+                                     ladder=(32, 64, 128),
+                                     fracs=(0.25, 2.0), pf_every=10)),
             ("fig23_convergence",
              "Fig 2/3 (smoke)",
              lambda: convergence_curves.run(k=8, max_iters=3)),
@@ -148,6 +158,10 @@ def _sections(args, outdir=None):
          "Fault tolerance: chaos vs fault-free self-healing "
          "(-> BENCH_ft.json)",
          lambda: ft_bench.run(fast=args.fast)),
+        ("serve",
+         "Serving plane: latency/recall vs offered QPS under overload "
+         "(-> BENCH_serve.json)",
+         lambda: serve_bench.run(fast=args.fast)),
         ("fig23_convergence",
          "Fig 2/3: convergence curves (energy vs counted ops)",
          lambda: convergence_curves.run(max_iters=15 if args.fast else 30)),

@@ -1,0 +1,233 @@
+"""Serving-plane benchmark: latency + recall vs offered load under the
+overload-robust executor (repro.serve, DESIGN.md §12).
+
+Sweeps offered QPS as fractions of the executor's analytic capacity
+(``sustainable_qps`` — the full-fidelity rung at the top bucket),
+including a 2x-capacity overload segment, and reports per-segment
+p50/p99 latency, recall@1 against brute-force assignment, degradation
+activity and shed/reject counts. The fit pipeline replicates
+predict_bench exactly (same seed, data, init and iteration budget), so
+the full-fidelity recall line must reproduce the PR 5 acceptance number.
+
+The ISSUE 7 acceptance gates, all asserted into ``meets_acceptance``:
+at 2x sustainable QPS p99 stays <= 5x the uncontended p99; every
+admitted request is answered (zero silent drops — sheds are typed
+``Overloaded``); queue depth never exceeds the bound; degraded-mode
+recall@1 >= 0.95; full-mode recall@1 >= 0.99.
+
+Latencies come off the executor's *virtual clock* (analytic service
+model over counted distances — deterministic, machine-independent);
+wall-clock per segment rides along for reference only.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _percentile(xs: list, p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else float("nan")
+
+
+def _recall(responses, requests, a_true) -> tuple[int, int]:
+    """(correct rows, total rows) over ok predict responses."""
+    correct = total = 0
+    for resp, req in zip(responses, requests):
+        if resp.kind != "predict" or not resp.ok:
+            continue
+        got = np.asarray(resp.result)
+        correct += int((got == a_true[req.meta]).sum())
+        total += got.shape[0]
+    return correct, total
+
+
+def run(fast: bool = False, out: str | None = None, *, n: int | None = None,
+        d: int | None = None, k: int | None = None, kn: int | None = None,
+        n_queries: int | None = None, fit_iters: int | None = None,
+        horizon: float | None = None, rows_per_request: int | None = None,
+        ladder: tuple | None = None, queue_bound: int = 256,
+        deadline: float = 2.5e-3, fracs: tuple = (0.25, 0.5, 1.0, 2.0),
+        pf_every: int = 40):
+    from repro.core import OpCounter, assign_nearest, fit_k2means
+    from repro.core.distance import chunked_argmin_sqdist
+    from repro.core.model import KMeansModel
+    from repro.data import gmm_blobs
+    from repro.ft import poisson_trace
+    from repro.serve import (FULL, ServeConfig, ServeExecutor,
+                             requests_from_trace)
+
+    from benchmarks.common import emit
+
+    if out is None:
+        out = "BENCH_serve.fast.json" if fast else "BENCH_serve.json"
+    dn, dd, dk, dkn, dq = (8192, 16, 64, 16, 8192) if fast \
+        else (65536, 32, 512, 32, 65536)
+    n, d, k, kn = n or dn, d or dd, k or dk, kn or dkn
+    n_queries = n_queries or dq
+    fit_iters = fit_iters or (10 if fast else 30)
+    horizon = horizon or (0.6 if fast else 1.2)
+    rows_per_request = rows_per_request or 256
+    ladder = tuple(ladder) if ladder else (256, 512, 1024)
+
+    # -- served model: the exact predict_bench fit (same seed/data/init),
+    # so full-fidelity recall reproduces the PR 5 acceptance number
+    key = jax.random.PRNGKey(0)
+    allx = gmm_blobs(key, n + n_queries, d, true_k=k)
+    x, q = allx[:n], allx[n:]
+    init = x[jax.random.choice(key, n, shape=(k,), replace=False)]
+    a0 = assign_nearest(x, init).astype(jnp.int32)
+    res = fit_k2means(x, init, a0, kn=kn, max_iters=fit_iters,
+                      backend="xla")
+    q_pool = np.asarray(q, np.float32)
+    a_true = np.asarray(chunked_argmin_sqdist(q, res.centers)[0])
+
+    # offline full-path recall over the whole pool (the PR 5 replica)
+    model0 = KMeansModel.from_result(res, kn=kn, backend="xla")
+    recall_offline = float(
+        (np.asarray(model0.predict(q)) == a_true).mean())
+
+    cfg = ServeConfig(queue_bound=queue_bound, ladder=ladder,
+                      deadline=deadline)
+    capacity = ServeExecutor(model0, cfg).sustainable_qps()  # rows/s
+
+    rows_out = []
+    seg_stats = []
+    deg_correct = deg_total = 0
+    full_correct = full_total = 0
+    for i, frac in enumerate(fracs):
+        # partial_fit folds mutate the served state — fresh model per
+        # segment keeps every segment comparable against a_true
+        model = KMeansModel.from_result(res, kn=kn, backend="xla")
+        counter = OpCounter()
+        ex = ServeExecutor(model, cfg, counter)
+        ex.warmup()
+        # more virtual time at low load, so the uncontended percentile
+        # rests on a comparable sample count
+        hz = horizon * (2.0 if frac < 0.5 else 1.0)
+        rate = frac * capacity / rows_per_request          # requests/s
+        trace = poisson_trace(11 + i, rate=rate, horizon=hz,
+                              rows=rows_per_request, deadline=deadline,
+                              pf_every=pf_every, pf_rows=rows_per_request,
+                              priority_levels=2)
+        reqs = requests_from_trace(trace, q_pool,
+                                   default_deadline=deadline)
+        t0 = time.time()
+        resps = ex.run_trace(reqs)
+        wall = time.time() - t0
+        st = ex.stats()
+
+        assert len(resps) == len(reqs), "silent drop: missing responses"
+        assert all(r.status in ("ok", "rejected", "overloaded")
+                   for r in resps), "untyped response"
+        lat = [r.latency for r in resps
+               if r.kind == "predict" and r.ok]
+        p50 = _percentile(lat, 50) * 1e3
+        p99 = _percentile(lat, 99) * 1e3
+        c, t = _recall(resps, reqs, a_true)
+        recall = c / t if t else float("nan")
+        cf, tf = _recall(
+            [r for r in resps if r.rung == FULL],
+            [rq for r, rq in zip(resps, reqs) if r.rung == FULL], a_true)
+        cd, td = c - cf, t - tf
+        deg_correct += cd
+        deg_total += td
+        full_correct += cf
+        full_total += tf
+        n_shed = sum(1 for r in resps if r.status == "overloaded")
+        n_rej = sum(1 for r in resps if r.status == "rejected")
+        seg_stats.append({
+            "frac": frac, "p50_ms": p50, "p99_ms": p99, "recall": recall,
+            "shed": n_shed, "rejected": n_rej, "stats": st, "wall": wall,
+        })
+        rows_out.append([
+            f"{frac:g}x", round(frac * capacity), len(reqs),
+            st["responses_ok"], n_shed, n_rej,
+            round(p50, 3), round(p99, 3), round(recall, 4),
+            round(cd / td, 4) if td else "",
+            st["rung_transitions"],
+            f"{st['max_queue_depth']}/{st['queue_bound']}",
+        ])
+    emit(rows_out, ["offered", "rows_per_s", "arrivals", "ok", "shed",
+                    "rejected", "p50_ms", "p99_ms", "recall_at_1",
+                    "recall_degraded", "rung_transitions", "queue_depth"])
+
+    uncont = seg_stats[0]
+    over = seg_stats[-1]
+    p99_ratio = over["p99_ms"] / uncont["p99_ms"]
+    recall_degraded = deg_correct / deg_total if deg_total else None
+    recall_full_mode = full_correct / full_total if full_total else None
+    depth_ok = all(s["stats"]["max_queue_depth"]
+                   <= s["stats"]["queue_bound"] for s in seg_stats)
+    answered_ok = all(
+        s["stats"]["responses_ok"] + s["stats"]["responses_overloaded"]
+        == s["stats"]["admitted"] for s in seg_stats)
+    gates = {
+        "p99_overload_le_5x": bool(p99_ratio <= 5.0),
+        "zero_silent_drops": bool(answered_ok),
+        "queue_depth_bounded": bool(depth_ok),
+        "degraded_recall_ge_0.95": bool(recall_degraded is not None
+                                        and recall_degraded >= 0.95),
+        "full_recall_ge_0.99": bool(recall_offline >= 0.99),
+        "overload_sheds_typed": bool(over["shed"] > 0),
+    }
+    summary = {
+        "n": n, "d": d, "k": k, "kn": kn, "n_queries": n_queries,
+        "fit_iters": res.iterations,
+        "rows_per_request": rows_per_request,
+        "bucket_ladder": list(ladder),
+        "queue_bound": queue_bound,
+        "deadline_ms": deadline * 1e3,
+        "sustainable_rows_per_s": round(capacity),
+        "segments": [{
+            "offered_frac": s["frac"],
+            "offered_rows_per_s": round(s["frac"] * capacity),
+            "arrivals": s["stats"]["admitted"] + s["stats"]["rejected"],
+            "ok": s["stats"]["responses_ok"],
+            "shed": s["shed"], "rejected": s["rejected"],
+            "p50_ms": round(s["p50_ms"], 4),
+            "p99_ms": round(s["p99_ms"], 4),
+            "recall_at_1": round(s["recall"], 6),
+            "degrades": s["stats"]["degrades"],
+            "rung_transitions": s["stats"]["rung_transitions"],
+            "max_queue_depth": s["stats"]["max_queue_depth"],
+            "compiled_shapes": s["stats"]["compiled_shapes"],
+            "wall_s": round(s["wall"], 3),
+        } for s in seg_stats],
+        "p99_uncontended_ms": round(uncont["p99_ms"], 4),
+        "p99_overload_ms": round(over["p99_ms"], 4),
+        "p99_overload_ratio": round(float(p99_ratio), 3),
+        "recall_full_mode": round(recall_full_mode, 6)
+        if recall_full_mode is not None else None,
+        "recall_offline_full_path": round(recall_offline, 6),
+        "recall_degraded": round(recall_degraded, 6)
+        if recall_degraded is not None else None,
+        "gates": gates,
+        "meets_acceptance": bool(all(gates.values())),
+    }
+    print(f"# serve summary: 2x-overload p99 {over['p99_ms']:.2f}ms = "
+          f"{p99_ratio:.2f}x uncontended ({uncont['p99_ms']:.2f}ms, "
+          f"gate <= 5x); {over['shed']} typed sheds + "
+          f"{over['rejected']} typed rejects, zero silent drops; recall@1 "
+          f"full={recall_offline:.4f} degraded="
+          f"{recall_degraded if recall_degraded is None else round(recall_degraded, 4)} "
+          f"(gates >= 0.99 / >= 0.95) at k={k}, "
+          f"capacity {capacity:,.0f} rows/s")
+    with open(out, "w") as f:
+        json.dump({"fast": fast, "runs": rows_out, "summary": summary}, f,
+                  indent=2)
+    print(f"# wrote {out}")
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    run(fast=args.fast)

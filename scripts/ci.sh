@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # CI gate, cheapest first:
 #   1. tier-1: the fast suite (everything not slow-marked) — includes
-#      the -m faults fault-injection / self-healing recovery tests
+#      the -m faults fault-injection / self-healing recovery tests and
+#      the -m serve serving-plane executor tests (admission control,
+#      micro-batching, degradation ladder, burst determinism)
 #   2. slow tier: distributed + serve integration and the benchmark
-#      smoke (every BENCH_*.json schema, incl. BENCH_ft.json)
+#      smoke (every BENCH_*.json schema, incl. BENCH_serve.json)
 #
 # Usage: scripts/ci.sh [--tier1-only]
 set -euo pipefail

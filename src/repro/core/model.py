@@ -473,6 +473,17 @@ class KMeansModel:
                               self.route_probes)
         return routed
 
+    def route_batch(self, qb: jax.Array, probes: int | None = None):
+        """The routing stage alone: ``(routed, u_routed, n_scanned)`` for
+        one batch, with an optional ``probes`` override (the serving
+        executor's degraded rungs shrink the closure probes and, at the
+        route-only rung, take ``routed`` as the assignment outright —
+        DESIGN.md §12)."""
+        p = self.route_probes if probes is None else min(
+            probes, self.route_groups)
+        return _route(jnp.asarray(qb, jnp.float32), self.state.c,
+                      self.router, p)
+
     def _resolve(self, qb: jax.Array, routed: jax.Array):
         if self.backend == "pallas":
             from ..kernels.ops import bounded_predict_assign, choose_group_bn
@@ -482,14 +493,16 @@ class KMeansModel:
                 bkn=self.bkn, interpret=self.interpret)
         return _resolve_xla(qb, self.state.c, self.state.prev_nb, routed)
 
-    def _predict_batch(self, qb: jax.Array):
+    def _predict_batch(self, qb: jax.Array, probes: int | None = None):
         """Route + resolve one batch. Returns (a, sqdist, routed,
         n_counted (m,)) with n_counted the per-query distance charge of
         the serial bounded algorithm: group scan + surviving members
         (from :func:`_route`) + resolution neighbors passing Elkan's
-        ``d(nb, routed) < 2 d(q, routed)`` condition."""
-        routed, u_routed, n_scan = _route(qb, self.state.c, self.router,
-                                          self.route_probes)
+        ``d(nb, routed) < 2 d(q, routed)`` condition. ``probes``
+        overrides ``route_probes`` (the executor's probe-shrink rung)."""
+        p = self.route_probes if probes is None else min(
+            probes, self.route_groups)
+        routed, u_routed, n_scan = _route(qb, self.state.c, self.router, p)
         a_b, d_b = self._resolve(qb, routed)
         # the self-neighbor (distance 0) always passes 2u when u > 0, but
         # the serial algorithm already holds d(q, routed) from the routing
@@ -520,8 +533,18 @@ class KMeansModel:
         backoff up to ``retries`` times per batch
         (``ft.retry_transient``; absorbed failures land on
         ``counter.retries``).
+
+        Queries may arrive in bf16/f16 (the KV-cache dtypes): they are
+        upcast to f32 once, here at the boundary, so the kernel path
+        never relies on silent promotion (and integer inputs are
+        rejected rather than promoted).
         """
-        q = jnp.asarray(queries, jnp.float32)
+        q = jnp.asarray(queries)
+        if not jnp.issubdtype(q.dtype, jnp.floating):
+            raise TypeError(f"predict queries must be floating point, "
+                            f"got {q.dtype}")
+        if q.dtype != jnp.float32:
+            q = q.astype(jnp.float32)   # one explicit boundary upcast
         q = _validate_rows(q, validate, what="predict queries")
         nq = q.shape[0]
         if nq == 0:

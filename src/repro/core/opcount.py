@@ -52,6 +52,12 @@ class OpCounter:
     degraded_folds: float = 0.0
     retries: float = 0.0
     sanitized_rows: float = 0.0
+    # serving-plane graceful-degradation lane (DESIGN.md §12): one counter
+    # per rung of the executor's degradation ladder — probe-shrunk routing,
+    # route-only assignment, and load-shed requests (typed Overloaded)
+    degrades: dict = dataclasses.field(
+        default_factory=lambda: {"probe_shrink": 0, "route_only": 0,
+                                 "shed": 0})
     wall_t0: float = dataclasses.field(default_factory=time.perf_counter)
 
     @property
@@ -118,6 +124,18 @@ class OpCounter:
     def count_degraded_fold(self, n: int = 1) -> None:
         self.degraded_folds += int(n)
 
+    @property
+    def total_degrades(self) -> int:
+        return int(sum(self.degrades.values()))
+
+    def count_degrade(self, kind: str, n: int = 1) -> None:
+        """Record ``n`` requests served on one degradation rung
+        (``probe_shrink`` | ``route_only`` | ``shed``)."""
+        if kind not in self.degrades:
+            raise ValueError(f"unknown degrade kind {kind!r}; expected one "
+                             f"of {sorted(self.degrades)}")
+        self.degrades[kind] += int(n)
+
     def count_retry(self, n: int = 1) -> None:
         self.retries += int(n)
 
@@ -144,6 +162,8 @@ class OpCounter:
             "repairs": dict(self.repairs),
             "total_repairs": self.total_repairs,
             "degraded_folds": self.degraded_folds,
+            "degrades": dict(self.degrades),
+            "total_degrades": self.total_degrades,
             "retries": self.retries,
             "sanitized_rows": self.sanitized_rows,
             "wall_s": self.wall,

@@ -1,4 +1,4 @@
-from .chaos import FaultInjector, Preemption, TransientError
+from .chaos import FaultInjector, Preemption, TransientError, poisson_trace
 from .chaos import active as active_injector
 from .runtime import (FaultTolerantLoop, FitCheckpointer, HeartbeatMonitor,
                       StragglerPolicy, plan_remesh, retry_transient)

@@ -58,6 +58,25 @@ Fault taxonomy (one knob per failure mode the guards must survive):
     paths (``KMeansModel.partial_fit``), counted by ``corrupt_batch``
     calls rather than fit iterations.
 
+Traffic-shaped faults for the serving executor (DESIGN.md §12 — these
+key on *request ids* and *executed-batch indices*, the serving plane's
+natural coordinates, and all stay deterministic under the same seed):
+
+``poison_queries``
+    {request_rid: count} — NaN that many rows of the predict request
+    with that rid (a poisoned query batch). The executor quarantines
+    them at batch assembly (``OpCounter.sanitized_rows``).
+``slow_consumer``
+    {batch_index: seconds} — inflate the *virtual* service time of that
+    executed batch (a slow downstream consumer / device hiccup): the
+    queue backs up, the degradation ladder reacts, then recovers. No
+    host sleep — replays stay bit-deterministic.
+
+:func:`poisson_trace` generates the seeded arrival processes the chaos
+scenarios ride on: Poisson arrivals with burst windows multiplying the
+rate, optionally interleaving ``partial_fit`` folds into the stream
+(fold-during-burst).
+
 All row/slot/center choices are drawn from ``numpy`` generators seeded
 by (seed, kind, iteration) — the same schedule replays bit-identically,
 which is what makes the chaos benchmark (``benchmarks/ft_bench.py``)
@@ -94,7 +113,7 @@ def active() -> "FaultInjector | None":
 
 # kind tags folded into the per-event RNG seed
 _TAGS = {"nan": 1, "inf": 2, "dup": 3, "centers": 4, "bounds": 5,
-         "slots": 6, "batch": 7}
+         "slots": 6, "batch": 7, "query": 8, "trace": 9}
 
 
 def _norm(sched: Mapping[int, int] | None) -> dict[int, int]:
@@ -122,7 +141,9 @@ class FaultInjector:
                  drop_host: Mapping[int, int] | None = None,
                  preempt_at: int | None = None,
                  fail_calls: Mapping[str, Iterable[int]] | None = None,
-                 nan_batches: Mapping[int, int] | None = None):
+                 nan_batches: Mapping[int, int] | None = None,
+                 poison_queries: Mapping[int, int] | None = None,
+                 slow_consumer: Mapping[int, float] | None = None):
         self.seed = int(seed)
         self.nan_rows = _norm(nan_rows)
         self.inf_rows = _norm(inf_rows)
@@ -137,6 +158,9 @@ class FaultInjector:
         self.fail_calls = {str(op): {int(i) for i in idxs}
                            for op, idxs in (fail_calls or {}).items()}
         self.nan_batches = _norm(nan_batches)
+        self.poison_queries = _norm(poison_queries)
+        self.slow_consumer = {int(k): float(v)
+                              for k, v in (slow_consumer or {}).items()}
         self.events: list[tuple[int, str, int | float]] = []
         self._calls: dict[str, int] = {}
         self._batches = 0
@@ -238,6 +262,32 @@ class FaultInjector:
             self.events.append((b, "nan_batch", int(count)))
         return xb
 
+    def corrupt_queries(self, rid: int, x: "np.ndarray") -> "np.ndarray":
+        """Serving-plane poisoned query batch: NaN ``poison_queries[rid]``
+        rows of the predict request with id ``rid``. Operates on (and
+        returns a copy of) a host array — the request's own payload is
+        never mutated, so a replay of the same trace sees the same
+        faults."""
+        count = self.poison_queries.get(int(rid), 0)
+        if not count:
+            return x
+        rng = self._rng("query", int(rid))
+        x = np.array(x, copy=True)
+        idx = rng.choice(x.shape[0], size=min(count, x.shape[0]),
+                         replace=False)
+        x[idx] = np.nan
+        self.events.append((int(rid), "poison_queries", int(count)))
+        return x
+
+    def consume_stall(self, batch_index: int) -> float:
+        """Virtual slow-consumer stall (seconds) scheduled for this
+        executed serving batch — the executor adds it to the batch's
+        modeled service time; no host sleep happens."""
+        secs = self.slow_consumer.get(int(batch_index), 0.0)
+        if secs > 0:
+            self.events.append((int(batch_index), "slow_consumer", secs))
+        return secs
+
     # -- state corruption --------------------------------------------------
 
     def corrupt_state(self, it: int, state, resident: bool):
@@ -318,6 +368,43 @@ class FaultInjector:
                                  f"call {i}")
 
 
+def poisson_trace(seed: int, *, rate: float, horizon: float,
+                  rows: int = 32, deadline: float = 0.005,
+                  bursts: Iterable[tuple] = (), pf_every: int = 0,
+                  pf_rows: int = 64, pf_deadline: float = 0.05,
+                  priority_levels: int = 1) -> list[dict]:
+    """Seeded Poisson arrival trace for the serving executor.
+
+    Requests of ``rows`` queries arrive at ``rate`` requests/s over
+    ``horizon`` seconds; each ``bursts`` window ``(t0, t1, factor)``
+    multiplies the instantaneous rate (a traffic burst). When
+    ``pf_every`` > 0 every pf_every-th arrival is a ``partial_fit``
+    fold riding the same queue at priority -1 (so fold-during-burst is
+    one trace away). ``priority_levels`` > 1 cycles predict priorities
+    0..levels-1 so shedding has an ordering to respect. Same seed =>
+    the same trace, entry for entry."""
+    rng = np.random.default_rng([int(seed), _TAGS["trace"]])
+    bursts = [(float(a), float(b), float(f)) for a, b, f in bursts]
+    out: list[dict] = []
+    t, i = 0.0, 0
+    while True:
+        f = 1.0
+        for a, b, fac in bursts:
+            if a <= t < b:
+                f *= fac
+        t += float(rng.exponential(1.0 / (rate * f)))
+        if t >= horizon:
+            return out
+        if pf_every and (i + 1) % pf_every == 0:
+            out.append({"t": t, "kind": "partial_fit", "rows": pf_rows,
+                        "deadline": pf_deadline, "priority": -1})
+        else:
+            out.append({"t": t, "kind": "predict", "rows": rows,
+                        "deadline": deadline,
+                        "priority": i % max(priority_levels, 1)})
+        i += 1
+
+
 def apply_fit_faults(inj: FaultInjector, it: int, x, w, state,
                      resident: bool, nsh: int = 1):
     """One-call driver hook: preemption check, straggler stall, input and
@@ -332,4 +419,4 @@ def apply_fit_faults(inj: FaultInjector, it: int, x, w, state,
 
 
 __all__ = ["FaultInjector", "TransientError", "Preemption", "active",
-           "apply_fit_faults"]
+           "apply_fit_faults", "poisson_trace"]

@@ -13,10 +13,16 @@ per-center learning-rate updates, the KV-domain analogue of
 ``KMeansModel.partial_fit`` — so the served clustering keeps absorbing
 decoded tokens instead of leaving the ring write-only until overflow.
 
-Transient failures of the clustered decode step or the fold (flaky
-device/RPC, simulated by ``ft.chaos.FaultInjector(fail_calls=...)``) are
-absorbed with exponential backoff (``ft.retry_transient``, budget
-``--retries``) instead of killing the serving loop — DESIGN.md §11.5.
+The decode/fold loop rides the serving executor (DESIGN.md §12):
+``decode_step`` and ``fold_ring`` are registered ops submitted through
+:meth:`repro.serve.ServeExecutor.call`, so the KV workload shares the
+same bounded admission queue, transient-retry envelope
+(``ft.retry_transient``, budget ``--retries``; chaos
+``fail_calls={"decode_step"|"fold_ring": ...}`` exercises it) and
+counted-op accounting as the predict/partial_fit traffic. The end-of-run
+stats print surfaces the PR 6 healing counters — retries, repairs,
+degraded folds, sanitized rows — so recovery is never silent to the
+operator.
 """
 from __future__ import annotations
 
@@ -148,33 +154,38 @@ def main():
     step2 = jax.jit(lambda p, c, t, i: serve_step(cfg, p, c, t, i))
 
     from repro.core.opcount import OpCounter
-    from repro.ft import active_injector, retry_transient
+    from repro.serve import ServeConfig, ServeExecutor
     retry_ctr = OpCounter()
 
-    def guarded(op, fn):
-        """Run one serving op under the transient-retry envelope; an
-        installed chaos injector gets to fail the call first."""
-        def call():
-            inj = active_injector()
-            if inj is not None:
-                inj.maybe_fail(op)
-            return fn()
-        return retry_transient(call, retries=args.retries,
-                               counter=retry_ctr)
+    # the KV decode/fold workload rides the serving executor: the same
+    # bounded admission queue, retry envelope and counted-op accounting
+    # as the predict/partial_fit plane (DESIGN.md §12)
+    ex = ServeExecutor(config=ServeConfig(queue_bound=8,
+                                          retries=args.retries),
+                       counter=retry_ctr)
+    ex.register("decode_step",
+                lambda p: step2(params, p["cache"], p["tok"], p["i"]))
+    ex.register("fold_ring", lambda p: fold_ring(p["cache"], p["counts"]))
+
+    def guarded(op, payload):
+        resp = ex.call(op, payload)
+        if not resp.ok:
+            raise RuntimeError(f"{op} request {resp.rid}: {resp.status} "
+                               f"({resp.reason})")
+        return resp.result
 
     for i in range(args.decode):
         logits, cache2 = guarded(
-            "decode_step",
-            lambda: step2(params, cache2, tok,
-                          jnp.int32(args.prompt_len + i)))
+            "decode_step", {"cache": cache2, "tok": tok,
+                            "i": jnp.int32(args.prompt_len + i)})
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         clus_toks.append(np.asarray(tok[:, 0]))
         if (i + 1) % fold_every == 0:
             cache2, counts, folded = guarded(
-                "fold_ring", lambda: fold_ring(cache2, counts))
+                "fold_ring", {"cache": cache2, "counts": counts})
             total_folded += folded
     cache2, counts, folded = guarded(            # drain the tail
-        "fold_ring", lambda: fold_ring(cache2, counts))
+        "fold_ring", {"cache": cache2, "counts": counts})
     total_folded += folded
     t_clus = time.time() - t0
     sizes1 = int(jnp.sum(cache2["stack"]["sizes"]))
@@ -192,9 +203,19 @@ def main():
           f"fold every {fold_every} steps")
     print(f"attention reads/token: full={reads_full} "
           f"clustered={reads_clus} ({reads_full / reads_clus:.1f}x fewer)")
-    if retry_ctr.retries:
-        print(f"transient failures absorbed: {int(retry_ctr.retries)} "
-              f"(retry budget {args.retries} per call)")
+    # end-of-run operator stats: queue + the PR 6 healing counters —
+    # retries, per-rung repairs, degraded folds, quarantined rows — so
+    # nothing the execution layer absorbed stays invisible
+    st = ex.stats()
+    prof = retry_ctr.profile()
+    print(f"serve queue: admitted={st['admitted']} "
+          f"rejected={st['rejected']} "
+          f"max_depth={st['max_queue_depth']}/{st['queue_bound']}")
+    print(f"ft counters: retries={int(prof['retries'])} "
+          f"(budget {args.retries}/call) repairs={prof['repairs']} "
+          f"degraded_folds={int(prof['degraded_folds'])} "
+          f"sanitized_rows={int(prof['sanitized_rows'])} "
+          f"sheds={prof['degrades']['shed']}")
 
 
 if __name__ == "__main__":

@@ -83,6 +83,21 @@ def test_predict_batching_invariant(fitted):
     assert (a1 == a2).all()
 
 
+def test_predict_low_precision_queries_upcast_once(fitted):
+    """bf16/f16 query batches are accepted with ONE explicit upcast at
+    the predict boundary: the result is exactly the f32 predict of the
+    rounded values, and non-float dtypes are rejected with a typed
+    error (no silent int->float casts)."""
+    _, q, _, model = fitted
+    for dt in (jnp.bfloat16, jnp.float16):
+        q_low = jnp.asarray(q, dt)
+        a_low = np.asarray(model.predict(q_low))
+        a_ref = np.asarray(model.predict(q_low.astype(jnp.float32)))
+        assert (a_low == a_ref).all()
+    with pytest.raises(TypeError, match="floating"):
+        model.predict(jnp.zeros((4, model.d), jnp.int32))
+
+
 def test_fit_return_model_shapes(fitted):
     x, _, res, model = fitted
     k, d = res.centers.shape

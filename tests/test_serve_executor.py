@@ -1,0 +1,294 @@
+"""Overload-robust serving plane (DESIGN.md §12): bounded admission with
+typed backpressure, pad-to-bucket micro-batching with a bounded jit
+cache, the hysteretic degradation ladder, typed load shedding, chaos
+traffic (bursts, poisoned query batches, slow consumers, fold-during-
+burst) and the bit-determinism contract: same arrival trace + seed =>
+bit-identical responses and an identical degradation-rung transcript."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import OpCounter, fit
+from repro.core.model import KMeansModel
+from repro.ft import FaultInjector, poisson_trace
+from repro.serve import (FULL, PROBE_SHRINK, ROUTE_ONLY, SHED, BucketLadder,
+                         DegradeConfig, DegradeLadder, Overloaded,
+                         ServeConfig, ServeExecutor, requests_from_trace)
+
+pytestmark = pytest.mark.serve
+
+KEY = jax.random.PRNGKey(0)
+KN = 8
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One converged fit; each test rebuilds its own model from the
+    result (from_result is deterministic, so rebuilds are bit-identical
+    — the replay tests depend on that)."""
+    from repro.data import gmm_blobs
+    allx = gmm_blobs(KEY, 2048 + 1024, 16, true_k=32)
+    x, q = allx[:2048], allx[2048:]
+    res = fit(x, 32, kn=KN, max_iters=10, key=KEY)
+    return res, np.asarray(q, np.float32)
+
+
+def _executor(res, **over):
+    model = KMeansModel.from_result(res, kn=KN, backend="xla")
+    kw = dict(queue_bound=64, ladder=(32, 64, 128), deadline=1e-3)
+    kw.update(over)
+    ex = ServeExecutor(model, ServeConfig(**kw), OpCounter())
+    ex.warmup()
+    return ex
+
+
+# -- units: bucket ladder + degradation ladder ---------------------------
+
+
+def test_bucket_ladder():
+    b = BucketLadder((64, 256, 1024))
+    assert b.bucket_for(1) == 64
+    assert b.bucket_for(64) == 64
+    assert b.bucket_for(65) == 256
+    assert b.bucket_for(1024) == 1024
+    with pytest.raises(ValueError):
+        b.bucket_for(1025)
+    padded = b.pad_rows(np.ones((3, 4), np.float32), 64)
+    assert padded.shape == (64, 4)
+    assert padded[3:].sum() == 0
+
+
+def test_degrade_ladder_hysteresis():
+    lad = DegradeLadder(DegradeConfig())
+    # one rung per tick on the way up, even under extreme pressure
+    assert lad.observe(99.0, 0.0) == PROBE_SHRINK
+    assert lad.observe(99.0, 1.0) == ROUTE_ONLY
+    assert lad.observe(99.0, 2.0) == SHED
+    assert lad.observe(99.0, 3.0) == SHED
+    # coming down needs down_patience consecutive calm ticks
+    assert lad.observe(0.0, 4.0) == SHED
+    assert lad.observe(0.0, 5.0) == ROUTE_ONLY
+    # a pressure blip resets the calm streak
+    assert lad.observe(0.9, 6.0) == ROUTE_ONLY
+    assert lad.observe(0.0, 7.0) == ROUTE_ONLY
+    assert lad.observe(0.0, 8.0) == PROBE_SHRINK
+    assert lad.observe(0.0, 9.0) == PROBE_SHRINK
+    assert lad.observe(0.0, 10.0) == FULL
+    # every transition was recorded with its timestamp
+    assert [(o, n) for _, o, n, _ in lad.transcript] == [
+        (0, 1), (1, 2), (2, 3), (3, 2), (2, 1), (1, 0)]
+
+
+# -- admission control ----------------------------------------------------
+
+
+def test_bounded_queue_typed_backpressure(served):
+    """Flooding far beyond the bound: depth never exceeds it, overflow
+    is rejected with a typed reason, and every request is answered."""
+    res, q = served
+    ex = _executor(res, queue_bound=8)
+    rate = 50 * ex.sustainable_qps() / 32
+    trace = poisson_trace(1, rate=rate, horizon=60 / rate, rows=32,
+                          deadline=1e-3)
+    reqs = requests_from_trace(trace, q, default_deadline=1e-3)
+    resps = ex.run_trace(reqs)
+    assert len(resps) == len(reqs)                    # zero silent drops
+    assert ex.queue.max_depth <= 8
+    rej = [r for r in resps if r.status == "rejected"]
+    assert rej and all(r.reason == "queue_full" for r in rej)
+    assert all(r.status in ("ok", "rejected", "overloaded")
+               for r in resps)
+    st = ex.stats()
+    assert st["responses_ok"] + st["responses_overloaded"] \
+        == st["admitted"]
+
+
+def test_shed_rung_typed_overloaded(served):
+    """Sustained 3x overload under a tight deadline drives the ladder to
+    the shed rung: sheds are typed Overloaded (never silent), counted on
+    the degrade lane, and lowest-priority requests go first."""
+    res, q = served
+    ex = _executor(res, queue_bound=64, deadline=2e-4)
+    rate = 3 * ex.sustainable_qps() / 32
+    trace = poisson_trace(2, rate=rate, horizon=400 / rate, rows=32,
+                          deadline=2e-4, priority_levels=2)
+    reqs = requests_from_trace(trace, q, default_deadline=2e-4)
+    resps = ex.run_trace(reqs)
+    shed = [r for r in resps if r.status == "overloaded"]
+    assert shed, "overload never reached the shed rung"
+    assert all(isinstance(r, Overloaded) and r.reason == "shed"
+               and r.rung == SHED for r in shed)
+    assert ex.counter.degrades["shed"] == len(shed)
+    by_rid = {r.rid: r for r in reqs}
+    p_shed = [by_rid[r.rid].priority for r in shed]
+    # low priority is shed first
+    assert p_shed.count(0) >= p_shed.count(1)
+    assert len(resps) == len(reqs)
+
+
+# -- micro-batching / jit cache ------------------------------------------
+
+
+def test_jit_cache_bounded_by_ladder(served):
+    """Ragged request sizes never recompile: after warmup, serving adds
+    zero jit cache entries and touches exactly the ladder's shapes."""
+    res, q = served
+    ex = _executor(res)
+    before = ex.jit_cache_sizes()
+    assert before, "no cache-size introspection available"
+    rng = np.random.default_rng(0)
+    t, trace = 0.0, []
+    for i in range(60):                   # every row count in 1..128
+        t += 1e-4
+        trace.append({"t": t, "kind": "predict",
+                      "rows": int(rng.integers(1, 129))})
+    reqs = requests_from_trace(trace, q, default_deadline=1e-3)
+    ex.run_trace(reqs)
+    assert ex.jit_cache_sizes() == before
+    assert len(ex.compiled_shapes) <= len(ex.buckets)
+    assert ex.stats()["compiled_shapes"] <= len(ex.buckets)
+
+
+# -- degraded rungs still assign correctly -------------------------------
+
+
+def test_degraded_rungs_quality(served):
+    """Probe-shrink and route-only served under overload still agree
+    with brute force on >= 95% of rows (the graceful part)."""
+    from repro.core.distance import chunked_argmin_sqdist
+    res, q = served
+    ex = _executor(res, queue_bound=64, deadline=5e-4)
+    a_true = np.asarray(chunked_argmin_sqdist(q, res.centers)[0])
+    rate = 2 * ex.sustainable_qps() / 32
+    trace = poisson_trace(3, rate=rate, horizon=300 / rate, rows=32,
+                          deadline=5e-4)
+    reqs = requests_from_trace(trace, q, default_deadline=5e-4)
+    resps = ex.run_trace(reqs)
+    correct = total = 0
+    for r, req in zip(resps, reqs):
+        if r.ok and r.rung in (PROBE_SHRINK, ROUTE_ONLY):
+            correct += int((np.asarray(r.result)
+                            == a_true[req.meta]).sum())
+            total += len(req.meta)
+    assert total, "overload never degraded"
+    assert correct / total >= 0.95
+    assert ex.counter.degrades["probe_shrink"] \
+        + ex.counter.degrades["route_only"] > 0
+
+
+# -- chaos: bursts, poison, slow consumer, fold-during-burst -------------
+
+
+def _chaos_run(res, q):
+    """One full chaos scenario: Poisson burst + poisoned query batches +
+    slow-consumer stalls + partial_fit folds riding the burst."""
+    ex = _executor(res, queue_bound=64, deadline=1e-3)
+    rate = 1.5 * ex.sustainable_qps() / 32
+    hz = 300 / rate
+    trace = poisson_trace(5, rate=rate, horizon=hz, rows=32,
+                          deadline=1e-3, bursts=((0.3 * hz, 0.6 * hz, 3.0),),
+                          pf_every=9, pf_rows=32)
+    reqs = requests_from_trace(trace, q, default_deadline=1e-3)
+    with FaultInjector(seed=7, poison_queries={3: 4, 17: 2},
+                       slow_consumer={5: 0.004},
+                       fail_calls={"serve_predict": (2,)}) as inj:
+        resps = ex.run_trace(reqs)
+        vio = ex.guard()
+    return ex, reqs, resps, inj, vio
+
+
+def test_chaos_burst_poison_stall_fold(served):
+    res, q = served
+    ex, reqs, resps, inj, vio = _chaos_run(res, q)
+    assert len(resps) == len(reqs)                    # all answered
+    # poisoned rows were quarantined at assembly, requests still served
+    assert ex.counter.sanitized_rows == 6
+    assert resps[3].ok and resps[17].ok
+    # the injected transient was retried, not surfaced
+    assert ex.counter.retries >= 1
+    # the slow-consumer stall landed and the ladder reacted to the burst
+    assert any(e[1] == "slow_consumer" for e in ex.events)
+    assert ex.ladder.transcript, "burst never moved the ladder"
+    # folds rode the same queue and were all answered — admitted ones
+    # folded, the ones hitting the saturated queue got typed rejects
+    pf = [r for r in resps if r.kind == "partial_fit"]
+    pf_ok = [r for r in pf if r.ok]
+    assert pf_ok and all(r.status in ("ok", "rejected") for r in pf)
+    assert 1 <= ex.model.batches_seen <= len(pf_ok)  # folds micro-batch too
+    # guards green after the storm: no invariant violation, no heal
+    assert not vio.any()
+    assert not any(e[1] == "heal" for e in ex.events)
+
+
+def test_chaos_replay_bit_deterministic(served):
+    """Same trace + same seeds => bit-identical responses (status, rung,
+    virtual timestamps, result arrays) and an identical degradation-rung
+    transcript."""
+    res, q = served
+    ex1, _, r1, _, _ = _chaos_run(res, q)
+    ex2, _, r2, _, _ = _chaos_run(res, q)
+    assert len(r1) == len(r2)
+    for a, b in zip(r1, r2):
+        assert (a.rid, a.status, a.rung, a.t_arrival, a.t_done,
+                a.reason) == (b.rid, b.status, b.rung, b.t_arrival,
+                              b.t_done, b.reason)
+        if a.result is None:
+            assert b.result is None
+        else:
+            assert np.array_equal(np.asarray(a.result),
+                                  np.asarray(b.result))
+    assert ex1.ladder.transcript == ex2.ladder.transcript
+    assert ex1.counter.degrades == ex2.counter.degrades
+    assert ex1.counter.sanitized_rows == ex2.counter.sanitized_rows
+    assert ex1.events == ex2.events
+
+
+def test_ladder_recovers_after_stall(served):
+    """A slow-consumer stall backs the queue up and the ladder climbs;
+    once the backlog drains the hysteresis brings it back to FULL."""
+    res, q = served
+    ex = _executor(res, queue_bound=64, deadline=1e-3)
+    rate = 0.3 * ex.sustainable_qps() / 32
+    trace = poisson_trace(6, rate=rate, horizon=400 / rate, rows=32,
+                          deadline=1e-3)
+    reqs = requests_from_trace(trace, q, default_deadline=1e-3)
+    with FaultInjector(seed=8, slow_consumer={3: 0.006}):
+        ex.run_trace(reqs)
+    ups = [(o, n) for _, o, n, _ in ex.ladder.transcript if n > o]
+    assert ups, "stall never raised the ladder"
+    assert ex.ladder.rung == FULL, "ladder never recovered"
+    assert all(r.ok for r in ex.responses.values())
+
+
+# -- generic ops + guard/heal --------------------------------------------
+
+
+def test_generic_call_retry_and_unknown_kind(served):
+    res, q = served
+    ex = _executor(res)
+    calls = []
+    ex.register("echo", lambda p: calls.append(p) or p * 2,
+                cost=lambda p: 1e-4)
+    with FaultInjector(seed=9, fail_calls={"echo": (0,)}):
+        resp = ex.call("echo", 21)
+    assert resp.ok and resp.result == 42
+    assert ex.counter.retries == 1
+    assert len(calls) == 1          # first attempt died before the op ran
+    bad = ex.call("nope", None)
+    assert bad.status == "rejected" and bad.reason == "unknown_kind"
+
+
+def test_guard_heals_poisoned_center(served):
+    import jax.numpy as jnp
+    res, q = served
+    ex = _executor(res)
+    m = ex.model
+    m.state = m.state._replace(c=m.state.c.at[0].set(jnp.nan))
+    vio = ex.guard()
+    assert vio.any()
+    assert ex.counter.repairs.get("regroup", 0) == 1
+    assert any(e[1] == "heal" for e in ex.events)
+    assert np.isfinite(np.asarray(m.state.c)).all()
+    # the healed model still serves
+    a = np.asarray(m.predict(q[:64]))
+    assert a.shape == (64,)
