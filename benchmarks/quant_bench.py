@@ -1,0 +1,174 @@
+"""Quantized scan, exact re-rank benchmark (DESIGN.md §13).
+
+The ISSUE 8 acceptance gates, all at (n=65536, k=512, kn=32):
+
+- the quantized predict scan reads <= 0.35x the bytes of the f32 bounded
+  predict at recall@1 >= 0.9976 against brute force;
+- re-ranked assignments are bit-identical to the f32 predict path (the
+  margin/unique-winner machinery makes that a theorem, this measures it);
+- the f32 re-rank touches <= 8 survivors per query (counted f32
+  distances per query on the int8 path, route ambiguity included);
+- the int8 resident arena's steady-state moved-row traffic is <= 0.5x
+  the f32 arena's, with the final fit energy within 1% of the f32
+  engine's (it is bit-identical, so the measured ratio is exactly 1).
+
+Byte accounting is the counted scan-traffic lane (OpCounter.bytes_scanned
+and the gather/scatter arena lanes) — machine-independent like the
+paper's op metric. Wall-clock rides along for reference only.
+
+    PYTHONPATH=src python -m benchmarks.quant_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _measure(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def run(fast: bool = False, out: str | None = None, *, n: int | None = None,
+        d: int | None = None, k: int | None = None, kn: int | None = None,
+        n_queries: int | None = None, batch_size: int | None = None,
+        backend: str = "xla", fit_iters: int | None = None):
+    from repro.core import OpCounter, assign_nearest, fit_k2means
+    from repro.core.distance import chunked_argmin_sqdist
+    from repro.core.model import KMeansModel
+
+    from benchmarks.common import emit
+
+    if out is None:
+        out = "BENCH_quant.fast.json" if fast else "BENCH_quant.json"
+    dn, dd, dk, dkn, dq = (8192, 16, 64, 16, 8192) if fast \
+        else (65536, 32, 512, 32, 65536)
+    n, d, k, kn = n or dn, d or dd, k or dk, kn or dkn
+    n_queries = n_queries or dq
+    batch_size = batch_size or min(8192, n_queries)
+    fit_iters = fit_iters or (8 if fast else 30)
+
+    from repro.data import gmm_blobs
+    key = jax.random.PRNGKey(0)
+    allx = gmm_blobs(key, n + n_queries, d, true_k=k)
+    x, q = allx[:n], allx[n:]
+    init = x[jax.random.choice(key, n, shape=(k,), replace=False)]
+    a0 = assign_nearest(x, init).astype(jnp.int32)
+
+    # -- resident arena: f32 engine vs the int8 arena ----------------------
+    cf = OpCounter()
+    res_f = fit_k2means(x, init, a0, kn=kn, max_iters=fit_iters,
+                        backend=backend, residency="resident", counter=cf)
+    ci = OpCounter()
+    res_i = fit_k2means(x, init, a0, kn=kn, max_iters=fit_iters,
+                        backend=backend, precision="int8", counter=ci)
+    fit_identical = bool(
+        np.array_equal(np.asarray(res_f.assignment),
+                       np.asarray(res_i.assignment))
+        and np.array_equal(np.asarray(res_f.centers),
+                           np.asarray(res_i.centers)))
+    energy_ratio = float(res_i.energy / res_f.energy)
+    # moved-row arena traffic: the lanes whose width depends on the row
+    # dtype (int8 rows carry d + 4*(state+scale) bytes vs 4*(d + state)
+    # f32); sort-key bytes are dtype-independent and reported separately
+    arena_f32 = cf.bytes_gathered + cf.bytes_scattered
+    arena_i8 = ci.bytes_gathered + ci.bytes_scattered
+    arena_ratio = float(arena_i8 / max(arena_f32, 1.0))
+    fit_scan_ratio = float(ci.bytes_scanned / max(cf.bytes_scanned, 1.0))
+
+    # -- predict: f32 bounded path vs quantized scan + exact re-rank -------
+    model = KMeansModel.from_result(res_f, kn=kn, backend=backend)
+    a_brute = np.asarray(chunked_argmin_sqdist(q, model.centers)[0])
+
+    cp_f = OpCounter()
+    a_f32, wall_f32 = _measure(
+        lambda qq: model.predict(qq, batch_size=batch_size), q)
+    model.predict(q, batch_size=batch_size, counter=cp_f)
+    cp_i = OpCounter()
+    a_int8, wall_int8 = _measure(
+        lambda qq: model.predict(qq, batch_size=batch_size,
+                                 precision="int8"), q)
+    model.predict(q, batch_size=batch_size, counter=cp_i, precision="int8")
+
+    a_f32 = np.asarray(a_f32)
+    a_int8 = np.asarray(a_int8)
+    bit_identical = bool(np.array_equal(a_int8, a_f32))
+    recall = float((a_int8 == a_brute).mean())
+    bytes_ratio = float(cp_i.bytes_scanned / max(cp_f.bytes_scanned, 1.0))
+    # every f32 distance the int8 path pays is a re-ranked survivor (or a
+    # routing ambiguity-band member) — the "survivor rate" gate
+    surv_per_query = float(cp_i.distances / n_queries)
+    int8_per_query = float(cp_i.int8_ops / n_queries)
+
+    rows = [["predict_f32", int(cp_f.bytes_scanned), int(cp_f.distances),
+             0, round(wall_f32, 3), 1.0],
+            ["predict_int8", int(cp_i.bytes_scanned), int(cp_i.distances),
+             int(cp_i.int8_ops), round(wall_int8, 3), round(recall, 4)],
+            ["fit_f32", int(arena_f32 + cf.bytes_scanned),
+             int(cf.distances), 0, 0, 1.0],
+            ["fit_int8", int(arena_i8 + ci.bytes_scanned),
+             int(ci.distances), int(ci.int8_ops), 0,
+             round(energy_ratio, 6)]]
+    emit(rows, ["path", "bytes", "f32_distances", "int8_ops", "wall_s",
+                "recall_or_energy_ratio"])
+
+    gates = {
+        "scan_bytes_le_035x": bytes_ratio <= 0.35,
+        "recall_ge_09976": recall >= 0.9976,
+        "predict_bit_identical": bit_identical,
+        "survivors_le_8_per_query": surv_per_query <= 8.0,
+        "arena_bytes_le_05x": arena_ratio <= 0.5,
+        "energy_within_1pct": abs(energy_ratio - 1.0) <= 0.01,
+    }
+    summary = {
+        "n": n, "d": d, "k": k, "kn": kn, "n_queries": n_queries,
+        "batch_size": batch_size, "backend": backend,
+        "fit_iters": res_f.iterations,
+        "scan_bytes_ratio": round(bytes_ratio, 4),
+        "scan_bytes_int8": int(cp_i.bytes_scanned),
+        "scan_bytes_f32": int(cp_f.bytes_scanned),
+        "recall_at_1": round(recall, 6),
+        "predict_bit_identical": bit_identical,
+        "survivors_per_query": round(surv_per_query, 3),
+        "int8_ops_per_query": round(int8_per_query, 1),
+        "arena_bytes_ratio": round(arena_ratio, 4),
+        "arena_bytes_int8": int(arena_i8),
+        "arena_bytes_f32": int(arena_f32),
+        "fit_scan_bytes_ratio": round(fit_scan_ratio, 4),
+        "fit_bit_identical": fit_identical,
+        "energy_ratio": round(energy_ratio, 8),
+        "energy_f32": float(res_f.energy),
+        "energy_int8": float(res_i.energy),
+        "wall_predict_f32_s": round(wall_f32, 4),
+        "wall_predict_int8_s": round(wall_int8, 4),
+        "gates": gates,
+        "meets_acceptance": bool(all(gates.values())),
+    }
+    print(f"# quant summary: int8 scan reads {bytes_ratio:.3f}x the f32 "
+          f"predict bytes at recall@1 {recall:.4f} (bit-identical="
+          f"{bit_identical}), {surv_per_query:.2f} f32 re-ranks/query; "
+          f"int8 arena moves {arena_ratio:.3f}x the f32 row bytes at "
+          f"energy ratio {energy_ratio:.6f} "
+          f"(acceptance: <=0.35x, >=0.9976, <=8, <=0.5x, within 1%)")
+    with open(out, "w") as f:
+        json.dump({"fast": fast, "runs": rows, "summary": summary}, f,
+                  indent=2)
+    print(f"# wrote {out}")
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--backend", default="xla")
+    args = ap.parse_args()
+    run(fast=args.fast, backend=args.backend)

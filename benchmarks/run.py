@@ -30,6 +30,7 @@ BENCH_SCHEMAS = {
     "BENCH_predict.json": ("fast", "runs", "summary"),
     "BENCH_ft.json": ("fast", "runs", "summary"),
     "BENCH_serve.json": ("fast", "runs", "summary"),
+    "BENCH_quant.json": ("fast", "runs", "summary"),
     "BENCH_perf.json": ("fast", "sections", "summary_ok", "total_wall_s"),
 }
 
@@ -58,8 +59,9 @@ def _sections(args, outdir=None):
     """The section list; ``outdir`` (smoke mode) redirects every artifact
     and shrinks every shape to schema-check scale."""
     from . import (assign_bench, complexity, convergence_curves, dist_bench,
-                   ft_bench, init_bench, iter_bench, predict_bench, roofline,
-                   serve_bench, table4_init, table5_speedup)
+                   ft_bench, init_bench, iter_bench, predict_bench,
+                   quant_bench, roofline, serve_bench, table4_init,
+                   table5_speedup)
 
     if outdir is not None:
         out = lambda name: os.path.join(outdir, name)      # noqa: E731
@@ -113,6 +115,12 @@ def _sections(args, outdir=None):
                                      horizon=0.01, rows_per_request=32,
                                      ladder=(32, 64, 128),
                                      fracs=(0.25, 2.0), pf_every=10)),
+            ("quant",
+             "Quantized scan (smoke) -> BENCH_quant.json",
+             lambda: quant_bench.run(fast=True,
+                                     out=out("BENCH_quant.json"),
+                                     n=2048, d=16, k=32, kn=8,
+                                     n_queries=512, fit_iters=4)),
             ("fig23_convergence",
              "Fig 2/3 (smoke)",
              lambda: convergence_curves.run(k=8, max_iters=3)),
@@ -162,6 +170,10 @@ def _sections(args, outdir=None):
          "Serving plane: latency/recall vs offered QPS under overload "
          "(-> BENCH_serve.json)",
          lambda: serve_bench.run(fast=args.fast)),
+        ("quant",
+         "Quantized scan, exact re-rank: int8 vs f32 scan traffic "
+         "(-> BENCH_quant.json)",
+         lambda: quant_bench.run(fast=args.fast)),
         ("fig23_convergence",
          "Fig 2/3: convergence curves (energy vs counted ops)",
          lambda: convergence_curves.run(max_iters=15 if args.fast else 30)),

@@ -104,6 +104,11 @@ class ResidentState(typing.NamedTuple):
     b2c: jax.Array      # (nb_total,) block -> cluster, -1 = free block
     fill: jax.Array     # (k,) open-block append watermark, in [0, bn]
     openb: jax.Array    # (k,) open (append) block per cluster, -1 = none
+    # quantized arena (DESIGN.md §13, precision="int8"): ``xg`` holds int8
+    # rows and ``xsc`` their per-slot scales; None on the f32 arena (an
+    # empty pytree node, so f32 states keep their leaf count and existing
+    # checkpoints/specs are untouched)
+    xsc: typing.Any = None   # (S,) f32 per-slot scales | None (f32 arena)
 
 
 class StepStats(typing.NamedTuple):
@@ -120,6 +125,10 @@ class StepStats(typing.NamedTuple):
     energy: jax.Array   # () clustering energy after the update step
     moved: jax.Array    # () rows moved through the layout this iteration
     resorted: jax.Array  # () shards that fully re-sorted this iteration
+    # int8 engine only: f32 distances actually computed by the exact
+    # re-rank (survivors + full-list fallbacks); 0 on the f32 paths —
+    # opcount.charge_iteration reads it for the dtype-aware distance lane
+    reranked: typing.Any = 0  # () re-ranked exact f32 distances
 
 
 def init_state(centers: jax.Array, assignment: jax.Array,
@@ -223,7 +232,8 @@ def k2_iteration(x: jax.Array, w: jax.Array, state: K2State, *, kn: int,
 
     next_state = K2State(c_next, a_new, u_adj, lo_adj, neighbors,
                          jnp.zeros((), bool))
-    return next_state, StepStats(n_need, changed, energy, moved, resorted)
+    return next_state, StepStats(n_need, changed, energy, moved, resorted,
+                                 jnp.zeros((), jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -233,12 +243,15 @@ def k2_iteration(x: jax.Array, w: jax.Array, state: K2State, *, kn: int,
 
 def init_resident_state(x: jax.Array, w: jax.Array, centers: jax.Array,
                         assignment: jax.Array, *, kn: int, bn: int,
-                        nb_total: int,
+                        nb_total: int, precision: str = "f32",
                         psum_axes: tuple = ()) -> ResidentState:
     """Build the resident layout once from an initial assignment: one full
     grouping pass + one full segment-sum (both paid per *init*, not per
     iteration). Stale-zero bounds with ``first`` forcing a full recompute
-    on iteration 1, exactly like :func:`init_state`."""
+    on iteration 1, exactly like :func:`init_state`. Under
+    ``precision="int8"`` the arena rows are symmetrically quantized
+    (DESIGN.md §13) and carry per-slot scales in ``xsc``; ``x`` stays the
+    f32 master copy the update/delta path reads."""
     k = centers.shape[0]
     a = assignment.astype(jnp.int32)
     from ..kernels.ops import resident_regroup
@@ -253,9 +266,14 @@ def init_resident_state(x: jax.Array, w: jax.Array, centers: jax.Array,
     for ax in reversed(psum_axes):
         sums = jax.lax.psum(sums, ax)
         counts = jax.lax.psum(counts, ax)
+    xsc = None
+    if precision == "int8":
+        from ..kernels import quant
+        xg, xsc = quant.quantize_rows(xg)
     return ResidentState(centers, jnp.full((k, kn), -1, jnp.int32), sums,
                          counts, jnp.zeros((), jnp.int32), jnp.array(True),
-                         xg, perm, zeros, zeros, wg, b2c, fill, openb)
+                         xg, perm, zeros, zeros, wg, b2c, fill, openb,
+                         xsc=xsc)
 
 
 def resident_assignment(state: ResidentState, n: int) -> jax.Array:
@@ -272,7 +290,8 @@ def k2_resident_iteration(x: jax.Array, w: jax.Array, state: ResidentState,
                           *, kn: int, backend: str = "pallas",
                           chunk: int = 2048, bn: int = 128, bkn: int = 8,
                           interpret: bool = False, regroup_every: int = 16,
-                          move_cap: int = 1024,
+                          move_cap: int = 1024, precision: str = "f32",
+                          rerank_r: int = 8,
                           psum_axes: tuple = ()
                           ) -> tuple[ResidentState, StepStats]:
     """One iteration over the resident grouped layout (DESIGN.md §9).
@@ -296,6 +315,16 @@ def k2_resident_iteration(x: jax.Array, w: jax.Array, state: ResidentState,
     is re-derived from the state's shapes — a caller-passed ``bn`` that
     disagrees with the arena (e.g. a step built without ``d``) cannot
     corrupt the iteration.
+
+    ``precision="int8"`` (DESIGN.md §13) scans a quantized arena: ``xg``
+    holds int8 rows with per-slot scales in ``xsc``; the bounded
+    assignment runs the int8 survivor scan + exact f32 re-rank against
+    the master rows (``x`` gathered by ``pid``), the delta/full center
+    updates and the energy statistic read the f32 masters, and re-sorts
+    re-quantize the regrouped rows — so bounds stay exact-or-conservative
+    and assignments match the f32 engine. ``rerank_r`` is the static
+    survivor width of the re-rank (overflowing rows fall back to an
+    exact full-candidate pass).
     """
     k = state.c.shape[0]
     n = x.shape[0]
@@ -304,6 +333,7 @@ def k2_resident_iteration(x: jax.Array, w: jax.Array, state: ResidentState,
     bn = s_total // nbt
     c = state.c
     wpos = state.wg > 0
+    int8 = precision == "int8"
 
     # --- 1. k_n-NN graph over centers; replicated on every shard --------
     neighbors = _center_knn(c, kn, backend, interpret)
@@ -313,7 +343,32 @@ def k2_resident_iteration(x: jax.Array, w: jax.Array, state: ResidentState,
     a_slot = jnp.repeat(jnp.maximum(state.b2c, 0), bn).astype(jnp.int32)
     need = ((state.ug >= state.lo_g) | list_changed[a_slot]
             | state.first) & wpos
-    if backend == "pallas":
+    reranked = jnp.zeros((), jnp.int32)
+    if int8:
+        from ..kernels import quant
+        from ..kernels.candidate_assign import pad_candidates
+        from ..kernels.ops import quantized_scan_rerank
+        sp1 = jnp.maximum(state.pid, 0)
+        xf = jnp.where((state.pid >= 0)[:, None], x[sp1], 0.0)
+        cq = quant.center_quant(c)
+        cidx = pad_candidates(neighbors, bkn)
+        skip = (~jnp.any(need.reshape(nbt, bn), axis=1)).astype(jnp.int32)
+        rowsel = jnp.maximum(state.b2c, 0)
+        a_g, d1_sq, d2_sq, nsv, fb = quantized_scan_rerank(
+            xf, state.xg, state.xsc, c, cq, cidx, rowsel, skip, a_slot,
+            state.ug * state.ug, state.lo_g * state.lo_g,
+            bn=bn, bkn=bkn, r=rerank_r, backend=backend,
+            interpret=interpret)
+        fresh = jnp.repeat(skip == 0, bn)
+        u_new = jnp.where(fresh, jnp.sqrt(d1_sq), state.ug)
+        lo_new = jnp.where(fresh, jnp.sqrt(d2_sq), state.lo_g)
+        a_new = jnp.where(wpos, a_g, a_slot)
+        # counted f32 distances of the exact stage: min(n_surv, r) per
+        # re-ranked row, the full candidate list on fallback rows
+        reranked = jnp.sum(jnp.where(
+            fb, cidx.shape[1],
+            jnp.minimum(nsv, rerank_r))).astype(jnp.int32)
+    elif backend == "pallas":
         from ..kernels.candidate_assign import (candidate_assign_tiled,
                                                 candidate_tables,
                                                 pad_candidates)
@@ -358,7 +413,9 @@ def k2_resident_iteration(x: jax.Array, w: jax.Array, state: ResidentState,
     seg_dst = jnp.where(active, dst_c, k)
     seg_src = jnp.where(active, src_c, k)
     w_mv = jnp.where(active, state.wg[mvs], 0.0)
-    rows = state.xg[mvs] * w_mv[:, None]
+    # int8 arena: deltas read the f32 masters, never dequantized rows —
+    # centers carry no quantization error
+    rows = (xf[mvs] if int8 else state.xg[mvs]) * w_mv[:, None]
     delta_sums = (jax.ops.segment_sum(rows, seg_dst, num_segments=k + 1)
                   - jax.ops.segment_sum(rows, seg_src,
                                         num_segments=k + 1))[:k]
@@ -392,11 +449,15 @@ def k2_resident_iteration(x: jax.Array, w: jax.Array, state: ResidentState,
             .at[dst_slot].set(state.wg[mvs], mode="drop")
         ug2 = u_new.at[dst_slot].set(u_new[mvs], mode="drop")
         lo2 = lo_new.at[dst_slot].set(lo_new[mvs], mode="drop")
-        return xg2, pid2, ug2, lo2, wg2, b2c_rep, fill_rep, openb_rep
+        out = (xg2, pid2, ug2, lo2, wg2, b2c_rep, fill_rep, openb_rep)
+        if int8:     # the moved rows' scales travel with them
+            out += (state.xsc.at[dst_slot].set(state.xsc[mvs],
+                                               mode="drop"),)
+        return out
 
     def _resort():
         from ..kernels.ops import scatter_from_grouped
-        zero = jnp.zeros((n,), x.dtype)
+        zero = jnp.zeros((n,), jnp.float32)
         a_pt = scatter_from_grouped(state.pid, a_new,
                                     jnp.zeros((n,), jnp.int32))
         u_pt = scatter_from_grouped(state.pid, u_new, zero)
@@ -408,17 +469,29 @@ def k2_resident_iteration(x: jax.Array, w: jax.Array, state: ResidentState,
         wg2 = jnp.where(valid2, w[sp], 0.0).astype(x.dtype)
         ug2 = jnp.where(valid2, u_pt[sp], 0.0)
         lo2 = jnp.where(valid2, lo_pt[sp], 0.0)
-        return xg2, perm2, ug2, lo2, wg2, b2c2, fill2, openb2
+        out = (xg2, perm2, ug2, lo2, wg2, b2c2, fill2, openb2)
+        if int8:     # re-quantize from the f32 masters at the re-sort
+            from ..kernels import quant
+            xq2, xsc2 = quant.quantize_rows(xg2)
+            out = (xq2,) + out[1:] + (xsc2,)
+        return out
 
-    xg2, pid2, ug2, lo2, wg2, b2c2, fill2, openb2 = jax.lax.cond(
-        resort_local, _resort, _repair)
+    packed = jax.lax.cond(resort_local, _resort, _repair)
+    xg2, pid2, ug2, lo2, wg2, b2c2, fill2, openb2 = packed[:8]
+    xsc2 = packed[8] if int8 else None
     a_slot2 = jnp.repeat(jnp.maximum(b2c2, 0), bn).astype(jnp.int32)
+    if int8:
+        # masters in post-repair slot order: the exact rows behind both
+        # the full center recompute and the energy statistic
+        sp2 = jnp.maximum(pid2, 0)
+        xf2 = jnp.where((pid2 >= 0)[:, None], x[sp2], 0.0)
 
     # --- 7. center update: incremental delta, or exact recompute at
     # re-sort points (bounds the f32 drift of the running sums) -----------
     def _full_local():
+        xrows = xf2 if int8 else xg2
         seg = jnp.where(wg2 > 0, a_slot2, k)
-        return (jax.ops.segment_sum(xg2 * wg2[:, None], seg,
+        return (jax.ops.segment_sum(xrows * wg2[:, None], seg,
                                     num_segments=k + 1)[:k],
                 jax.ops.segment_sum(wg2, seg, num_segments=k + 1)[:k])
 
@@ -441,7 +514,8 @@ def k2_resident_iteration(x: jax.Array, w: jax.Array, state: ResidentState,
 
     # --- 9. device-resident step statistics ------------------------------
     n_need = jnp.sum(need)
-    energy = jnp.sum(wg2 * sqnorm(xg2 - c_next[a_slot2]))
+    energy = jnp.sum(wg2 * sqnorm((xf2 if int8 else xg2)
+                                  - c_next[a_slot2]))
     n_rows = jnp.sum(state.pid >= 0)
     moved = jnp.where(resort_local, n_rows, n_changed).astype(jnp.int32)
     resorted = resort_local.astype(jnp.int32)
@@ -452,12 +526,14 @@ def k2_resident_iteration(x: jax.Array, w: jax.Array, state: ResidentState,
         energy = jax.lax.psum(energy, ax)
         moved = jax.lax.psum(moved, ax)
         resorted = jax.lax.psum(resorted, ax)
+        reranked = jax.lax.psum(reranked, ax)
 
     next_state = ResidentState(c_next, neighbors, sums2, counts2,
                                state.it + 1, jnp.zeros((), bool),
                                xg2, pid2, u_adj, lo_adj, wg2, b2c2,
-                               fill2, openb2)
-    return next_state, StepStats(n_need, changed, energy, moved, resorted)
+                               fill2, openb2, xsc=xsc2)
+    return next_state, StepStats(n_need, changed, energy, moved, resorted,
+                                 reranked)
 
 
 @functools.partial(jax.jit, static_argnames=("kn", "backend", "chunk",
@@ -469,14 +545,16 @@ def _single_step(x, w, state, kn, backend, chunk, bn, bkn, interpret):
 
 @functools.partial(jax.jit, static_argnames=("kn", "backend", "chunk", "bn",
                                              "bkn", "interpret",
-                                             "regroup_every", "move_cap"))
+                                             "regroup_every", "move_cap",
+                                             "precision"))
 def _resident_single_step(x, w, state, kn, backend, chunk, bn, bkn,
-                          interpret, regroup_every, move_cap):
+                          interpret, regroup_every, move_cap,
+                          precision="f32"):
     return k2_resident_iteration(x, w, state, kn=kn, backend=backend,
                                  chunk=chunk, bn=bn, bkn=bkn,
                                  interpret=interpret,
                                  regroup_every=regroup_every,
-                                 move_cap=move_cap)
+                                 move_cap=move_cap, precision=precision)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -513,6 +591,7 @@ class K2Step:
     regroup_every: int = 16       # resident: full re-sort period
     move_cap: int | None = None   # resident: move-buffer rows (None: auto)
     spare_blocks: int = 0         # resident: extra free blocks in the arena
+    precision: str = "f32"        # "f32" | "int8" quantized arena (§13)
 
     def axes(self) -> tuple:
         if self.mesh is None:
@@ -534,6 +613,14 @@ class K2Step:
         if self.residency == "resident" and self.regroup_every < 1:
             raise ValueError("regroup_every must be >= 1, got "
                              f"{self.regroup_every}")
+        if self.precision not in ("f32", "int8"):
+            raise ValueError(f"unknown precision {self.precision!r}; "
+                             "expected 'f32' or 'int8'")
+        if self.precision == "int8" and self.residency != "resident":
+            raise ValueError("precision='int8' requires the resident "
+                             "arena (residency='resident'): the rebuild "
+                             "engines would re-quantize the whole layout "
+                             "every iteration")
 
     def _interpret(self) -> bool:
         if self.interpret is not None:
@@ -567,7 +654,8 @@ class K2Step:
         return ResidentState(
             c=rep, prev_nb=rep, sums=rep, counts=rep, it=rep, first=rep,
             xg=xspec, pid=rowspec, ug=rowspec, lo_g=rowspec, wg=rowspec,
-            b2c=rowspec, fill=rowspec, openb=rowspec)
+            b2c=rowspec, fill=rowspec, openb=rowspec,
+            xsc=rowspec if self.precision == "int8" else None)
 
     def build(self, n: int, d: int | None = None):
         self._validate()
@@ -581,19 +669,20 @@ class K2Step:
                     _resident_single_step, kn=kn, backend=self.backend,
                     chunk=self.chunk, bn=bn, bkn=self.bkn,
                     interpret=interpret, regroup_every=self.regroup_every,
-                    move_cap=self._move_cap(n))
+                    move_cap=self._move_cap(n), precision=self.precision)
             body = functools.partial(
                 k2_resident_iteration, kn=kn, backend=self.backend,
                 chunk=self.chunk, bn=bn, bkn=self.bkn, interpret=interpret,
                 regroup_every=self.regroup_every,
-                move_cap=self._move_cap(n), psum_axes=self.axes())
+                move_cap=self._move_cap(n), precision=self.precision,
+                psum_axes=self.axes())
             xspec, rowspec, rep = clustering_specs(self.mesh, self.axes())
             state_specs = self._resident_specs()
             sharded = shard_map(
                 body, mesh=self.mesh,
                 in_specs=(xspec, rowspec, state_specs),
                 out_specs=(state_specs,
-                           StepStats(rep, rep, rep, rep, rep)),
+                           StepStats(rep, rep, rep, rep, rep, rep)),
                 check_rep=False)
             return jax.jit(sharded)
 
@@ -615,7 +704,8 @@ class K2Step:
         sharded = shard_map(body, mesh=self.mesh,
                             in_specs=(xspec, rowspec, state_specs),
                             out_specs=(state_specs,
-                                       StepStats(rep, rep, rep, rep, rep)),
+                                       StepStats(rep, rep, rep, rep, rep,
+                                                 rep)),
                             check_rep=False)
         return jax.jit(sharded)
 
@@ -627,7 +717,9 @@ class K2Step:
         kn = min(self.kn, self.k)
         bn, nb_total = self._layout_shape(n, x.shape[1])
         body = functools.partial(init_resident_state, kn=kn, bn=bn,
-                                 nb_total=nb_total, psum_axes=self.axes())
+                                 nb_total=nb_total,
+                                 precision=self.precision,
+                                 psum_axes=self.axes())
         if self.mesh is None:
             return jax.jit(body)(x, w, centers,
                                  assignment.astype(jnp.int32))

@@ -113,9 +113,10 @@ class _MonitorLoop:
     stats stay on device and are flushed (op/byte charged + convergence
     checked) every ``monitor_every`` iterations (DESIGN.md §4.3)."""
 
-    def __init__(self, counter, *, n, d, k, kn, resident):
+    def __init__(self, counter, *, n, d, k, kn, resident, precision="f32"):
         self.counter = counter
-        self.args = dict(n=n, d=d, k=k, kn=kn, resident=resident)
+        self.args = dict(n=n, d=d, k=k, kn=kn, resident=resident,
+                         precision=precision)
         self.pending = []
         self.history = []
         self.it_done = 0
@@ -137,7 +138,7 @@ def _fit_k2means_engine(x, centers, assignment, *, kn, max_iters, counter,
                         monitor_every, backend, residency, chunk, bn, bkn,
                         interpret, regroup_every, move_cap, guards=None,
                         ckpt_dir=None, ckpt_every=0, resume=False,
-                        key=None):
+                        key=None, precision="f32"):
     """The one engine-layer fit loop behind every (backend, residency)
     combination, with the self-healing hooks of DESIGN.md §11: an active
     ``ft.chaos.FaultInjector`` corrupts inputs/state at iteration
@@ -156,12 +157,19 @@ def _fit_k2means_engine(x, centers, assignment, *, kn, max_iters, counter,
     resident = residency == "resident"
     sb = K2Step(k=k, kn=kn, backend=backend, chunk=chunk, bn=bn, bkn=bkn,
                 interpret=interpret, residency=residency,
-                regroup_every=regroup_every, move_cap=move_cap)
+                regroup_every=regroup_every, move_cap=move_cap,
+                precision=precision)
     step = sb.build(n, d)
     w = jnp.ones((n,), x.dtype)
     inj = chaos_mod.active()
     if guards is None:
         guards = inj is not None
+    if guards and precision == "int8":
+        # the invariant guards / repair lattice read f32 arena rows; the
+        # quantized arena is a scan-path optimisation, not a fault domain
+        raise ValueError("precision='int8' does not support invariant "
+                         "guards or fault injection; fit with the f32 "
+                         "arena when guards/chaos are active")
     key = key if key is not None else jax.random.PRNGKey(0)
     ckpt = ft.FitCheckpointer(ckpt_dir, every=ckpt_every) \
         if ckpt_dir else None
@@ -186,7 +194,8 @@ def _fit_k2means_engine(x, centers, assignment, *, kn, max_iters, counter,
                             jnp.asarray(bnds["lo"]),
                             jnp.asarray(bnds["nb"]), jnp.array(False))
     guard = make_guard(sb, n) if guards else None
-    mon = _MonitorLoop(counter, n=n, d=d, k=k, kn=kn, resident=resident)
+    mon = _MonitorLoop(counter, n=n, d=d, k=k, kn=kn, resident=resident,
+                       precision=precision)
 
     for it in range(it0 + 1, max_iters + 1):
         if inj is not None:
@@ -236,8 +245,8 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
                 residency: str | None = None, regroup_every: int = 16,
                 move_cap: int | None = None, guards: bool | None = None,
                 ckpt_dir: str | None = None, ckpt_every: int = 0,
-                resume: bool = False,
-                key: jax.Array | None = None) -> KMeansResult:
+                resume: bool = False, key: jax.Array | None = None,
+                precision: str = "f32") -> KMeansResult:
     """Run k²-means from an initialisation (centers + assignments).
 
     GDI provides assignments for free (device-resident ones stay on
@@ -268,6 +277,14 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
     rebuilt loose, so the resumed trajectory's final assignment is
     bit-identical to the uninterrupted run's on the rebuild engines;
     ``key`` seeds the split-repair rung.
+
+    precision: "f32" (default) or "int8" — the quantized resident arena
+    of DESIGN.md §13: the candidate scan reads int8 point rows and
+    candidate slabs and exactly re-ranks the margin-surviving candidates
+    in f32, so assignments match the f32 engine's bit-for-bit while scan
+    traffic drops ~4x. Requires the resident residency (``residency=None``
+    resolves to "resident" under int8) and is incompatible with
+    ``guards``/fault injection.
     """
     counter = counter or OpCounter()
     n, d = x.shape
@@ -278,8 +295,12 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
     if backend not in ("xla", "pallas"):
         raise ValueError(f"unknown backend {backend!r}; "
                          "expected 'xla' or 'pallas'")
+    if precision not in ("f32", "int8"):
+        raise ValueError(f"unknown precision {precision!r}; "
+                         "expected 'f32' or 'int8'")
     if residency is None:
-        residency = "resident" if backend == "pallas" else "rebuild"
+        residency = "resident" if (backend == "pallas"
+                                   or precision == "int8") else "rebuild"
     if residency not in ("rebuild", "resident"):
         raise ValueError(f"unknown residency {residency!r}; "
                          "expected 'rebuild' or 'resident'")
@@ -289,4 +310,5 @@ def fit_k2means(x: jax.Array, centers: jax.Array, assignment: jax.Array, *,
         residency=residency, chunk=chunk, bn=bn, bkn=bkn,
         interpret=interpret, regroup_every=regroup_every,
         move_cap=move_cap, guards=guards, ckpt_dir=ckpt_dir,
-        ckpt_every=ckpt_every, resume=resume, key=key)
+        ckpt_every=ckpt_every, resume=resume, key=key,
+        precision=precision)

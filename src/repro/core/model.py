@@ -75,9 +75,15 @@ from .distance import chunked_candidate_argmin, pairwise_sqdist, sqnorm
 from .engine import ResidentState
 from .lloyd import KMeansResult
 from .opcount import LAYOUT_STATE_LANES, OpCounter
+from ..kernels import quant as _quant
 
 
 _VALIDATE_MODES = ("raise", "sanitize", "none")
+_PRECISIONS = ("f32", "int8")
+# static f32 re-rank width of the quantized resolution scan (DESIGN.md
+# §13): survivor sets beyond this width fall back to a full-kn exact
+# re-rank for that row (the member-scan stage has no width cap)
+_RESOLVE_RERANK = 16
 
 
 def _validate_rows(x, mode: str, *, what: str):
@@ -202,6 +208,94 @@ def _route(q, c, router: Router, probes: int):
     u_routed = jnp.sqrt(jnp.take_along_axis(sq_m, j[:, None], axis=1)[:, 0])
     n_scanned = router.gc.shape[0] + jnp.sum(passing, axis=1)
     return routed, u_routed, n_scanned
+
+
+@functools.partial(jax.jit, static_argnames=("probes",))
+def _route_groups_int8(q, xq, xsc, gc, gq, probes: int):
+    """Quantized group-centroid scan (DESIGN.md §13), always returning
+    the *exact* f32 top-``probes`` group set.
+
+    Approximate true distances ŝ between the int8 queries and the int8
+    group-centroid table give a provisional top-``probes`` selection.
+    Per-row margins use the tables' exact residual norms (``err``, much
+    tighter than the worst-case radius): with ``ub = ŝ + rad`` and
+    ``lb = ŝ - rad`` bracketing every true distance, the exact top-probes
+    set is provably contained in the *ambiguity band*
+    ``{j : lb_j <= max over selected of ub}`` (the probes-th smallest
+    true distance never exceeds that bound). When the band holds exactly
+    ``probes`` groups the selection is proven; otherwise the band members
+    are re-ranked with their exact f32 distances — the executed scan is
+    dense, but the serial bounded algorithm computes only the band, so
+    that is the f32 charge (§2 methodology). Returns
+    (gi (m, probes) int32, n_exact (m,) per-row f32 distance charge)."""
+    m, d = xq.shape
+    xi = xq.astype(jnp.int32)
+    cross = xi @ gq.q.astype(jnp.int32).T                    # (m, g)
+    xhsq = (xsc * xsc) * jnp.sum(xi * xi, axis=1).astype(jnp.float32)
+    dist = jnp.maximum(
+        xhsq[:, None]
+        - 2.0 * (xsc[:, None] * gq.scale[None, :]) * cross.astype(
+            jnp.float32)
+        + gq.sq[None, :], 0.0)
+    shat = jnp.sqrt(dist)
+    xerr = jnp.linalg.norm(q - xq.astype(jnp.float32) * xsc[:, None],
+                           axis=1)
+    rad = gq.err[None, :] + xerr[:, None]
+    _, gi = jax.lax.top_k(-shat, probes)
+    sel = jnp.zeros(shat.shape, bool).at[
+        jnp.arange(m)[:, None], gi].set(True)
+    ub_sel = jnp.max(jnp.where(sel, shat + rad, -jnp.inf), axis=1)
+    band = (shat - rad) <= ub_sel[:, None]                   # ⊇ sel
+    nband = jnp.sum(band.astype(jnp.int32), axis=1)
+    ambiguous = nband > probes
+    dg = jnp.sqrt(pairwise_sqdist(q, gc))
+    _, gi_exact = jax.lax.top_k(-jnp.where(band, dg, jnp.inf), probes)
+    gi = jnp.where(ambiguous[:, None], gi_exact, gi)
+    return gi.astype(jnp.int32), jnp.where(ambiguous, nband, 0)
+
+
+@jax.jit
+def _route_members_int8(qb, xq, xsc, c, cq, cand):
+    """Quantized member scan + exact f32 re-rank of ALL margin survivors.
+
+    The int8 scan over the probed closure lists brackets every true
+    distance with the exact residual radii (DESIGN.md §13); the margin
+    cut keeps every candidate that could be the true minimum, and those
+    survivors are re-ranked with exact f32 distances — no re-rank width
+    cap, so the survivor set never overflows. The executed scan is dense
+    either way; the serial charge is the number of *unique* surviving
+    ids (the probed closure lists overlap, and a serial re-rank would
+    dedup before computing distances). The row is accepted (``ok``)
+    unless two *distinct* surviving ids tie exactly at the minimum —
+    only then does the routed id depend on tie-break order and the
+    caller re-routes through the f32 scan. Returns
+    (routed, u_routed, ok, n_rerank)."""
+    xi = xq.astype(jnp.int32)
+    tab = cq.q[cand].astype(jnp.int32)                  # (m, P, d)
+    cross = jnp.einsum("md,mpd->mp", xi, tab)
+    xhsq = (xsc * xsc) * jnp.sum(xi * xi, axis=1).astype(jnp.float32)
+    dist = jnp.maximum(
+        xhsq[:, None]
+        - 2.0 * (xsc[:, None] * cq.scale[cand]) * cross.astype(jnp.float32)
+        + cq.sq[cand], 0.0)
+    shat = jnp.sqrt(dist)
+    xerr = jnp.linalg.norm(qb - xq.astype(jnp.float32) * xsc[:, None],
+                           axis=1)
+    rc = cq.err[cand]
+    cut = jnp.min(shat + rc, axis=1) + 2.0 * xerr
+    mask = (shat - rc) <= cut[:, None]
+    ids = jnp.where(mask, cand, -1)
+    sq = _quant.rerank_exact(qb, c, ids)
+    routed, d1, _ = _quant.first_min_top2(sq, ids)
+    tie_other = jnp.any((sq == d1[:, None]) & (ids >= 0)
+                        & (ids != routed[:, None]), axis=1)
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    srt = jnp.sort(jnp.where(mask, cand, big), axis=1)
+    uniq = jnp.concatenate(
+        [srt[:, :1] != big,
+         (srt[:, 1:] != srt[:, :-1]) & (srt[:, 1:] != big)], axis=1)
+    nsv = jnp.sum(uniq.astype(jnp.int32), axis=1)
+    return routed, jnp.sqrt(d1), ~tie_other, nsv
 
 
 @functools.partial(jax.jit, static_argnames=("kn",))
@@ -331,9 +425,14 @@ class KMeansModel:
     router_iters: int = 8       # tiny-k-means iterations per router build
     refresh_every: int = 8      # partial_fit batches between graph builds
     decay: float = 1.0          # exponential forgetting of sums/counts
+    precision: str = "f32"      # default predict scan precision (§13)
     n_rows: int = 0             # streamed rows (arena + mirrors prefix)
     batches_seen: int = 0
     degraded_folds: int = 0     # arena-full batches folded stats-only
+    # lazily built quantized scan tables (centers + group centroids),
+    # dropped whenever the centers/router drift — see _quant_tables
+    _qt: typing.Any = dataclasses.field(default=None, repr=False,
+                                        compare=False)
 
     # -- construction ------------------------------------------------------
 
@@ -346,7 +445,8 @@ class KMeansModel:
                     route_cap: int | None = None, route_probes: int = 2,
                     router_iters: int = 8,
                     refresh_every: int = 8, decay: float = 1.0,
-                    bn: int | None = None) -> "KMeansModel":
+                    bn: int | None = None,
+                    precision: str = "f32") -> "KMeansModel":
         """Build a model from any :class:`KMeansResult`.
 
         Without ``x`` the model is predict-only plus stats-only
@@ -357,6 +457,9 @@ class KMeansModel:
         ``capacity - len(x)`` streamed rows (default capacity: 2n).
         """
         from ..kernels.ops import choose_group_bn, resident_capacity
+        if precision not in _PRECISIONS:
+            raise ValueError(f"unknown precision {precision!r}; "
+                             f"expected one of {_PRECISIONS}")
         c = jnp.asarray(result.centers, jnp.float32)
         k, d = c.shape
         kn = min(kn, k)
@@ -371,7 +474,7 @@ class KMeansModel:
                       backend=backend, bkn=bkn, interpret=interpret,
                       route_probes=route_probes, router_iters=router_iters,
                       refresh_every=refresh_every, decay=decay,
-                      batches_seen=0)
+                      precision=precision, batches_seen=0)
         if x is None:
             zerod = jnp.zeros((0, d), jnp.float32)
             zero1 = jnp.zeros((0,), jnp.float32)
@@ -462,6 +565,42 @@ class KMeansModel:
 
     # -- predict -----------------------------------------------------------
 
+    def _quant_tables(self):
+        """The int8 scan tables (DESIGN.md §13): a
+        :class:`kernels.quant.CenterQuant` over the centers (member scan
+        + resolution slabs) and one over the group centroids (routing).
+        Built lazily on the first quantized scan and invalidated by
+        ``partial_fit`` (the centers drift every batch)."""
+        if self._qt is None:
+            self._qt = (_quant.center_quant(self.state.c),
+                        _quant.center_quant(self.router.gc))
+        return self._qt
+
+    def _route_int8(self, qb: jax.Array, probes: int):
+        """Quantized routing with exact fallback: the int8 group scan
+        resolves the exact f32 top-probes group set (band re-rank inside
+        :func:`_route_groups_int8`), the int8 member scan re-ranks its
+        margin survivors exactly (unique-winner test); the rare rows the
+        member margin cannot prove are re-routed by the exact f32
+        :func:`_route`, so the returned ``routed`` ids always match the
+        f32 route's. Returns (routed, u_routed, n_f32) with ``n_f32``
+        the per-row f32 distance charge (group band + re-ranked
+        survivors, or the full bounded route charge on fallback rows)."""
+        cq, gq = self._quant_tables()
+        xq, xsc = _quant.quantize_rows(qb)
+        gi, n_grp = _route_groups_int8(qb, xq, xsc, self.router.gc, gq,
+                                       probes)
+        cand = self.router.members[gi].reshape(qb.shape[0], -1)
+        routed, u_routed, ok, n_rr = _route_members_int8(
+            qb, xq, xsc, self.state.c, cq, cand)
+        n_rr = n_rr + n_grp
+        if not bool(jnp.all(ok)):
+            rf, uf, nf = _route(qb, self.state.c, self.router, probes)
+            routed = jnp.where(ok, routed, rf)
+            u_routed = jnp.where(ok, u_routed, uf)
+            n_rr = jnp.where(ok, n_rr, nf)
+        return routed, u_routed, n_rr
+
     def route(self, q: jax.Array) -> jax.Array:
         """Route queries through the closure router ((m,) int32): the
         best center found among the ``route_probes`` nearest groups'
@@ -473,16 +612,25 @@ class KMeansModel:
                               self.route_probes)
         return routed
 
-    def route_batch(self, qb: jax.Array, probes: int | None = None):
+    def route_batch(self, qb: jax.Array, probes: int | None = None,
+                    precision: str | None = None):
         """The routing stage alone: ``(routed, u_routed, n_scanned)`` for
         one batch, with an optional ``probes`` override (the serving
         executor's degraded rungs shrink the closure probes and, at the
         route-only rung, take ``routed`` as the assignment outright —
-        DESIGN.md §12)."""
+        DESIGN.md §12) and an optional ``precision`` override
+        ("int8": the quantized route of :meth:`_route_int8`, identical
+        routed ids at a ~4x smaller scan)."""
         p = self.route_probes if probes is None else min(
             probes, self.route_groups)
-        return _route(jnp.asarray(qb, jnp.float32), self.state.c,
-                      self.router, p)
+        prec = precision or self.precision
+        if prec not in _PRECISIONS:
+            raise ValueError(f"unknown precision {prec!r}; "
+                             f"expected one of {_PRECISIONS}")
+        qb = jnp.asarray(qb, jnp.float32)
+        if prec == "int8":
+            return self._route_int8(qb, p)
+        return _route(qb, self.state.c, self.router, p)
 
     def _resolve(self, qb: jax.Array, routed: jax.Array):
         if self.backend == "pallas":
@@ -493,15 +641,41 @@ class KMeansModel:
                 bkn=self.bkn, interpret=self.interpret)
         return _resolve_xla(qb, self.state.c, self.state.prev_nb, routed)
 
-    def _predict_batch(self, qb: jax.Array, probes: int | None = None):
+    def _predict_batch(self, qb: jax.Array, probes: int | None = None,
+                       precision: str | None = None):
         """Route + resolve one batch. Returns (a, sqdist, routed,
-        n_counted (m,)) with n_counted the per-query distance charge of
-        the serial bounded algorithm: group scan + surviving members
-        (from :func:`_route`) + resolution neighbors passing Elkan's
-        ``d(nb, routed) < 2 d(q, routed)`` condition. ``probes``
-        overrides ``route_probes`` (the executor's probe-shrink rung)."""
+        n_counted (m,)) with n_counted the per-query *f32* distance
+        charge of the serial bounded algorithm: group scan + surviving
+        members (from :func:`_route`) + resolution neighbors passing
+        Elkan's ``d(nb, routed) < 2 d(q, routed)`` condition. ``probes``
+        overrides ``route_probes`` (the executor's probe-shrink rung).
+
+        ``precision="int8"`` (DESIGN.md §13) swaps both stages for the
+        quantized scan + exact re-rank: assignments are identical (the
+        margin machinery falls back to f32 whenever it cannot prove the
+        row), n_counted shrinks to the re-ranked survivors (plus full
+        fallback charges), and the int8 scan traffic is charged by
+        :meth:`predict` on the separate int8/bytes lanes."""
         p = self.route_probes if probes is None else min(
             probes, self.route_groups)
+        prec = precision or self.precision
+        if prec not in _PRECISIONS:
+            raise ValueError(f"unknown precision {prec!r}; "
+                             f"expected one of {_PRECISIONS}")
+        if prec == "int8":
+            from ..kernels.ops import (bounded_predict_assign_int8,
+                                       choose_group_bn)
+            routed, u_routed, n_route = self._route_int8(qb, p)
+            cq, _ = self._quant_tables()
+            bn = choose_group_bn(qb.shape[0], self.k, self.d, bkn=self.bkn,
+                                 itemsize=1)
+            a_b, d_b, nsv, fb = bounded_predict_assign_int8(
+                qb, self.state.c, cq, self.state.prev_nb, routed, bn=bn,
+                bkn=self.bkn, r=_RESOLVE_RERANK, backend=self.backend,
+                interpret=self.interpret)
+            n_res = jnp.where(fb, self.kn,
+                              jnp.minimum(nsv, _RESOLVE_RERANK))
+            return a_b, d_b, routed, n_route + n_res
         routed, u_routed, n_scan = _route(qb, self.state.c, self.router, p)
         a_b, d_b = self._resolve(qb, routed)
         # the self-neighbor (distance 0) always passes 2u when u > 0, but
@@ -515,7 +689,7 @@ class KMeansModel:
     def predict(self, queries: jax.Array, *, batch_size: int = 8192,
                 counter: OpCounter | None = None,
                 return_sqdist: bool = False, validate: str = "raise",
-                retries: int = 3):
+                retries: int = 3, precision: str | None = None):
         """Bounded nearest-center assignment of ``queries``.
 
         Processes ``batch_size`` queries at a time (one compiled program:
@@ -525,6 +699,13 @@ class KMeansModel:
         (:func:`core.distance.chunked_argmin_sqdist`) costs ``n * k``.
         Returns the assignment (n,) int32, plus each query's squared
         distance to it when ``return_sqdist``.
+
+        ``precision`` overrides the model default: "int8" runs every
+        scan stage (group centroids, closure member lists, resolution
+        slabs) over the quantized tables and exactly re-ranks the margin
+        survivors in f32 — identical assignments, ~4x less scan traffic
+        (charged on ``counter.int8_ops`` / ``counter.bytes_scanned``,
+        never mixed into the paper's op metric; DESIGN.md §13).
 
         ``validate``: "raise" (default) rejects non-finite query rows
         with an error naming them, "sanitize" zeroes them (the caller
@@ -545,6 +726,10 @@ class KMeansModel:
                             f"got {q.dtype}")
         if q.dtype != jnp.float32:
             q = q.astype(jnp.float32)   # one explicit boundary upcast
+        prec = precision or self.precision
+        if prec not in _PRECISIONS:
+            raise ValueError(f"unknown precision {prec!r}; "
+                             f"expected one of {_PRECISIONS}")
         q = _validate_rows(q, validate, what="predict queries")
         nq = q.shape[0]
         if nq == 0:
@@ -566,7 +751,7 @@ class KMeansModel:
                 inj = _chaos.active()
                 if inj is not None:
                     inj.maybe_fail("predict")
-                return self._predict_batch(qb)
+                return self._predict_batch(qb, precision=prec)
 
             a_b, d_b, routed, n_c = retry_transient(
                 _one_batch, retries=retries, counter=counter)
@@ -575,7 +760,18 @@ class KMeansModel:
             if counter is not None:           # padding rows charge nothing
                 counted.append(jnp.sum(n_c[:m]))
         if counter is not None:
-            counter.add_distances(int(sum(int(c) for c in counted)))
+            n_f32 = int(sum(int(c) for c in counted))
+            counter.add_distances(n_f32)
+            # scan-traffic lane: dense table rows each query read — int8
+            # rows cost d + 4 scale bytes (+ 4d per f32-re-ranked
+            # survivor), f32 rows 4d (§2 counted-op methodology)
+            dense = self.dense_distances_per_query()
+            if prec == "int8":
+                counter.add_int8_ops(nq * dense)
+                counter.add_scan_bytes(nq * dense * (self.d + 4)
+                                       + n_f32 * 4 * self.d)
+            else:
+                counter.add_scan_bytes(nq * dense * 4 * self.d)
         a = jnp.concatenate(a_parts) if len(a_parts) > 1 else a_parts[0]
         if not return_sqdist:
             return a
@@ -691,6 +887,7 @@ class KMeansModel:
             self.router = _build_router(
                 st.c, self.route_groups, self.route_cap, self.router_iters)
         self.state = st
+        self._qt = None     # centers drifted: quantized tables are stale
 
         if counter is not None:
             # w=0 padding rows (the fixed-batch-size idiom) charge nothing
@@ -722,12 +919,22 @@ class KMeansModel:
                 "route_probes": self.route_probes,
                 "router_iters": self.router_iters,
                 "refresh_every": self.refresh_every, "decay": self.decay,
+                "precision": self.precision,
                 "n_rows": self.n_rows, "batches_seen": self.batches_seen}
 
     def _tree(self) -> dict:
-        return {"state": self.state, "router": self.router,
+        tree = {"state": self.state, "router": self.router,
                 "nb_dist": self.nb_dist, "x_pts": self.x_pts,
                 "a_pts": self.a_pts, "w_pts": self.w_pts}
+        if self.precision == "int8":
+            # quantization scales ride the checkpoint (DESIGN.md §13):
+            # restore recomputes the tables from the centers and verifies
+            # the stored scales match — a mismatch means centers and
+            # quantized tables came from different models. f32 models
+            # keep the old leaf count, so existing checkpoints restore.
+            cq, gq = self._quant_tables()
+            tree["qscale"] = {"c": cq.scale, "gc": gq.scale}
+        return tree
 
     @classmethod
     def _like_tree(cls, cfg: dict) -> dict:
@@ -749,11 +956,15 @@ class KMeansModel:
                         mdist=jnp.zeros((g, rcap), f32),
                         mowner=jnp.zeros((g, rcap), i32),
                         modist=jnp.zeros((g, rcap), f32))
-        return {"state": state, "router": router,
+        tree = {"state": state, "router": router,
                 "nb_dist": jnp.zeros((k, kn), f32),
                 "x_pts": jnp.zeros((cap, d), f32),
                 "a_pts": jnp.zeros((cap,), i32),
                 "w_pts": jnp.zeros((cap,), f32)}
+        if cfg.get("precision", "f32") == "int8":
+            tree["qscale"] = {"c": jnp.zeros((k,), f32),
+                              "gc": jnp.zeros((g,), f32)}
+        return tree
 
     def save(self, ckpt_dir: str, step: int = 0) -> str:
         """Atomic checkpoint of the full model (arrays + config)."""
@@ -770,14 +981,30 @@ class KMeansModel:
                 raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
         cfg = load_meta(ckpt_dir, step)["extra"]["kmeans_model"]
         tree = restore_checkpoint(ckpt_dir, step, cls._like_tree(cfg))
-        return cls(state=tree["state"], router=tree["router"],
-                   nb_dist=tree["nb_dist"], x_pts=tree["x_pts"],
-                   a_pts=tree["a_pts"], w_pts=tree["w_pts"],
-                   kn=cfg["kn"], bn=cfg["bn"], backend=cfg["backend"],
-                   bkn=cfg["bkn"], route_probes=cfg["route_probes"],
-                   router_iters=cfg["router_iters"],
-                   refresh_every=cfg["refresh_every"], decay=cfg["decay"],
-                   n_rows=cfg["n_rows"], batches_seen=cfg["batches_seen"])
+        model = cls(state=tree["state"], router=tree["router"],
+                    nb_dist=tree["nb_dist"], x_pts=tree["x_pts"],
+                    a_pts=tree["a_pts"], w_pts=tree["w_pts"],
+                    kn=cfg["kn"], bn=cfg["bn"], backend=cfg["backend"],
+                    bkn=cfg["bkn"], route_probes=cfg["route_probes"],
+                    router_iters=cfg["router_iters"],
+                    refresh_every=cfg["refresh_every"],
+                    decay=cfg["decay"],
+                    precision=cfg.get("precision", "f32"),
+                    n_rows=cfg["n_rows"],
+                    batches_seen=cfg["batches_seen"])
+        if "qscale" in tree:
+            # rebuild the quantized tables from the restored centers and
+            # verify the checkpointed scales (see _tree)
+            cq, gq = model._quant_tables()
+            if not (bool(jnp.array_equal(cq.scale, tree["qscale"]["c"]))
+                    and bool(jnp.array_equal(gq.scale,
+                                             tree["qscale"]["gc"]))):
+                from ..checkpoint import CheckpointCorruptError
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step}: stored quantization scales "
+                    f"do not match tables recomputed from the restored "
+                    f"centers")
+        return model
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

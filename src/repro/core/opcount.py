@@ -39,10 +39,19 @@ class OpCounter:
     inner_products: float = 0.0
     additions: float = 0.0
     sort_equivalents: float = 0.0
+    # quantized-scan lane (DESIGN.md §13): int8 approximate distances are
+    # counted separately from the paper's f32 vector-op metric — an int8
+    # scan op is neither free nor a full f32 distance, so mixing the two
+    # into ``total`` would corrupt the speedup tables in either direction
+    int8_ops: float = 0.0
     # memory-traffic lane (bytes): layout gathers/scatters and sort passes
     bytes_gathered: float = 0.0
     bytes_scattered: float = 0.0
     bytes_sorted: float = 0.0
+    # scan-traffic lane (bytes): table bytes the distance scans read —
+    # dtype-aware (int8 rows cost d + 4 scale bytes vs 4d for f32), so the
+    # quantized-scan win is a counted claim (BENCH_quant.json)
+    bytes_scanned: float = 0.0
     # robustness lane (DESIGN.md §11): layout events + repair lattice
     rows_moved: float = 0.0
     resorts: float = 0.0
@@ -56,8 +65,8 @@ class OpCounter:
     # per rung of the executor's degradation ladder — probe-shrunk routing,
     # route-only assignment, and load-shed requests (typed Overloaded)
     degrades: dict = dataclasses.field(
-        default_factory=lambda: {"probe_shrink": 0, "route_only": 0,
-                                 "shed": 0})
+        default_factory=lambda: {"int8_scan": 0, "probe_shrink": 0,
+                                 "route_only": 0, "shed": 0})
     wall_t0: float = dataclasses.field(default_factory=time.perf_counter)
 
     @property
@@ -95,6 +104,14 @@ class OpCounter:
     def add_additions(self, n: float) -> None:
         self.additions += self._integral(n, "additions")
 
+    def add_int8_ops(self, n: float) -> None:
+        """Charge ``n`` int8 approximate-distance ops (the quantized scan
+        stage). Kept off ``total`` — see the class docstring."""
+        self.int8_ops += self._integral(n, "int8_ops")
+
+    def add_scan_bytes(self, b: float) -> None:
+        self.bytes_scanned += float(b)
+
     def add_sort(self, m: float, d: int) -> None:
         """Charge an m-element sort as m*log2(m)/d vector ops (paper §2.2)."""
         if m > 1:
@@ -130,7 +147,7 @@ class OpCounter:
 
     def count_degrade(self, kind: str, n: int = 1) -> None:
         """Record ``n`` requests served on one degradation rung
-        (``probe_shrink`` | ``route_only`` | ``shed``)."""
+        (``int8_scan`` | ``probe_shrink`` | ``route_only`` | ``shed``)."""
         if kind not in self.degrades:
             raise ValueError(f"unknown degrade kind {kind!r}; expected one "
                              f"of {sorted(self.degrades)}")
@@ -153,10 +170,12 @@ class OpCounter:
             "additions": self.additions,
             "sort_equivalents": self.sort_equivalents,
             "total_ops": self.total,
+            "int8_ops": self.int8_ops,
             "bytes_gathered": self.bytes_gathered,
             "bytes_scattered": self.bytes_scattered,
             "bytes_sorted": self.bytes_sorted,
             "bytes_moved": self.bytes_moved,
+            "bytes_scanned": self.bytes_scanned,
             "rows_moved": self.rows_moved,
             "resorts": self.resorts,
             "repairs": dict(self.repairs),
@@ -176,7 +195,8 @@ LAYOUT_STATE_LANES = 3
 
 
 def charge_iteration(counter: OpCounter, *, n: int, d: int, k: int, kn: int,
-                     stats, resident: bool = False) -> float:
+                     stats, resident: bool = False,
+                     precision: str = "f32") -> float:
     """Charge one k²-means iteration from its device ``StepStats``.
 
     Paper ops: the k²-NN graph build, k_n candidate distances per recomputed
@@ -186,22 +206,39 @@ def charge_iteration(counter: OpCounter, *, n: int, d: int, k: int, kn: int,
     delta (each moved row is subtracted from its old center sum and added to
     its new one).
 
-    Memory traffic: ``moved`` rows × (d + state lanes) f32 gathered and
+    Memory traffic: ``moved`` rows × (d + state lanes) gathered and
     scattered by layout maintenance, plus m·log2(m) key-passes over the
     same rows — the full argsort of a re-sort (``moved`` spans the whole
     re-sorted arena(s), so partial shard re-sorts charge only the shards
     that actually sorted) or the move-buffer compaction of a sparse
-    repair. Returns the iteration's post-update energy.
+    repair. Both lanes are dtype-aware: under ``precision="int8"``
+    (DESIGN.md §13) the k_n candidate scan charges int8 ops instead of
+    f32 distances — only the exactly re-ranked survivors
+    (``stats.reranked``) cost f32 distances — and a moved arena row
+    carries d int8 feature bytes plus one f32 scale lane instead of d f32
+    features. The scan-traffic lane counts the candidate-table bytes each
+    recomputed point read (d+4 per int8 candidate vs 4d f32, plus the 4d
+    f32 bytes of every re-ranked survivor). Returns the iteration's
+    post-update energy.
     """
-    n_need, changed, energy, moved, resorted = (float(s) for s in stats)
-    counter.add_distances(k * k + n_need * kn + k)
+    n_need, changed, energy, moved, resorted = (float(s) for s in stats[:5])
+    reranked = float(stats[5]) if len(stats) > 5 else 0.0
+    if precision == "int8":
+        counter.add_distances(k * k + k + reranked)
+        counter.add_int8_ops(n_need * kn)
+        counter.add_scan_bytes(n_need * kn * (d + 4) + reranked * 4 * d)
+        row_bytes = d + (LAYOUT_STATE_LANES + 1) * 4
+    else:
+        counter.add_distances(k * k + n_need * kn + k)
+        counter.add_scan_bytes(n_need * kn * 4 * d)
+        row_bytes = (d + LAYOUT_STATE_LANES) * 4
     full_update = (not resident) or resorted > 0
     counter.add_additions(n if full_update else 2.0 * moved)
     counter.rows_moved += moved
     counter.resorts += resorted
     if moved > 0:
-        counter.add_gather_bytes(moved * (d + LAYOUT_STATE_LANES) * 4)
-        counter.add_scatter_bytes(moved * (d + LAYOUT_STATE_LANES) * 4)
+        counter.add_gather_bytes(moved * row_bytes)
+        counter.add_scatter_bytes(moved * row_bytes)
         counter.add_sort_bytes(moved * 8
                                * max(1.0, math.log2(max(moved, 2.0))))
     return energy

@@ -215,6 +215,142 @@ def candidate_assign(x: jax.Array, c: jax.Array, cand: jax.Array,
                                   interpret=interpret)
 
 
+# ---------------------------------------------------------------------------
+# Int8 variant (DESIGN.md §13): same grid and slab streaming as the tiled
+# kernel, but the (bn, d) x (d, bkn) matmul runs on int8 inputs with an
+# int32 accumulator, and instead of exact distances the kernel emits the
+# margin-test survivor set per row — the column positions of every
+# candidate whose quantized lower bound cannot be excluded from the true
+# argmin. The caller re-ranks survivors in exact f32 (kernels/quant.py
+# derives the bound; ops.quantized_scan_rerank does the re-rank).
+# ---------------------------------------------------------------------------
+
+
+def _int8_tiled_kernel(rowsel_ref, skip_ref,         # scalar prefetch (SMEM)
+                       xq_ref, xsc_ref, xerr_ref, qtab_ref, qsc_ref,
+                       qerr_ref, csq_ref,
+                       surv_ref, nsv_ref, lbm_ref,
+                       lb_buf, ub_min, xhsq, *, r):
+    i, j = pl.program_id(0), pl.program_id(1)
+    nt = pl.num_programs(1)
+    bkn = qsc_ref.shape[1]
+    skipped = skip_ref[i] != 0
+
+    @pl.when(j == 0)
+    def _init():
+        ub_min[...] = jnp.full_like(ub_min, PAD_SQDIST)
+        xq = xq_ref[...].astype(jnp.int32)
+        s = xsc_ref[...]
+        xhsq[...] = s * s * jnp.sum(xq * xq, axis=-1).astype(jnp.float32)
+
+    @pl.when(jnp.logical_not(skipped))
+    def _compute():
+        xq = xq_ref[...]                             # (bn, d) int8
+        qt = qtab_ref[0]                             # (bkn, d) int8 slab
+        cross = jax.lax.dot_general(xq, qt, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.int32)
+        sc = xsc_ref[...][:, None] * qsc_ref[0][None, :]
+        dist = jnp.maximum(
+            xhsq[...][:, None] - 2.0 * sc * cross.astype(jnp.float32)
+            + csq_ref[0][None, :], 0.0)
+        shat = jnp.sqrt(dist)                        # approx true distance
+        rc = qerr_ref[0]                             # exact candidate radii
+        lb_buf[:, pl.ds(j * bkn, bkn)] = shat - rc[None, :]
+        ub_min[...] = jnp.minimum(ub_min[...],
+                                  jnp.min(shat + rc[None, :], axis=1))
+
+    @pl.when(j == nt - 1)
+    def _flush():
+        rx = xerr_ref[...]                           # exact query radius
+        lb = lb_buf[...]
+        cut = (ub_min[...] + 2.0 * rx)[:, None]
+        mask = jnp.logical_and(lb <= cut,
+                               jnp.logical_not(skipped))
+        nsv = jnp.sum(mask.astype(jnp.int32), axis=1)
+        pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1
+        iota = jax.lax.broadcasted_iota(jnp.int32, mask.shape, 1)
+        for s in range(r):                           # static unroll
+            sel = jnp.logical_and(mask, pos == s)
+            col = jnp.sum(jnp.where(sel, iota, 0), axis=1)
+            surv_ref[:, s] = jnp.where(s < nsv, col, -1)
+        nsv_ref[...] = nsv
+        rest = jnp.min(jnp.where(mask, PAD_SQDIST, lb), axis=1)
+        lbm_ref[...] = jnp.where(skipped, PAD_SQDIST, rest)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bkn", "r", "interpret"))
+def candidate_assign_int8_tiled(xq: jax.Array, xsc: jax.Array,
+                                xerr: jax.Array,
+                                qtab: jax.Array, qsc: jax.Array,
+                                qerrtab: jax.Array,
+                                csqtab: jax.Array, rowsel: jax.Array,
+                                skip: jax.Array, *, bn: int = 256,
+                                bkn: int = 8, r: int = 8,
+                                interpret: bool = False):
+    """Int8 tiled scan: per-row survivor sets instead of exact argmins.
+
+    xq: (n, d) int8 quantized points (grouped per the tiled-kernel layout
+    contract), xsc: (n,) their per-row scales, xerr: (n,) the exact
+    residual norms ``||x - dequant(xq)||`` (the margin's query radius —
+    much tighter than the worst-case scale bound). qtab/qsc/qerrtab/
+    csqtab: quantized candidate slabs from
+    quant.quantized_candidate_slabs ((T, kn_pad, d) int8 / (T, kn_pad)
+    scales, 0 at padding / (T, kn_pad) exact residual norms, 0 at
+    padding / (T, kn_pad) exact ||dequant||^2, PAD_SQDIST at padding).
+    rowsel/skip as in :func:`candidate_assign_tiled`. Returns (surv_col
+    (n, r) int32 column positions into the block's candidate list, -1
+    beyond the survivor count; n_surv (n,) int32 — may exceed ``r``,
+    flagging f32 fallback; lb_min (n,) f32 the smallest quantized lower
+    bound among non-survivors, for the caller's Hamerly second-best
+    bound). Skipped blocks emit (all -1, 0, PAD_SQDIST)."""
+    n, d = xq.shape
+    assert n % bn == 0
+    t, knp, _ = qtab.shape
+    assert knp % bkn == 0 and qsc.shape == (t, knp)
+    nb = n // bn
+    assert rowsel.shape == (nb,) and skip.shape == (nb,)
+
+    grid = (nb, knp // bkn)
+    kern = functools.partial(_int8_tiled_kernel, r=r)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j, rs, sk: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j, rs, sk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, rs, sk: (i,)),
+            pl.BlockSpec((1, bkn, d),
+                         lambda i, j, rs, sk: (rs[i] * (1 - sk[i]), j, 0)),
+            pl.BlockSpec((1, bkn),
+                         lambda i, j, rs, sk: (rs[i] * (1 - sk[i]), j)),
+            pl.BlockSpec((1, bkn),
+                         lambda i, j, rs, sk: (rs[i] * (1 - sk[i]), j)),
+            pl.BlockSpec((1, bkn),
+                         lambda i, j, rs, sk: (rs[i] * (1 - sk[i]), j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, r), lambda i, j, rs, sk: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j, rs, sk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, rs, sk: (i,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bn, knp), jnp.float32),
+            pltpu.VMEM((bn,), jnp.float32),
+            pltpu.VMEM((bn,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, r), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rowsel, skip, xq, xsc, xerr, qtab, qsc, qerrtab, csqtab)
+
+
 def tiled_grid_steps(n: int, kn: int, bn: int, bkn: int) -> int:
     """Grid steps the tiled kernel issues (vs rowwise_grid_steps)."""
     return (n // bn) * (-(-kn // bkn))

@@ -11,7 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .candidate_assign import (candidate_assign, candidate_assign_rowwise,
+from . import quant
+from .candidate_assign import (PAD_SQDIST, candidate_assign,
+                               candidate_assign_int8_tiled,
+                               candidate_assign_rowwise,
                                candidate_assign_tiled, candidate_tables,
                                pad_candidates, rowwise_grid_steps,
                                tiled_grid_steps)
@@ -39,20 +42,27 @@ def choose_blocks(d: int, k: int):
 
 
 def choose_group_bn(n: int, k: int, d: int | None = None,
-                    bn_max: int = 128, bkn: int = 8) -> int:
+                    bn_max: int = 128, bkn: int = 8,
+                    itemsize: int = 4) -> int:
     """Point-block size for the cluster-grouped layout: the largest power of
     two <= the expected cluster size n/k (clamped to [8, bn_max]), so the
     per-cluster padding overhead stays bounded even at small n/k.
 
     When ``d`` is given the block additionally respects the VMEM budget the
     same way :func:`choose_blocks` does — the tiled kernel holds a (bn, d)
-    point tile, a (bkn, d) candidate slab and ~4 bn-length scratch lanes per
-    step, so huge-d inputs (e.g. the yale config, d=32256) must shrink bn
-    below the n/k heuristic or the tile overflows the budget."""
+    point tile, a (bkn, d) candidate slab and ~4 bn-length f32 scratch
+    lanes per step, so huge-d inputs (e.g. the yale config, d=32256) must
+    shrink bn below the n/k heuristic or the tile overflows the budget.
+    ``itemsize`` is the element byte width of the point/candidate tiles
+    (1 for the int8 scan, 2 for bf16/f16 inputs, 4 for f32): the budget is
+    counted in bytes, so narrower tiles earn proportionally larger bn
+    instead of being charged as if they were f32."""
     per = max(8, n // max(k, 1))
     cap = bn_max
     if d is not None:
-        while cap > 8 and cap * d + bkn * d + 4 * cap > _VMEM_BUDGET:
+        budget = _VMEM_BUDGET * 4                   # bytes
+        while cap > 8 and \
+                (cap * d + bkn * d) * itemsize + 4 * cap * 4 > budget:
             cap //= 2
     bn = 8
     while bn * 2 <= min(per, cap):
@@ -336,6 +346,113 @@ def bounded_predict_assign(q: jax.Array, c: jax.Array, neighbors: jax.Array,
     return a, d1
 
 
+@functools.partial(jax.jit, static_argnames=("bn", "bkn", "r", "backend",
+                                             "interpret"))
+def quantized_scan_rerank(xf: jax.Array, xq: jax.Array, xsc: jax.Array,
+                          c: jax.Array, cq, cidx: jax.Array,
+                          rowsel: jax.Array, skip: jax.Array,
+                          prev_a: jax.Array, prev_d1: jax.Array,
+                          prev_d2: jax.Array, *, bn: int = 128,
+                          bkn: int = 8, r: int = 8,
+                          backend: str = "pallas",
+                          interpret: bool | None = None):
+    """Int8 approximate scan + exact f32 re-rank (DESIGN.md §13) — the
+    drop-in quantized replacement for :func:`candidate_assign_tiled`.
+
+    xf: (n, d) f32 master rows (grouped layout; the re-rank reads these),
+    xq/xsc their int8 quantization; c: (k, d) f32 centers; cq: a
+    quant.CenterQuant of ``c``; cidx: (T, kn_pad) candidate ids;
+    rowsel/skip/prev_* exactly as in the f32 kernel. The int8 stage (the
+    Pallas survivor kernel on backend="pallas", the chunked jnp scan on
+    "xla") emits per-row survivor sets under the quantization margin
+    bound; survivors are re-ranked in exact f32 with the oracle's
+    formula, so the returned argmins are bit-identical to the f32 path.
+    Rows whose survivor set overflows ``r`` fall back to an exact f32
+    pass over their full candidate list (lax.cond — free when no row
+    overflows). Returns (a (n,), d1_sq (n,), d2_sq (n,), n_surv (n,),
+    fallback (n,) bool); d2_sq is the exact second-best among survivors
+    floored by the non-survivor margin bound — a valid (possibly looser)
+    Hamerly lower bound, never an invalid one."""
+    interpret = (not _ON_TPU) if interpret is None else interpret
+    n, d = xf.shape
+    nb = n // bn
+    # exact per-row residual norms: the margin's query radius (the f32
+    # masters are already here for the re-rank, so this is one cheap
+    # elementwise pass — no extra memory traffic lane)
+    xerr = jnp.linalg.norm(
+        xf - xq.astype(jnp.float32) * xsc[:, None], axis=1)
+    if backend == "pallas":
+        qtab, qsc, qerrtab, csqtab = quant.quantized_candidate_slabs(
+            cq, cidx)
+        surv, nsv, lbm = candidate_assign_int8_tiled(
+            xq, xsc, xerr, qtab, qsc, qerrtab, csqtab, rowsel, skip,
+            bn=bn, bkn=bkn, r=r, interpret=interpret)
+    else:
+        cand_rows = cidx[rowsel]                     # (nb, kn_pad)
+        surv, nsv, lbm = quant.approx_scan(
+            xq, xsc, xerr, cq, jnp.repeat(cand_rows, bn, axis=0), r=r)
+    fresh = jnp.repeat(skip == 0, bn)
+    nsv = jnp.where(fresh, nsv, 0)
+    cand_all = cidx[jnp.repeat(rowsel, bn)]          # (n, kn_pad)
+    ids = jnp.where(surv >= 0,
+                    jnp.take_along_axis(cand_all, jnp.maximum(surv, 0),
+                                        axis=1), -1)
+    sq = quant.rerank_exact(xf, c, ids)
+    a_sv, d1_sv, d2_sv = quant.first_min_top2(sq, ids)
+    lo_rest = jnp.square(
+        jnp.maximum(jnp.minimum(lbm, 1e15) - xerr, 0.0))
+    d2_sv = jnp.minimum(d2_sv, lo_rest)
+    fb = fresh & (nsv > r)
+    a_f, d1_f, d2_f = jax.lax.cond(
+        jnp.any(fb),
+        lambda: quant.full_candidate_top2_sq(xf, c, cand_all),
+        lambda: (a_sv, d1_sv, d2_sv))
+    a_new = jnp.where(fb, a_f, a_sv)
+    d1_new = jnp.where(fb, d1_f, d1_sv)
+    d2_new = jnp.where(fb, d2_f, d2_sv)
+    return (jnp.where(fresh, a_new, prev_a).astype(jnp.int32),
+            jnp.where(fresh, d1_new, prev_d1),
+            jnp.where(fresh, d2_new, prev_d2),
+            nsv, fb)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bkn", "r", "backend",
+                                             "interpret"))
+def bounded_predict_assign_int8(q: jax.Array, c: jax.Array, cq,
+                                neighbors: jax.Array, routed: jax.Array,
+                                *, bn: int = 128, bkn: int = 8, r: int = 8,
+                                backend: str = "pallas",
+                                interpret: bool | None = None):
+    """Quantized-resolution analogue of :func:`bounded_predict_assign`:
+    routed queries resolve against their route center's k_n-neighborhood
+    through the int8 scan + exact f32 re-rank instead of the f32 kernel.
+
+    cq: quant.CenterQuant of ``c`` (callers cache it across batches).
+    Returns (assignment (m,), best sqdist (m,), n_surv (m,),
+    fallback (m,) bool) in query order — the survivor/fallback lanes feed
+    the counted f32-distance charge (only re-ranked candidates cost f32
+    distances; the dense int8 scan is charged on its own lane)."""
+    m = q.shape[0]
+    k = c.shape[0]
+    cidx = pad_candidates(neighbors.astype(jnp.int32), bkn)
+    perm, b2c = group_by_cluster_device(routed, k, bn)
+    nb = perm.shape[0] // bn
+    skip = (~jnp.any((perm >= 0).reshape(nb, bn), axis=1)).astype(jnp.int32)
+    safe_perm = jnp.maximum(perm, 0)
+    qg = q[safe_perm]
+    qq, qs = quant.quantize_rows(qg)
+    pa = routed.astype(jnp.int32)[safe_perm]
+    zeros_g = jnp.zeros((perm.shape[0],), jnp.float32)
+    a_g, d1_g, _, nsv_g, fb_g = quantized_scan_rerank(
+        qg, qq, qs, c, cq, cidx, b2c, skip, pa, zeros_g, zeros_g,
+        bn=bn, bkn=bkn, r=r, backend=backend, interpret=interpret)
+    a = scatter_from_grouped(perm, a_g, routed.astype(jnp.int32))
+    d1 = scatter_from_grouped(perm, d1_g, jnp.zeros((m,), jnp.float32))
+    nsv = scatter_from_grouped(perm, nsv_g, jnp.zeros((m,), jnp.int32))
+    fb = scatter_from_grouped(perm, fb_g, jnp.zeros((m,), bool))
+    return a, d1, nsv, fb
+
+
 def segmented_scan(x: jax.Array, w: jax.Array, block2seg: jax.Array,
                    *, bn: int = 128, interpret: bool | None = None):
     """Segmented inclusive scan of (x, ||x||^2, 1) over the cluster-grouped
@@ -380,14 +497,16 @@ def k2_assign_grouped(x: jax.Array, c: jax.Array, neighbors: jax.Array,
 
 
 __all__ = ["assign_nearest_pallas", "bounded_predict_assign",
-           "candidate_assign",
+           "bounded_predict_assign_int8", "candidate_assign",
+           "candidate_assign_int8_tiled",
            "candidate_assign_rowwise", "candidate_assign_tiled",
            "candidate_tables", "center_knn", "center_sqdist",
            "choose_blocks", "choose_group_bn", "cluster_attend",
            "cluster_major_pack", "distance_argmin", "group_by_cluster",
            "group_by_cluster_device", "grouped_capacity",
            "k2_assign_grouped", "k2_bounded_assign", "pad_candidates",
-           "plan_layout_repair", "resident_capacity", "resident_regroup",
+           "plan_layout_repair", "quant", "quantized_scan_rerank",
+           "resident_capacity", "resident_regroup",
            "rowwise_grid_steps",
            "scatter_from_grouped", "segmented_scan", "select_clusters",
            "tiled_grid_steps"]

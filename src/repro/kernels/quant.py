@@ -1,0 +1,240 @@
+"""Symmetric int8 quantization for the scan stages (DESIGN.md §13).
+
+The distance-hungry surfaces of the system — the center table the router
+scans, the per-cluster kn-neighbor candidate slabs the tiled kernel
+streams, and the §9 resident arena's grouped point rows — all tolerate a
+low-precision *scan* as long as the final argmin is recovered exactly.
+This module holds the quantization scheme and the margin machinery that
+makes "exact after re-rank" a theorem rather than a hope:
+
+Scheme (symmetric, per-row): ``scale = max|row| / 127``, ``q =
+round(row / scale)`` clipped to [-127, 127]. Dequantization error per
+coordinate is at most ``scale / 2``, so the l2 distortion of a whole row
+is bounded by the *radius* ``r = scale * sqrt(d) / 2``. A per-tile
+(grouped-rows) fallback shares one scale across fixed row groups for
+tables whose rows are individually too small to amortize a scale lane.
+
+Margin bound: write ``s_j = ||x_hat - c_hat_j||`` for the exact distance
+between the *dequantized* query and candidate j. Then ``|t_j - s_j| <=
+rx + rc_j`` where ``t_j`` is the true f32 distance and rx/rc_j the two
+radii. Hence every candidate with ``s_j - rc_j > min_l (s_l + rc_l) +
+2*rx`` provably cannot be the true argmin (nor tie it), and the survivor
+set ``{j : s_j - rc_j <= U}`` contains *all* true minima. Any valid
+distortion bound works as the radius; the scans use the *exact* residual
+norms ``||row - dequant(row)||`` (CenterQuant.err for tables, computed
+per query row at quantize time) — typically ~1.7x tighter per side than
+the worst-case ``scale * sqrt(d) / 2``, which shrinks the survivor sets
+(and the f32 re-rank traffic) correspondingly. An exact f32
+re-rank over survivors with the oracle's own formula therefore returns
+the oracle's argmin bit-for-bit; rows whose survivor set overflows the
+static re-rank width fall back to the full f32 candidate list.
+
+Everything here is the portable jnp realisation; the Pallas MXU kernel
+(kernels/candidate_assign.candidate_assign_int8_tiled) computes the same
+survivor sets from the same quantized tables.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .candidate_assign import PAD_SQDIST
+
+QMAX = 127.0
+_EPS = 1e-12        # zero-row guard: a zero scale would 0/0 the dequant
+
+
+class CenterQuant(NamedTuple):
+    """Quantized row table: int8 rows + per-row scales + exact squared
+    norms of the *dequantized* rows (f32; the scan-side ||c_hat||^2) +
+    the exact residual norms ``err = ||row - dequant(row)||`` — a much
+    tighter per-row distortion radius than the worst-case
+    :func:`quant_radius` (typically ~1.7x smaller), used by the routing
+    margins where the worst case would fall back too often."""
+    q: jax.Array        # (rows, d) int8
+    scale: jax.Array    # (rows,) f32
+    sq: jax.Array       # (rows,) f32  ||dequant(q)||^2
+    err: jax.Array      # (rows,) f32  ||row - dequant(q)||
+
+
+def quantize_rows(x: jax.Array):
+    """Symmetric per-row int8 quantization: (..., d) -> (q int8, scale)."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax / QMAX, _EPS).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -QMAX, QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_tiles(x: jax.Array, tile: int):
+    """Per-tile fallback: one shared scale per ``tile`` consecutive rows
+    (rows must divide; scales returned broadcast back to per-row shape so
+    consumers are layout-agnostic)."""
+    rows, d = x.shape
+    assert rows % tile == 0, (rows, tile)
+    amax = jnp.max(jnp.abs(x).reshape(rows // tile, tile * d), axis=-1)
+    scale = jnp.maximum(amax / QMAX, _EPS).astype(jnp.float32)
+    srow = jnp.repeat(scale, tile)
+    q = jnp.clip(jnp.round(x / srow[:, None]), -QMAX, QMAX)
+    return q.astype(jnp.int8), srow
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def quant_radius(scale: jax.Array, d: int) -> jax.Array:
+    """l2 distortion bound of a quantized row: coordinate error <= scale/2
+    in each of d dims."""
+    return scale * (math.sqrt(d) / 2.0)
+
+
+def center_quant(c: jax.Array) -> CenterQuant:
+    """Quantize the (k, d) center table per cluster row."""
+    q, scale = quantize_rows(c)
+    cd = dequantize_rows(q, scale)
+    r = c - cd
+    return CenterQuant(q, scale, jnp.sum(cd * cd, axis=-1),
+                       jnp.sqrt(jnp.sum(r * r, axis=-1)))
+
+
+def quantized_candidate_slabs(cq: CenterQuant, cidx: jax.Array):
+    """Gather quantized per-cluster candidate slabs for the int8 tiled
+    kernel — the int8 analogue of candidate_assign.candidate_tables.
+
+    cidx: (T, kn_pad) int32 candidate ids (-1 padding). Returns
+    (qtab (T, kn_pad, d) int8, qsc (T, kn_pad) f32 — 0 at padding so the
+    padded radius is 0 —, qerrtab (T, kn_pad) f32 exact residual norms,
+    0 at padding, csqtab (T, kn_pad) f32 with PAD_SQDIST at padding so
+    padded columns can never survive)."""
+    safe = jnp.maximum(cidx, 0)
+    qtab = cq.q[safe]
+    qsc = jnp.where(cidx >= 0, cq.scale[safe], 0.0).astype(jnp.float32)
+    qerrtab = jnp.where(cidx >= 0, cq.err[safe], 0.0).astype(jnp.float32)
+    csqtab = jnp.where(cidx >= 0, cq.sq[safe], PAD_SQDIST)
+    return qtab, qsc, qerrtab, csqtab.astype(jnp.float32)
+
+
+def _approx_scan_block(xq, xsc, xerr, cand, cq: CenterQuant, r: int):
+    """Survivor extraction for one row block (the jnp reference of the
+    Pallas kernel's flush stage). ``xerr`` is the exact per-row residual
+    norm (the margin's query radius). Returns (surv_col (m, r) int32
+    column positions into ``cand`` (-1 = none), n_surv (m,), lb_min (m,)
+    the minimum quantized lower bound among NON-survivors)."""
+    m, d = xq.shape
+    valid = cand >= 0
+    safe = jnp.maximum(cand, 0)
+    tab = cq.q[safe].astype(jnp.int32)                  # (m, P, d)
+    cross = jnp.einsum("md,mpd->mp", xq.astype(jnp.int32), tab)
+    xhsq = xsc * xsc * jnp.sum(
+        xq.astype(jnp.int32) * xq.astype(jnp.int32), axis=-1
+    ).astype(jnp.float32)
+    csc = jnp.where(valid, cq.scale[safe], 0.0)
+    csq = jnp.where(valid, cq.sq[safe], PAD_SQDIST)
+    dist = jnp.maximum(
+        xhsq[:, None]
+        - 2.0 * (xsc[:, None] * csc) * cross.astype(jnp.float32)
+        + csq, 0.0)
+    shat = jnp.sqrt(dist)
+    rc = jnp.where(valid, cq.err[safe], 0.0)            # exact radii
+    lb = shat - rc
+    cut = jnp.min(shat + rc, axis=1) + 2.0 * xerr
+    mask = (lb <= cut[:, None]) & valid
+    nsv = jnp.sum(mask.astype(jnp.int32), axis=1)
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1
+    iota = jax.lax.broadcasted_iota(jnp.int32, mask.shape, 1)
+    cols = []
+    for s in range(r):
+        sel = mask & (pos == s)
+        col = jnp.sum(jnp.where(sel, iota, 0), axis=1)
+        cols.append(jnp.where(s < nsv, col, -1))
+    surv = jnp.stack(cols, axis=1).astype(jnp.int32)
+    lbm = jnp.min(jnp.where(mask, PAD_SQDIST, lb), axis=1)
+    return surv, nsv, lbm
+
+
+@functools.partial(jax.jit, static_argnames=("r", "chunk"))
+def approx_scan(xq: jax.Array, xsc: jax.Array, xerr: jax.Array,
+                cq: CenterQuant, cand: jax.Array, *, r: int = 8,
+                chunk: int = 2048):
+    """Chunked int8 approximate scan over per-row candidate lists — the
+    XLA backend / reference of the int8 tiled kernel.
+
+    xq: (m, d) int8 quantized queries, xsc: (m,) their scales, xerr:
+    (m,) their exact residual norms ``||x - dequant(xq)||``; cand:
+    (m, P) int32 candidate center ids (-1 = invalid). Returns
+    (surv_col (m, r), n_surv (m,), lb_min (m,)) as in
+    :func:`_approx_scan_block`."""
+    m, d = xq.shape
+    pad = (-m) % chunk
+    if pad:
+        xq = jnp.pad(xq, ((0, pad), (0, 0)))
+        xsc = jnp.pad(xsc, (0, pad), constant_values=1.0)
+        xerr = jnp.pad(xerr, (0, pad))
+        cand = jnp.pad(cand, ((0, pad), (0, 0)), constant_values=-1)
+    nc = xq.shape[0] // chunk
+    surv, nsv, lbm = jax.lax.map(
+        lambda t: _approx_scan_block(t[0], t[1], t[2], t[3], cq, r),
+        (xq.reshape(nc, chunk, d), xsc.reshape(nc, chunk),
+         xerr.reshape(nc, chunk), cand.reshape(nc, chunk, -1)))
+    return (surv.reshape(-1, r)[:m], nsv.reshape(-1)[:m],
+            lbm.reshape(-1)[:m])
+
+
+def rerank_exact(xf: jax.Array, c: jax.Array, ids: jax.Array) -> jax.Array:
+    """Exact f32 squared distances over gathered candidates, with the
+    *same formula* as the core.distance.chunked_candidate_argmin oracle
+    (global ||c||^2 gathered at the candidate ids) so a first-min argmin
+    over these values is bit-identical to the oracle's. ids: (m, r)
+    center ids, -1 -> PAD_SQDIST."""
+    c_sq = jnp.sum(c * c, axis=-1)
+    safe = jnp.maximum(ids, 0)
+    cb = c[safe]
+    cross = jnp.einsum("nd,nrd->nr", xf, cb)
+    sq = jnp.maximum(
+        jnp.sum(xf * xf, axis=-1)[:, None] - 2.0 * cross + c_sq[safe], 0.0)
+    return jnp.where(ids >= 0, sq, PAD_SQDIST)
+
+
+def first_min_top2(sq: jax.Array, ids: jax.Array):
+    """First-min argmin + second-best over a (m, r) exact-distance tile.
+    Returns (a (m,) the winning center id, d1 (m,), d2 (m,)) with d2
+    masked to PAD_SQDIST when no second candidate exists."""
+    loc = jnp.argmin(sq, axis=1)
+    d1 = jnp.take_along_axis(sq, loc[:, None], axis=1)[:, 0]
+    a = jnp.take_along_axis(ids, loc[:, None], axis=1)[:, 0]
+    hit = jax.lax.broadcasted_iota(jnp.int32, sq.shape, 1) == loc[:, None]
+    d2 = jnp.min(jnp.where(hit, PAD_SQDIST, sq), axis=1)
+    return a.astype(jnp.int32), d1, d2
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def full_candidate_top2_sq(xf: jax.Array, c: jax.Array, cand: jax.Array,
+                           *, chunk: int = 2048):
+    """Exact f32 top-2 over *full* per-row candidate lists — the fallback
+    for rows whose survivor set overflows the re-rank width. Chunked so
+    the (m, P, d) gather never materialises. Returns (a, d1_sq, d2_sq)."""
+    m, d = xf.shape
+    pad = (-m) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        cand = jnp.pad(cand, ((0, pad), (0, 0)), constant_values=-1)
+    nc = xf.shape[0] // chunk
+
+    def body(t):
+        xb, cb_ids = t
+        sq = rerank_exact(xb, c, cb_ids)
+        return first_min_top2(sq, cb_ids)
+
+    a, d1, d2 = jax.lax.map(
+        body, (xf.reshape(nc, chunk, d), cand.reshape(nc, chunk, -1)))
+    return (a.reshape(-1)[:m], d1.reshape(-1)[:m], d2.reshape(-1)[:m])
+
+
+__all__ = ["CenterQuant", "QMAX", "approx_scan", "center_quant",
+           "dequantize_rows", "first_min_top2", "full_candidate_top2_sq",
+           "quant_radius", "quantize_rows", "quantize_tiles",
+           "quantized_candidate_slabs", "rerank_exact"]

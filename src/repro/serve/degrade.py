@@ -1,21 +1,28 @@
 """Graceful-degradation ladder with hysteresis.
 
 DESIGN.md §12. The executor trades accuracy for latency under load in
-three measured rungs (the paper's bounded assignment is the knob — each
+four measured rungs (the paper's bounded assignment is the knob — each
 rung cuts the counted distances per query):
 
 ``FULL`` (0)
     the PR 5 predict path: ``route_probes`` closure probes + exact
-    kn-neighborhood resolution.
-``PROBE_SHRINK`` (1)
+    kn-neighborhood resolution, all in f32.
+``INT8_SCAN`` (1)
+    the DESIGN.md §13 quantized scan: every stage reads the int8 tables
+    and exactly re-ranks the margin survivors in f32 — assignments stay
+    bit-identical to FULL, only the scan traffic (and service time)
+    shrinks ~4x. The cheapest rung with zero recall cost, so it is the
+    first one the ladder reaches for.
+``PROBE_SHRINK`` (2)
     shrink the router to one closure probe (top-p → 1, still within the
     closure cap) and keep the resolution pass — Wang et al.'s closure
-    overlap is what keeps the recall loss bounded here.
-``ROUTE_ONLY`` (2)
+    overlap is what keeps the recall loss bounded here. Rides the int8
+    scan (a deeper rung is never more expensive than a shallower one).
+``ROUTE_ONLY`` (3)
     skip the kn-neighborhood resolution entirely: the routed center IS
-    the assignment. Recall falls to the router's own hit rate (the
-    acceptance gate holds it >= 0.95 at the k=512 shape).
-``SHED`` (3)
+    the assignment (int8 route). Recall falls to the router's own hit
+    rate (the acceptance gate holds it >= 0.95 at the k=512 shape).
+``SHED`` (4)
     load-shed: lowest-priority admitted requests are answered with a
     typed ``Overloaded`` response until the backlog drains below the
     deadline budget again.
@@ -34,23 +41,23 @@ from __future__ import annotations
 import dataclasses
 
 
-FULL, PROBE_SHRINK, ROUTE_ONLY, SHED = 0, 1, 2, 3
-RUNG_NAMES = ("full", "probe_shrink", "route_only", "shed")
+FULL, INT8_SCAN, PROBE_SHRINK, ROUTE_ONLY, SHED = 0, 1, 2, 3, 4
+RUNG_NAMES = ("full", "int8_scan", "probe_shrink", "route_only", "shed")
 
 
 @dataclasses.dataclass(frozen=True)
 class DegradeConfig:
     """Enter (``up``) / exit (``down``) pressure thresholds per rung
-    transition 0→1, 1→2, 2→3; ``down[i] < up[i]`` is the hysteresis
-    band."""
-    up: tuple = (0.6, 1.0, 1.5)
-    down: tuple = (0.3, 0.6, 1.0)
+    transition 0→1, 1→2, 2→3, 3→4; ``down[i] < up[i]`` is the
+    hysteresis band."""
+    up: tuple = (0.6, 0.85, 1.0, 1.5)
+    down: tuple = (0.3, 0.5, 0.6, 1.0)
     up_patience: int = 1
     down_patience: int = 2
 
     def __post_init__(self):
-        if len(self.up) != 3 or len(self.down) != 3:
-            raise ValueError("need exactly 3 up/down thresholds "
+        if len(self.up) != 4 or len(self.down) != 4:
+            raise ValueError("need exactly 4 up/down thresholds "
                              "(one per rung transition)")
         if any(d >= u for u, d in zip(self.up, self.down)):
             raise ValueError(f"hysteresis requires down < up per rung, "
@@ -96,4 +103,4 @@ class DegradeLadder:
 
 
 __all__ = ["DegradeConfig", "DegradeLadder", "RUNG_NAMES",
-           "FULL", "PROBE_SHRINK", "ROUTE_ONLY", "SHED"]
+           "FULL", "INT8_SCAN", "PROBE_SHRINK", "ROUTE_ONLY", "SHED"]

@@ -6,9 +6,10 @@ backpressure), continuous micro-batching of predict calls with
 pad-to-bucket shapes (``buckets.py`` — the jit cache holds one program
 per (bucket, rung-mode) and never recompiles per request),
 deadline-budgeted EDF batch formation, interleaved ``partial_fit``
-folds that yield to predict traffic, and the three-rung
+folds that yield to predict traffic, and the four-rung
 graceful-degradation ladder of ``degrade.py`` driven by measured queue
-pressure with hysteresis.
+pressure with hysteresis (the first rung — the §13 int8 scan — costs
+nothing in recall: assignments stay bit-identical to full fidelity).
 
 Time is a *virtual clock*: batches advance it by an analytic service
 model (``t_batch_overhead + rows × distances_per_query(rung) ×
@@ -46,8 +47,8 @@ import numpy as np
 
 from ..core.opcount import OpCounter
 from .buckets import BucketLadder
-from .degrade import (FULL, PROBE_SHRINK, ROUTE_ONLY, SHED, DegradeConfig,
-                      DegradeLadder, RUNG_NAMES)
+from .degrade import (FULL, INT8_SCAN, PROBE_SHRINK, ROUTE_ONLY, SHED,
+                      DegradeConfig, DegradeLadder, RUNG_NAMES)
 from .queue import AdmissionQueue, Overloaded, Request, Response
 
 
@@ -132,14 +133,19 @@ class ServeExecutor:
         """Analytic per-query distance cost of one rung (the dense
         budget of the bounded route at that rung — the deterministic
         basis of the virtual service model and of the rung ordering:
-        every rung is strictly cheaper than the one above)."""
+        every rung is strictly cheaper than the one above). Int8 table
+        rows cost ~1/4 of an f32 distance in the service model (d+4
+        bytes vs 4d), and every rung below INT8_SCAN rides the int8
+        scan, which keeps the cost ordering strict."""
         m = self.model
         g, cap, kn = m.route_groups, m.route_cap, m.kn
         if rung <= FULL:
             return g + m.route_probes * cap + kn
+        if rung == INT8_SCAN:
+            return g + (m.route_probes * cap + kn) // 4
         if rung == PROBE_SHRINK:
-            return g + cap + kn
-        return g + cap                               # ROUTE_ONLY
+            return g + (cap + kn) // 4
+        return g + cap // 4                          # ROUTE_ONLY
 
     def service_time(self, kind: str, rows: int, rung: int) -> float:
         per_row = self.distances_per_query(min(rung, ROUTE_ONLY))
@@ -245,7 +251,7 @@ class ServeExecutor:
         return "partial_fit" if pf else None
 
     def _shed(self) -> None:
-        """Rung 3: shed lowest-priority predict requests until the
+        """Rung 4: shed lowest-priority predict requests until the
         backlog drains within the deadline budget again; every shed
         request gets a typed ``Overloaded`` response."""
         per_row = (self.distances_per_query(ROUTE_ONLY)
@@ -300,11 +306,18 @@ class ServeExecutor:
             if inj is not None:
                 inj.maybe_fail("serve_predict")
             q = jnp.asarray(qb)
+            # every degraded rung rides the §13 int8 scan — identical
+            # assignments at INT8_SCAN, shrunk probes below it
             if rung >= ROUTE_ONLY:
-                routed, _, n_scan = self.model.route_batch(q, probes=1)
+                routed, _, n_scan = self.model.route_batch(
+                    q, probes=1, precision="int8")
                 return routed, n_scan
-            probes = 1 if rung == PROBE_SHRINK else None
-            a, _, _, n_counted = self.model._predict_batch(q, probes=probes)
+            if rung == FULL:
+                a, _, _, n_counted = self.model._predict_batch(q)
+            else:
+                probes = 1 if rung == PROBE_SHRINK else None
+                a, _, _, n_counted = self.model._predict_batch(
+                    q, probes=probes, precision="int8")
             return a, n_counted
 
         a, n_counted = retry_transient(_one, retries=self.cfg.retries,
@@ -312,10 +325,17 @@ class ServeExecutor:
         a = np.asarray(a)
         self.counter.add_distances(int(np.asarray(n_counted)[:m_live]
                                        .sum()))
-        if rung == PROBE_SHRINK:
+        if rung == INT8_SCAN:
+            self.counter.count_degrade("int8_scan", len(batch))
+        elif rung == PROBE_SHRINK:
             self.counter.count_degrade("probe_shrink", len(batch))
         elif rung >= ROUTE_ONLY:
             self.counter.count_degrade("route_only", len(batch))
+        if rung > FULL:
+            self.counter.add_int8_ops(
+                m_live * (self.model.route_groups
+                          + self.model.route_probes * self.model.route_cap
+                          + self.model.kn))
 
         svc = self.service_time("predict", bucket, rung)
         svc += self._injected_stall()
@@ -463,9 +483,10 @@ class ServeExecutor:
 
     def warmup(self) -> None:
         """Compile every (bucket, rung-mode) program on zero batches so
-        serving never compiles: predict at all three fidelity rungs and
-        a weight-0 partial_fit per bucket (a no-op fold — the model
-        state and the fold schedule are restored)."""
+        serving never compiles: predict at all four fidelity rungs
+        (f32 full, int8 scan, int8 probe-shrink, int8 route-only) and a
+        weight-0 partial_fit per bucket (a no-op fold — the model state
+        and the fold schedule are restored)."""
         if self.model is None:
             return
         d = self.model.d
@@ -473,10 +494,10 @@ class ServeExecutor:
         folds = self.model.degraded_folds
         for b in self.buckets.rungs:
             qb = jnp.zeros((b, d), jnp.float32)
-            for rung in (FULL, PROBE_SHRINK):
-                self.model._predict_batch(
-                    qb, probes=1 if rung == PROBE_SHRINK else None)
-            self.model.route_batch(qb, probes=1)
+            self.model._predict_batch(qb)
+            self.model._predict_batch(qb, precision="int8")
+            self.model._predict_batch(qb, probes=1, precision="int8")
+            self.model.route_batch(qb, probes=1, precision="int8")
             self.model.partial_fit(qb, jnp.zeros((b,), jnp.float32),
                                    validate="none")
             self.compiled_shapes.add((b, d))
@@ -490,7 +511,8 @@ class ServeExecutor:
         from ..core import model as _m
         out = {}
         for name in ("_route", "_resolve_xla", "_delta_update",
-                     "_arena_try_append", "_arena_resort"):
+                     "_arena_try_append", "_arena_resort",
+                     "_route_groups_int8", "_route_members_int8"):
             fn = getattr(_m, name, None)
             if fn is not None and hasattr(fn, "_cache_size"):
                 out[name] = fn._cache_size()
@@ -552,4 +574,5 @@ def requests_from_trace(trace: list[dict], q_pool: np.ndarray,
 
 
 __all__ = ["ServeConfig", "ServeExecutor", "requests_from_trace",
-           "RUNG_NAMES", "FULL", "PROBE_SHRINK", "ROUTE_ONLY", "SHED"]
+           "RUNG_NAMES", "FULL", "INT8_SCAN", "PROBE_SHRINK",
+           "ROUTE_ONLY", "SHED"]

@@ -167,6 +167,61 @@ def test_fit_checkpointer_roundtrip_and_gc(tmp_path):
     assert it2 == 1 and bounds2 is None
 
 
+def _int8_model():
+    from repro.core import assign_nearest, fit_k2means
+    from repro.core.model import KMeansModel
+    from repro.data import gmm_blobs
+    key = jax.random.PRNGKey(2)
+    x = gmm_blobs(key, 256, 8, true_k=8)
+    init = x[:8]
+    a0 = assign_nearest(x, init).astype(jnp.int32)
+    res = fit_k2means(x, init, a0, kn=4, max_iters=6)
+    return KMeansModel.from_result(res, kn=4, precision="int8"), x
+
+
+def test_int8_model_checkpoint_roundtrip(tmp_path):
+    """DESIGN.md §13: the precision config and quantization scales ride
+    the checkpoint; a restored int8 model predicts identically."""
+    from repro.core.model import KMeansModel
+    model, x = _int8_model()
+    d = str(tmp_path / "ckpt")
+    model.save(d, step=3)
+    got = KMeansModel.restore(d)
+    assert got.precision == "int8"
+    q = x[:64]
+    np.testing.assert_array_equal(np.asarray(model.predict(q)),
+                                  np.asarray(got.predict(q)))
+
+
+def test_int8_model_checkpoint_torn_file(tmp_path):
+    """A torn write under an int8 model's checkpoint surfaces as
+    CheckpointCorruptError, not a silently-wrong quantized table."""
+    from repro.core.model import KMeansModel
+    model, _ = _int8_model()
+    d = str(tmp_path / "ckpt")
+    model.save(d, step=3)
+    npz = os.path.join(d, "step-%09d" % 3, "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    with pytest.raises(CheckpointCorruptError, match="step 3"):
+        KMeansModel.restore(d, 3)
+
+
+def test_int8_model_checkpoint_scale_mismatch(tmp_path):
+    """Restore recomputes the quantized tables from the centers and
+    verifies the stored scales — doctored scales (centers and tables
+    from different models) are rejected."""
+    from repro.core.model import KMeansModel
+    model, _ = _int8_model()
+    d = str(tmp_path / "ckpt")
+    tree = model._tree()
+    tree["qscale"]["c"] = tree["qscale"]["c"] * 1.5
+    save_checkpoint(d, 4, tree,
+                    extra_meta={"kmeans_model": model._config()})
+    with pytest.raises(CheckpointCorruptError, match="quantization scales"):
+        KMeansModel.restore(d, 4)
+
+
 def test_plan_remesh_keeps_tp():
     plan = plan_remesh(512 - 64, model_parallel=16)
     assert plan["model"] == 16

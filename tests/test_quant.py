@@ -1,0 +1,284 @@
+"""Quantized scan, exact re-rank (DESIGN.md §13): the symmetric int8
+scheme's error bounds, the margin-bound survivor sets whose exact f32
+re-rank is bit-identical to the f32 oracle (property-based, including
+adversarial near-ties that force the full-f32 fallback), pallas/xla
+parity of the int8 kernel, the int8 resident engine's bit-identical fit,
+and the quantized predict path on the served model."""
+import pytest
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import OpCounter, assign_nearest, fit_k2means
+from repro.core.distance import chunked_candidate_argmin
+from repro.core.model import KMeansModel
+from repro.data import gmm_blobs
+from repro.kernels import quant
+from repro.kernels.ops import bounded_predict_assign_int8, choose_group_bn
+
+# the property tests run as deterministic seed sweeps everywhere and as
+# hypothesis fuzzing on top wherever hypothesis is installed
+try:
+    import hypothesis
+    from hypothesis import given, strategies as st
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=20,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    hypothesis.settings.load_profile("ci")
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- quantization scheme -------------------------------------------------
+
+
+def _check_roundtrip_error_bound(rows, d, seed):
+    """Coordinate error <= scale/2, row l2 error <= the worst-case
+    radius — the two facts the margin bound is built on."""
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(rows, d) * 10.0 ** rng.uniform(-3, 2)).astype(np.float32)
+    q, s = quant.quantize_rows(jnp.asarray(x))
+    assert q.dtype == jnp.int8
+    xd = np.asarray(quant.dequantize_rows(q, s))
+    s = np.asarray(s)
+    assert (np.abs(xd - x) <= s[:, None] * (0.5 + 1e-5) + 1e-30).all()
+    err = np.linalg.norm((xd - x).astype(np.float64), axis=1)
+    rad = np.asarray(quant.quant_radius(jnp.asarray(s), d))
+    assert (err <= rad * (1 + 1e-5) + 1e-30).all()
+
+
+@pytest.mark.parametrize("rows,d,seed", [
+    (1, 1, 0), (3, 5, 1), (17, 24, 2), (17, 5, 3), (3, 24, 4)])
+def test_quantize_roundtrip_error_bound(rows, d, seed):
+    _check_roundtrip_error_bound(rows, d, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from((1, 3, 17)), st.sampled_from((1, 5, 24)),
+           st.integers(0, 10_000))
+    def test_quantize_roundtrip_error_bound_fuzz(rows, d, seed):
+        _check_roundtrip_error_bound(rows, d, seed)
+
+
+def test_center_quant_exact_residual_and_norms():
+    """CenterQuant carries the exact dequantized norms and the exact
+    per-row residual (always <= the worst-case radius)."""
+    rng = np.random.RandomState(1)
+    c = jnp.asarray(rng.randn(16, 8).astype(np.float32) * 3.0)
+    cq = quant.center_quant(c)
+    cd = np.asarray(quant.dequantize_rows(cq.q, cq.scale))
+    np.testing.assert_allclose(np.asarray(cq.sq), (cd * cd).sum(-1),
+                               rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(cq.err),
+        np.linalg.norm(np.asarray(c) - cd, axis=1), rtol=1e-5, atol=1e-7)
+    rad = np.asarray(quant.quant_radius(cq.scale, 8))
+    assert (np.asarray(cq.err) <= rad * (1 + 1e-5)).all()
+
+
+def test_quantize_tiles_shared_scale():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(12, 5).astype(np.float32))
+    q, srow = quant.quantize_tiles(x, tile=4)
+    assert q.shape == (12, 5) and srow.shape == (12,)
+    s = np.asarray(srow)
+    for g in range(3):                       # one scale per 4-row tile
+        assert (s[4 * g:4 * g + 4] == s[4 * g]).all()
+    xd = np.asarray(quant.dequantize_rows(q, srow))
+    assert (np.abs(xd - np.asarray(x)) <= s[:, None] * (0.5 + 1e-5)).all()
+
+
+# -- argmin exactness against the f32 oracle -----------------------------
+
+
+def _scan_rerank_argmin(x, c, cand, r):
+    """The model/engine composition in miniature: int8 approx scan ->
+    exact f32 re-rank of survivors -> full-f32 fallback on overflow."""
+    xq, xsc = quant.quantize_rows(x)
+    xerr = jnp.linalg.norm(x - quant.dequantize_rows(xq, xsc), axis=1)
+    cq = quant.center_quant(c)
+    surv, nsv, _ = quant.approx_scan(xq, xsc, xerr, cq, cand, r=r)
+    ids = jnp.where(surv >= 0,
+                    jnp.take_along_axis(cand, jnp.maximum(surv, 0), axis=1),
+                    -1)
+    sq = quant.rerank_exact(x, c, ids)
+    a, d1, _ = quant.first_min_top2(sq, ids)
+    fb = np.asarray(nsv > r)
+    a_f, d1_f, _ = quant.full_candidate_top2_sq(x, c, cand)
+    a = np.where(fb, np.asarray(a_f), np.asarray(a))
+    d1 = np.where(fb, np.asarray(d1_f), np.asarray(d1))
+    return a, d1, np.asarray(nsv), fb
+
+
+def _check_rerank_matches_oracle(rows, d, k, seed):
+    """The §13 theorem: the re-ranked argmin is bit-identical to the
+    restricted f32 oracle on arbitrary data."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(rows, d).astype(np.float32))
+    c = jnp.asarray((rng.randn(k, d) * rng.uniform(0.1, 4))
+                    .astype(np.float32))
+    kn = min(6, k)
+    cand = jnp.asarray(np.stack([
+        rng.choice(k, size=kn, replace=False) for _ in range(rows)
+    ]).astype(np.int32))
+    a, d1, _, _ = _scan_rerank_argmin(x, c, cand, r=4)
+    a_o, d1_o = chunked_candidate_argmin(x, c, cand)
+    np.testing.assert_array_equal(a, np.asarray(a_o))
+    # distances agree to f32 ulp (the oracle einsum reduces at a
+    # different width); the bit-identity contract is the argmin
+    np.testing.assert_allclose(d1, np.asarray(d1_o), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("rows,d,k,seed", [
+    (1, 2, 8, 0), (5, 8, 32, 1), (31, 8, 8, 2), (31, 2, 32, 3),
+    (5, 2, 8, 4), (31, 8, 32, 5)])
+def test_int8_rerank_argmin_matches_oracle(rows, d, k, seed):
+    _check_rerank_matches_oracle(rows, d, k, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from((1, 5, 31)), st.sampled_from((2, 8)),
+           st.sampled_from((8, 32)), st.integers(0, 10_000))
+    def test_int8_rerank_argmin_matches_oracle_fuzz(rows, d, k, seed):
+        _check_rerank_matches_oracle(rows, d, k, seed)
+
+
+def test_near_ties_force_fallback_and_stay_exact():
+    """Adversarial candidates: 12 centers within quantization noise of
+    each other make every candidate a margin survivor, overflowing r=4 —
+    the fallback must fire and still reproduce the oracle bit-for-bit
+    (including the duplicated-row exact tie)."""
+    rng = np.random.RandomState(3)
+    d, k = 8, 12
+    base = rng.randn(d).astype(np.float32) * 2.0
+    c = np.array(base[None, :] + 1e-4 * rng.randn(k, d).astype(np.float32),
+                 copy=True)
+    c[1] = c[0]                               # exact duplicate -> exact tie
+    c = jnp.asarray(c)
+    x = jnp.asarray(base[None, :].repeat(9, 0)
+                    + 0.3 * rng.randn(9, d).astype(np.float32))
+    cand = jnp.tile(jnp.arange(k, dtype=jnp.int32), (9, 1))
+    a, d1, nsv, fb = _scan_rerank_argmin(x, c, cand, r=4)
+    assert fb.any(), "near-ties never overflowed the survivor width"
+    assert (nsv[fb] > 4).all()
+    a_o, d1_o = chunked_candidate_argmin(x, c, cand)
+    np.testing.assert_array_equal(a, np.asarray(a_o))
+    np.testing.assert_allclose(d1, np.asarray(d1_o), rtol=1e-6, atol=1e-6)
+
+
+# -- kernel parity + the int8 bounded predict op -------------------------
+
+
+def test_bounded_predict_int8_backend_parity():
+    """The pallas survivor kernel (interpret mode) and the chunked jnp
+    scan produce identical survivors, argmins, distances and fallback
+    flags — and both match the restricted oracle."""
+    rng = np.random.RandomState(4)
+    n, d, k, kn = 300, 16, 24, 6
+    q = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    c = jnp.asarray(rng.randn(k, d).astype(np.float32) * 2.0)
+    dc = np.linalg.norm(np.asarray(c)[:, None] - np.asarray(c)[None], axis=2)
+    neighbors = jnp.asarray(np.argsort(dc, axis=1)[:, :kn].astype(np.int32))
+    routed = assign_nearest(q, c).astype(jnp.int32)
+    cq = quant.center_quant(c)
+    outs = {}
+    for backend in ("xla", "pallas"):
+        outs[backend] = bounded_predict_assign_int8(
+            q, c, cq, neighbors, routed, bn=16, bkn=4, r=8,
+            backend=backend, interpret=True)
+    for ox, op in zip(outs["xla"], outs["pallas"]):
+        np.testing.assert_array_equal(np.asarray(ox), np.asarray(op))
+    a_o, d_o = chunked_candidate_argmin(q, c, neighbors[routed])
+    np.testing.assert_array_equal(np.asarray(outs["xla"][0]),
+                                  np.asarray(a_o))
+    np.testing.assert_allclose(np.asarray(outs["xla"][1]),
+                               np.asarray(d_o), rtol=1e-6, atol=1e-6)
+
+
+def test_choose_group_bn_itemsize_aware():
+    """int8 tiles earn a larger point block than f32 at VMEM-limited d,
+    and the n/k heuristic is unchanged when VMEM is not the binder."""
+    assert choose_group_bn(1 << 20, 8, d=32256, itemsize=1) \
+        > choose_group_bn(1 << 20, 8, d=32256, itemsize=4)
+    assert choose_group_bn(4096, 32, d=16, itemsize=1) \
+        == choose_group_bn(4096, 32, d=16, itemsize=4)
+
+
+# -- the int8 resident engine + served model -----------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted_pair():
+    """One f32 resident fit and one int8 fit from the same init."""
+    n, d, k, kn = 2048, 16, 32, 8
+    allx = gmm_blobs(KEY, n + 512, d, true_k=k)
+    x, q = allx[:n], allx[n:]
+    init = x[jax.random.choice(KEY, n, shape=(k,), replace=False)]
+    a0 = assign_nearest(x, init).astype(jnp.int32)
+    cf, ci = OpCounter(), OpCounter()
+    res_f = fit_k2means(x, init, a0, kn=kn, max_iters=12, backend="xla",
+                        residency="resident", counter=cf)
+    res_i = fit_k2means(x, init, a0, kn=kn, max_iters=12, backend="xla",
+                        precision="int8", counter=ci)
+    return x, q, res_f, res_i, cf, ci
+
+
+def test_engine_int8_fit_bit_identical(fitted_pair):
+    """The quantized arena never changes the trajectory: assignments,
+    centers and energy all equal the f32 engine's bit-for-bit."""
+    _, _, res_f, res_i, _, _ = fitted_pair
+    np.testing.assert_array_equal(np.asarray(res_f.assignment),
+                                  np.asarray(res_i.assignment))
+    np.testing.assert_array_equal(np.asarray(res_f.centers),
+                                  np.asarray(res_i.centers))
+    assert res_f.energy == res_i.energy
+    assert res_f.iterations == res_i.iterations
+
+
+def test_engine_int8_counted_lanes(fitted_pair):
+    """The int8 fit moves its scan to the int8/bytes lanes: far fewer
+    counted f32 distances, int8 ops > 0, and < half the scan traffic."""
+    _, _, _, _, cf, ci = fitted_pair
+    assert ci.int8_ops > 0 and cf.int8_ops == 0
+    assert ci.distances < cf.distances
+    assert ci.bytes_scanned < cf.bytes_scanned
+    # moved arena rows are cheaper by exactly the dtype ratio: the two
+    # trajectories are bit-identical, so the same rows moved — int8 rows
+    # cost d + 4*(state+scale) bytes vs 4*(d+state) f32 (d=16: 32 vs 76)
+    assert ci.bytes_gathered * 76 == cf.bytes_gathered * 32
+    assert ci.bytes_scattered * 76 == cf.bytes_scattered * 32
+
+
+def test_int8_precision_validation(fitted_pair):
+    x, _, res_f, _, _, _ = fitted_pair
+    init = res_f.centers
+    a0 = res_f.assignment
+    with pytest.raises(ValueError, match="precision"):
+        fit_k2means(x, init, a0, kn=8, max_iters=2, precision="int4")
+    with pytest.raises(ValueError, match="guards"):
+        fit_k2means(x, init, a0, kn=8, max_iters=2, precision="int8",
+                    guards=True)
+    with pytest.raises(ValueError, match="precision"):
+        KMeansModel.from_result(res_f, kn=8, precision="fp8")
+
+
+def test_predict_int8_bit_identical_and_charged(fitted_pair):
+    """model.predict(precision='int8') returns the f32 path's assignments
+    bit-for-bit while charging <= 8 f32 re-ranks per query plus a dense
+    int8 lane; a precision='int8' model dispatches there by default."""
+    _, q, res_f, _, _, _ = fitted_pair
+    model = KMeansModel.from_result(res_f, kn=8, backend="xla")
+    cf, ci = OpCounter(), OpCounter()
+    a_f = np.asarray(model.predict(q, counter=cf))
+    a_i = np.asarray(model.predict(q, counter=ci, precision="int8"))
+    np.testing.assert_array_equal(a_i, a_f)
+    assert ci.int8_ops > 0 and cf.int8_ops == 0
+    assert ci.distances < cf.distances
+    assert ci.bytes_scanned < cf.bytes_scanned
+    m8 = KMeansModel.from_result(res_f, kn=8, backend="xla",
+                                 precision="int8")
+    np.testing.assert_array_equal(np.asarray(m8.predict(q)), a_f)

@@ -11,9 +11,10 @@ import pytest
 from repro.core import OpCounter, fit
 from repro.core.model import KMeansModel
 from repro.ft import FaultInjector, poisson_trace
-from repro.serve import (FULL, PROBE_SHRINK, ROUTE_ONLY, SHED, BucketLadder,
-                         DegradeConfig, DegradeLadder, Overloaded,
-                         ServeConfig, ServeExecutor, requests_from_trace)
+from repro.serve import (FULL, INT8_SCAN, PROBE_SHRINK, ROUTE_ONLY, SHED,
+                         BucketLadder, DegradeConfig, DegradeLadder,
+                         Overloaded, ServeConfig, ServeExecutor,
+                         requests_from_trace)
 
 pytestmark = pytest.mark.serve
 
@@ -61,22 +62,25 @@ def test_bucket_ladder():
 def test_degrade_ladder_hysteresis():
     lad = DegradeLadder(DegradeConfig())
     # one rung per tick on the way up, even under extreme pressure
-    assert lad.observe(99.0, 0.0) == PROBE_SHRINK
-    assert lad.observe(99.0, 1.0) == ROUTE_ONLY
-    assert lad.observe(99.0, 2.0) == SHED
+    assert lad.observe(99.0, 0.0) == INT8_SCAN
+    assert lad.observe(99.0, 1.0) == PROBE_SHRINK
+    assert lad.observe(99.0, 2.0) == ROUTE_ONLY
     assert lad.observe(99.0, 3.0) == SHED
+    assert lad.observe(99.0, 4.0) == SHED
     # coming down needs down_patience consecutive calm ticks
-    assert lad.observe(0.0, 4.0) == SHED
-    assert lad.observe(0.0, 5.0) == ROUTE_ONLY
+    assert lad.observe(0.0, 5.0) == SHED
+    assert lad.observe(0.0, 6.0) == ROUTE_ONLY
     # a pressure blip resets the calm streak
-    assert lad.observe(0.9, 6.0) == ROUTE_ONLY
-    assert lad.observe(0.0, 7.0) == ROUTE_ONLY
-    assert lad.observe(0.0, 8.0) == PROBE_SHRINK
+    assert lad.observe(0.9, 7.0) == ROUTE_ONLY
+    assert lad.observe(0.0, 8.0) == ROUTE_ONLY
     assert lad.observe(0.0, 9.0) == PROBE_SHRINK
-    assert lad.observe(0.0, 10.0) == FULL
+    assert lad.observe(0.0, 10.0) == PROBE_SHRINK
+    assert lad.observe(0.0, 11.0) == INT8_SCAN
+    assert lad.observe(0.0, 12.0) == INT8_SCAN
+    assert lad.observe(0.0, 13.0) == FULL
     # every transition was recorded with its timestamp
     assert [(o, n) for _, o, n, _ in lad.transcript] == [
-        (0, 1), (1, 2), (2, 3), (3, 2), (2, 1), (1, 0)]
+        (0, 1), (1, 2), (2, 3), (3, 4), (4, 3), (3, 2), (2, 1), (1, 0)]
 
 
 # -- admission control ----------------------------------------------------
@@ -153,8 +157,9 @@ def test_jit_cache_bounded_by_ladder(served):
 
 
 def test_degraded_rungs_quality(served):
-    """Probe-shrink and route-only served under overload still agree
-    with brute force on >= 95% of rows (the graceful part)."""
+    """Degraded rungs served under overload still agree with brute
+    force on >= 95% of rows (the graceful part; the int8_scan rung is
+    bit-identical, so only deeper rungs can cost recall)."""
     from repro.core.distance import chunked_argmin_sqdist
     res, q = served
     ex = _executor(res, queue_bound=64, deadline=5e-4)
@@ -166,13 +171,14 @@ def test_degraded_rungs_quality(served):
     resps = ex.run_trace(reqs)
     correct = total = 0
     for r, req in zip(resps, reqs):
-        if r.ok and r.rung in (PROBE_SHRINK, ROUTE_ONLY):
+        if r.ok and r.rung in (INT8_SCAN, PROBE_SHRINK, ROUTE_ONLY):
             correct += int((np.asarray(r.result)
                             == a_true[req.meta]).sum())
             total += len(req.meta)
     assert total, "overload never degraded"
     assert correct / total >= 0.95
-    assert ex.counter.degrades["probe_shrink"] \
+    assert ex.counter.degrades["int8_scan"] \
+        + ex.counter.degrades["probe_shrink"] \
         + ex.counter.degrades["route_only"] > 0
 
 
