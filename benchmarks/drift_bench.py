@@ -1,0 +1,267 @@
+"""Drift-robustness benchmark: windowed streaming vs periodic re-fit
+(DESIGN.md §14).
+
+The ISSUE 9 acceptance gate, on a drifting-mixture trace at
+(n=65536, k=512, kn=32): component means walk every stream epoch and a
+fraction of the components are born/die mid-trace. A windowed streaming
+model (sliding-window eviction + decayed statistics + drift-guard
+center repair + warm-start stream bounds) must track a periodic full
+re-fit over the same window to within 1.05x energy at <= 0.25x its
+counted distance ops, and a chaos replay (drift burst + poisoned batch
++ arena pool exhaustion) must heal back inside the 1.05x band within 2
+refresh periods with zero invariant-guard failures. Writes
+BENCH_drift.json: per-checkpoint energies/ops plus the acceptance
+summary.
+
+    PYTHONPATH=src python -m benchmarks.drift_bench [--fast | --smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+# energy band defining both acceptance gates (tracking and healing)
+ACCEPT_RATIO = 1.05
+# streaming must cost at most this fraction of the re-fit distance ops
+OPS_RATIO = 0.25
+
+
+def drift_stream(seed: int, m: int, d: int, kc: int, T: int,
+                 speed: float = 0.5, churn: float = 0.02):
+    """T epochs of a drifting Gaussian mixture, one (m, d) batch per
+    epoch: every component mean walks ``speed`` per epoch along its own
+    direction, and a ``churn`` fraction of components die at T/3 while
+    the same number are born at 2T/3 — each new component budding 4σ
+    off a surviving parent, the way real streams grow modes — so the
+    stream has both slow drift and cluster birth/death."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    mu0 = rng.normal(0.0, 10.0, size=(kc, d))
+    v = rng.normal(size=(kc, d))
+    v *= speed / np.maximum(np.linalg.norm(v, axis=1, keepdims=True), 1e-9)
+    nc = max(1, int(churn * kc))
+    dying = rng.choice(kc, size=nc, replace=False)
+    survivors = np.setdiff1d(np.arange(kc), dying)
+    parents = rng.choice(survivors, size=nc, replace=False)
+    buds = rng.normal(size=(nc, d))
+    buds *= 4.0 / np.maximum(np.linalg.norm(buds, axis=1, keepdims=True),
+                             1e-9)
+    # born components ride their parent's walk from their birth epoch
+    mu_born = mu0[parents] + buds
+    v_born = v[parents]
+    batches = []
+    t_die, t_birth = T // 3, 2 * T // 3
+    for t in range(T):
+        active = np.ones(kc, bool)
+        active[dying] = t < t_die
+        comps = rng.choice(np.flatnonzero(active), size=m)
+        x = mu0[comps] + t * v[comps] + rng.normal(size=(m, d))
+        if t >= t_birth:
+            # reallocate a share of the rows to the newborn components
+            share = rng.random(m) < nc / kc
+            idx = np.flatnonzero(share)
+            bc = rng.choice(nc, size=idx.size)
+            x[idx] = mu_born[bc] + t * v_born[bc] \
+                + rng.normal(size=(idx.size, d))
+        batches.append(x.astype(np.float32))
+    return batches
+
+
+def _window_energy(model, x_win):
+    """Exact clustering energy of the current centers on the window."""
+    import jax.numpy as jnp
+    from repro.core.distance import chunked_argmin_sqdist
+    _, d2 = chunked_argmin_sqdist(jnp.asarray(x_win), model.centers)
+    return float(jnp.sum(d2))
+
+
+def _stream_run(batches, res, x0, *, k, kn, W, R, counter,
+                record_epochs=False, guard=False):
+    """Stream every batch after the seed through one windowed model.
+    Returns (model, per-epoch or per-checkpoint energies, guard
+    failures). Chaos faults fire through any active FaultInjector."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.model import KMeansModel
+    from repro.ft.invariants import (resident_violations,
+                                     streaming_violations)
+
+    m_rows = batches[0].shape[0]
+    T = len(batches)
+    model = KMeansModel.from_result(
+        res, x0, kn=kn, capacity=(W + 2) * m_rows, window=W,
+        half_life=2.0 * W, count_floor=0.05, drift_guard=True,
+        refresh_every=R)
+    energies, failures = {}, 0
+    for t in range(1, T):
+        model.partial_fit(jnp.asarray(batches[t]), counter=counter,
+                          validate="sanitize", on_full="degrade",
+                          stream="bench")
+        if guard:
+            owned = model.w_pts > 0
+            v = resident_violations(model.state, n=model.capacity,
+                                    owned=owned)
+            sv = streaming_violations(
+                model.state, model.e_pts, model.w_pts,
+                jnp.int32(model.batches_seen - 1),
+                jnp.float32(model.count_floor), window=model.window)
+            failures += int(jnp.sum(v)) + int(jnp.sum(sv))
+        if record_epochs or (t >= W and ((t - W) % R == 0
+                                         or t == T - 1)):
+            x_win = np.concatenate(batches[max(t - W + 1, 0):t + 1])
+            energies[t] = _window_energy(model, x_win)
+    return model, energies, failures
+
+
+def run(fast: bool = False, out: str | None = None, shape=None):
+    """Benchmark entry point (also used by benchmarks.run). ``shape``
+    optionally overrides (batch, d, k, kn, epochs, window, refit_every,
+    fit_iters) — smoke mode uses it to keep the schema check tiny."""
+    import jax
+    import numpy as np
+    from repro.core import OpCounter, fit
+    from repro.ft import FaultInjector
+
+    from benchmarks.common import emit
+
+    if out is None:
+        out = "BENCH_drift.fast.json" if fast else "BENCH_drift.json"
+    m, d, k, kn, T, W, R, fit_iters = shape or (
+        (512, 16, 64, 16, 16, 8, 4, 10) if fast
+        else (2048, 32, 512, 32, 32, 16, 8, 15))
+    key = jax.random.PRNGKey(0)
+    batches = drift_stream(0, m, d, k, T)
+    rows, records = [], []
+
+    # seed model: one full fit on the first epoch's batch
+    x0 = batches[0]
+    res0 = fit(x0, k, kn=kn, max_iters=fit_iters, key=key,
+               init="kmeanspp")
+
+    # 1. windowed streaming over the whole trace (counted ops include
+    # the folds, evictions, repairs and refresh rebuilds)
+    ctr_s = OpCounter()
+    t0 = time.perf_counter()
+    model, e_stream, _ = _stream_run(batches, res0, x0, k=k, kn=kn, W=W,
+                                     R=R, counter=ctr_s)
+    wall_s = time.perf_counter() - t0
+
+    # 2. periodic full re-fit on the same window at every checkpoint
+    # (the accuracy oracle the stream must track at a fraction of the
+    # counted distance ops)
+    ctr_r = OpCounter()
+    e_refit = {}
+    t0 = time.perf_counter()
+    for t in sorted(e_stream):
+        x_win = np.concatenate(batches[max(t - W + 1, 0):t + 1])
+        r = fit(x_win, k, kn=kn, max_iters=fit_iters,
+                key=jax.random.fold_in(key, t), init="kmeanspp",
+                counter=ctr_r)
+        e_refit[t] = float(r.energy)
+    wall_r = time.perf_counter() - t0
+
+    ratios = {t: e_stream[t] / e_refit[t] for t in e_refit}
+    for t in sorted(ratios):
+        rows.append(["checkpoint", t, round(e_stream[t], 1),
+                     round(e_refit[t], 1), round(ratios[t], 4)])
+    # the gate reads the final checkpoint — the steady state after the
+    # stream has absorbed the churn; mid-churn transients are reported
+    # per checkpoint above (and in the runs payload)
+    t_final = max(ratios)
+    energy_ratio = ratios[t_final]
+    energy_ratio_max = max(ratios.values())
+    ops_ratio = ctr_s.distances / max(ctr_r.distances, 1.0)
+    records.append({"run": "stream", "wall_s": wall_s,
+                    "distances": ctr_s.distances,
+                    "energy": {str(t): e for t, e in e_stream.items()},
+                    "evicted_rows": model.evicted_rows,
+                    "repaired_centers": model.repaired_centers,
+                    "degraded_folds": model.degraded_folds})
+    records.append({"run": "refit", "wall_s": wall_r,
+                    "distances": ctr_r.distances,
+                    "energy": {str(t): e for t, e in e_refit.items()}})
+
+    # 3. chaos replay: drift burst + poisoned batch + arena pool
+    # exhaustion mid-trace, guards checked every epoch. Healing is
+    # measured against the fault-free streaming run on the clean window.
+    tb, tp, te = T // 2, T // 2 + 1, T // 2 + 2
+    ctr_c = OpCounter()
+    t0 = time.perf_counter()
+    with FaultInjector(seed=0,
+                       drift_burst={tb - 1: 5.0},
+                       nan_batches={tp - 1: max(4, m // 16)},
+                       exhaust_arena=(te - 1,)) as inj:
+        model_c, e_chaos, failures = _stream_run(
+            batches, res0, x0, k=k, kn=kn, W=W, R=R, counter=ctr_c,
+            record_epochs=True, guard=True)
+    wall_c = time.perf_counter() - t0
+    # fault-free per-epoch reference for the healing band
+    ctr_f = OpCounter()
+    _, e_clean, _ = _stream_run(batches, res0, x0, k=k, kn=kn, W=W, R=R,
+                                counter=ctr_f, record_epochs=True)
+    heal = {t: e_chaos[t] / e_clean[t] for t in sorted(e_clean)}
+    recovery = None
+    for t in sorted(heal):
+        if t >= te and heal[t] <= ACCEPT_RATIO:
+            recovery = t - te
+            break
+    records.append({"run": "chaos", "wall_s": wall_c,
+                    "fault_epochs": {"drift_burst": tb,
+                                     "nan_batch": tp,
+                                     "exhaust_arena": te},
+                    "events": [[int(b), kind, float(v)]
+                               for b, kind, v in inj.events],
+                    "heal_ratio": {str(t): rr for t, rr in heal.items()},
+                    "guard_failures": failures,
+                    "sanitized_rows": ctr_c.sanitized_rows,
+                    "evicted_rows": model_c.evicted_rows,
+                    "repaired_centers": model_c.repaired_centers})
+    rows.append(["chaos_recovery_epochs", recovery, "", "",
+                 round(max(heal[t] for t in heal if t >= te), 4)])
+    emit(rows, ["row", "epoch", "stream_energy", "refit_energy", "ratio"])
+
+    summary = {
+        "n": T * m, "d": d, "k": k, "kn": kn, "batch": m, "epochs": T,
+        "window": W, "refit_every": R, "fit_iters": fit_iters,
+        "energy_ratio_stream_vs_refit": round(float(energy_ratio), 6),
+        "energy_ratio_max_checkpoint": round(float(energy_ratio_max), 6),
+        "energy_within_1p05x": bool(energy_ratio <= ACCEPT_RATIO),
+        "ops_ratio_stream_vs_refit": round(float(ops_ratio), 6),
+        "ops_within_0p25x": bool(ops_ratio <= OPS_RATIO),
+        "chaos_recovery_epochs": recovery,
+        "chaos_recovered_within_2_refresh":
+            bool(recovery is not None and recovery <= 2 * R),
+        "chaos_guard_failures": failures,
+        "evicted_rows": model.evicted_rows,
+        "repaired_centers": model.repaired_centers,
+        "degraded_folds": model.degraded_folds,
+        "wall_s": {"stream": round(wall_s, 3), "refit": round(wall_r, 3),
+                   "chaos": round(wall_c, 3)},
+    }
+    print(f"# drift summary: stream energy {energy_ratio:.4f}x refit "
+          f"(acceptance: <= {ACCEPT_RATIO}) at {ops_ratio:.4f}x its "
+          f"distance ops (acceptance: <= {OPS_RATIO}), chaos healed "
+          f"{recovery} epochs after the last fault "
+          f"(acceptance: <= {2 * R}) with {failures} guard failures, "
+          f"{model.evicted_rows} rows evicted / "
+          f"{model.repaired_centers} centers repaired at n={T * m}, "
+          f"k={k}, kn={kn}, W={W}")
+    with open(out, "w") as f:
+        json.dump({"fast": fast, "runs": records, "summary": summary}, f,
+                  indent=2)
+    print(f"# wrote {out}")
+    print("RESULT " + json.dumps(summary))
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shape for the CI schema check")
+    args = ap.parse_args()
+    if args.smoke:
+        run(fast=True, shape=(128, 8, 16, 8, 8, 4, 2, 3))
+    else:
+        run(fast=args.fast)

@@ -31,6 +31,7 @@ BENCH_SCHEMAS = {
     "BENCH_ft.json": ("fast", "runs", "summary"),
     "BENCH_serve.json": ("fast", "runs", "summary"),
     "BENCH_quant.json": ("fast", "runs", "summary"),
+    "BENCH_drift.json": ("fast", "runs", "summary"),
     "BENCH_perf.json": ("fast", "sections", "summary_ok", "total_wall_s"),
 }
 
@@ -59,9 +60,9 @@ def _sections(args, outdir=None):
     """The section list; ``outdir`` (smoke mode) redirects every artifact
     and shrinks every shape to schema-check scale."""
     from . import (assign_bench, complexity, convergence_curves, dist_bench,
-                   ft_bench, init_bench, iter_bench, predict_bench,
-                   quant_bench, roofline, serve_bench, table4_init,
-                   table5_speedup)
+                   drift_bench, ft_bench, init_bench, iter_bench,
+                   predict_bench, quant_bench, roofline, serve_bench,
+                   table4_init, table5_speedup)
 
     if outdir is not None:
         out = lambda name: os.path.join(outdir, name)      # noqa: E731
@@ -121,6 +122,11 @@ def _sections(args, outdir=None):
                                      out=out("BENCH_quant.json"),
                                      n=2048, d=16, k=32, kn=8,
                                      n_queries=512, fit_iters=4)),
+            ("drift",
+             "Drift robustness (smoke) -> BENCH_drift.json",
+             lambda: drift_bench.run(fast=True,
+                                     out=out("BENCH_drift.json"),
+                                     shape=(128, 8, 16, 8, 8, 4, 2, 3))),
             ("fig23_convergence",
              "Fig 2/3 (smoke)",
              lambda: convergence_curves.run(k=8, max_iters=3)),
@@ -174,6 +180,10 @@ def _sections(args, outdir=None):
          "Quantized scan, exact re-rank: int8 vs f32 scan traffic "
          "(-> BENCH_quant.json)",
          lambda: quant_bench.run(fast=args.fast)),
+        ("drift",
+         "Drift robustness: windowed streaming vs periodic re-fit "
+         "(-> BENCH_drift.json)",
+         lambda: drift_bench.run(fast=args.fast)),
         ("fig23_convergence",
          "Fig 2/3: convergence curves (energy vs counted ops)",
          lambda: convergence_curves.run(max_iters=15 if args.fast else 30)),

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # CI gate, cheapest first:
 #   1. tier-1: the fast suite (everything not slow-marked) — includes
-#      the -m faults fault-injection / self-healing recovery tests and
-#      the -m serve serving-plane executor tests (admission control,
-#      micro-batching, degradation ladder, burst determinism)
+#      the -m faults fault-injection / self-healing recovery tests, the
+#      -m serve serving-plane executor tests (admission control,
+#      micro-batching, degradation ladder, burst determinism) and the
+#      -m stream drift-robust streaming tests (windowed eviction,
+#      decayed statistics, center repair, warm-start bounds)
 #   2. slow tier: distributed + serve integration and the benchmark
 #      smoke (every BENCH_*.json schema, incl. BENCH_serve.json)
 #
@@ -12,7 +14,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src
 
-echo "== tier 1: fast suite (incl. -m faults recovery tests) =="
+echo "== tier 1: fast suite (incl. -m faults and -m stream tests) =="
 python -m pytest -x -q -m "not slow"
 
 if [[ "${1:-}" == "--tier1-only" ]]; then

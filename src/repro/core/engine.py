@@ -286,6 +286,65 @@ def resident_assignment(state: ResidentState, n: int) -> jax.Array:
                                 jnp.zeros((n,), jnp.int32))
 
 
+@functools.partial(jax.jit, static_argnames=())
+def resident_evict(state: ResidentState, eg: jax.Array, cutoff: jax.Array,
+                   epoch_now: jax.Array, decay: jax.Array,
+                   floor: jax.Array, masters: jax.Array | None = None
+                   ) -> tuple[ResidentState, jax.Array, jax.Array]:
+    """Sliding-window eviction on the resident arena (DESIGN.md §14).
+
+    Retires every live slot whose stream epoch ``eg`` (S,) predates
+    ``cutoff`` through :func:`kernels.ops.plan_layout_evict` (the slots
+    become holes below the watermark, reclaimed only at the next full
+    re-sort) and subtracts the evicted rows from the center sums/counts
+    as an *incremental delta* — the streaming twin of the sparse-repair
+    delta update, so the surviving statistics match a from-scratch
+    fold of the window (bit-exact at ``decay == 1`` on exactly
+    representable data; see the §14 decay algebra otherwise).
+
+    Decay algebra: a row folded at epoch ``e`` has been forgotten down
+    to weight ``w · decay^(epoch_now − e)`` by the per-epoch multiplier,
+    so the subtraction uses that *decayed* weight — subtracting the raw
+    weight would over-evict everything older than one epoch. ``floor``
+    is the same numerically-safe count floor as the fold side: centers
+    whose surviving mass dips under it are frozen at the floor with
+    their sums re-anchored (``sums = c · floor``), never driven toward
+    0/0. ``masters`` supplies the f32 master rows read by the delta —
+    mandatory on an int8 arena (DESIGN.md §13: deltas never re-read
+    quantized rows), optional on f32 where ``xg`` is exact. Returns
+    ``(state', evict_mask, n_evicted)``.
+    """
+    from ..kernels.ops import plan_layout_evict
+    k = state.c.shape[0]
+    bn = state.pid.shape[0] // state.b2c.shape[0]
+    evict, pid2, wg2, n_ev = plan_layout_evict(state.pid, state.wg, eg,
+                                               cutoff)
+    if masters is not None:
+        rows = masters[jnp.clip(state.pid, 0, masters.shape[0] - 1)]
+        rows = rows.astype(jnp.float32)
+    elif state.xsc is not None:
+        rows = state.xg.astype(jnp.float32) * state.xsc[:, None]
+    else:
+        rows = state.xg.astype(jnp.float32)
+    cl = jnp.repeat(jnp.maximum(state.b2c, 0), bn)
+    seg = jnp.where(evict, cl, k)
+    age = jnp.maximum(epoch_now - eg, 0).astype(jnp.float32)
+    w_eff = jnp.where(evict, state.wg * jnp.power(decay, age), 0.0)
+    d_sums = jax.ops.segment_sum(rows * w_eff[:, None], seg,
+                                 num_segments=k + 1)[:k]
+    d_counts = jax.ops.segment_sum(w_eff, seg, num_segments=k + 1)[:k]
+    sums2 = state.sums - d_sums
+    counts2 = jnp.maximum(state.counts - d_counts, 0.0)
+    frozen = counts2 < floor
+    counts2 = jnp.where(frozen, jnp.maximum(floor, counts2), counts2)
+    sums2 = jnp.where(frozen[:, None], state.c * counts2[:, None], sums2)
+    c2 = jnp.where(counts2[:, None] > 0,
+                   sums2 / jnp.maximum(counts2, 1e-12)[:, None], state.c)
+    state2 = state._replace(c=c2, sums=sums2, counts=counts2, pid=pid2,
+                            wg=wg2)
+    return state2, evict, n_ev
+
+
 def k2_resident_iteration(x: jax.Array, w: jax.Array, state: ResidentState,
                           *, kn: int, backend: str = "pallas",
                           chunk: int = 2048, bn: int = 128, bkn: int = 8,
@@ -746,4 +805,5 @@ class K2Step:
 
 __all__ = ["K2State", "K2Step", "ResidentState", "StepStats",
            "center_knn_graph", "init_state", "init_resident_state",
-           "k2_iteration", "k2_resident_iteration", "resident_assignment"]
+           "k2_iteration", "k2_resident_iteration", "resident_assignment",
+           "resident_evict"]

@@ -71,8 +71,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .distance import chunked_candidate_argmin, pairwise_sqdist, sqnorm
-from .engine import ResidentState
+from .distance import (chunked_candidate_argmin, chunked_candidate_top2,
+                       pairwise_sqdist, sqnorm)
+from .engine import ResidentState, resident_evict
 from .lloyd import KMeansResult
 from .opcount import LAYOUT_STATE_LANES, OpCounter
 from ..kernels import quant as _quant
@@ -313,42 +314,84 @@ def _graph_with_dists(c, kn: int):
 
 
 @jax.jit
-def _delta_update(c, sums, counts, xb, wb, ab, decay):
+def _delta_update(c, sums, counts, xb, wb, ab, decay, floor):
     """Sculley per-center running-mean update as an incremental delta:
     ``sums/counts`` absorb the batch (with exponential forgetting
     ``decay``) and every touched center lands on its new running mean —
-    the batched equivalent of sequential ``eta = 1/v[c]`` steps."""
+    the batched equivalent of sequential ``eta = 1/v[c]`` steps.
+
+    ``floor`` is the numerically-safe count floor of the time-decayed
+    statistics (DESIGN.md §14): a center whose decayed mass dips under
+    it is frozen at the floor with its sums re-anchored to the current
+    center (``sums = c · floor``), so long-idle centers hold their
+    position instead of collapsing toward 0/0. ``floor = 0`` disables
+    the clamp exactly (the pre-streaming behavior: empty centers keep
+    ``c`` through the ``counts > 0`` guard)."""
     k = c.shape[0]
     sums2 = sums * decay + jax.ops.segment_sum(xb * wb[:, None], ab,
                                                num_segments=k)
     counts2 = counts * decay + jax.ops.segment_sum(wb, ab, num_segments=k)
+    frozen = counts2 < floor
+    counts2 = jnp.where(frozen, jnp.maximum(floor, counts2), counts2)
+    sums2 = jnp.where(frozen[:, None], c * counts2[:, None], sums2)
     c2 = jnp.where(counts2[:, None] > 0,
                    sums2 / jnp.maximum(counts2, 1e-12)[:, None], c)
     return c2, sums2, counts2
 
 
-@jax.jit
-def _batch_ids(wb, n_rows):
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _batch_ids(wb, n_rows, cap: int = 0):
     """Insertion ids for the live batch rows: dense from ``n_rows`` in
     lane order, the sentinel -1 for w=0 padding lanes — padding neither
     consumes ids/capacity nor appears in the mirrors (consumers map the
-    sentinel out of range and scatter with mode="drop")."""
+    sentinel out of range and scatter with mode="drop"). With ``cap`` the
+    ids wrap modulo the capacity — the windowed ring (DESIGN.md §14):
+    ``n_rows`` is then the monotonic rows-streamed clock and a recycled
+    id is only legal once sliding-window eviction has killed its previous
+    occupant (the caller checks)."""
     live = wb > 0
-    return jnp.where(live, n_rows + jnp.cumsum(live) - 1, -1).astype(
-        jnp.int32)
+    ids = n_rows + jnp.cumsum(live) - 1
+    if cap:
+        ids = ids % cap
+    return jnp.where(live, ids, -1).astype(jnp.int32)
 
 
 @jax.jit
-def _update_mirrors(x_pts, a_pts, w_pts, xb, wb, ab, ids):
+def _update_mirrors(x_pts, a_pts, w_pts, e_pts, xb, wb, ab, ids, epoch):
     """Write the live batch rows into the insertion-order mirrors
-    (re-sorts and ``assignment()`` read them); padding lanes (sentinel
-    ids) drop."""
+    (re-sorts and ``assignment()`` read them) and stamp their stream
+    epoch; padding lanes (sentinel ids) drop."""
     cap = x_pts.shape[0]
     idx = jnp.where(ids >= 0, ids, cap)
     x_pts = x_pts.at[idx].set(xb.astype(x_pts.dtype), mode="drop")
     a_pts = a_pts.at[idx].set(ab.astype(jnp.int32), mode="drop")
     w_pts = w_pts.at[idx].set(wb.astype(w_pts.dtype), mode="drop")
-    return x_pts, a_pts, w_pts
+    e_pts = e_pts.at[idx].set(jnp.int32(epoch), mode="drop")
+    return x_pts, a_pts, w_pts, e_pts
+
+
+@jax.jit
+def _evict_mirrors(a_pts, w_pts, pid_old, evict):
+    """Park the evicted rows in the insertion-order mirrors: weight 0,
+    cluster 0 — exactly the parked-capacity convention, so the next full
+    re-sort reclaims their arena holes into cluster 0's parked pool."""
+    cap = a_pts.shape[0]
+    idx = jnp.where(evict & (pid_old >= 0), pid_old, cap)
+    a_pts = a_pts.at[idx].set(0, mode="drop")
+    w_pts = w_pts.at[idx].set(0.0, mode="drop")
+    return a_pts, w_pts
+
+
+@jax.jit
+def _slot_epochs(pid, e_pts):
+    """Per-slot stream epochs gathered from the insertion-order epoch
+    mirror; free slots (pid < 0) read as INT32_MAX so they can never look
+    older than the eviction cutoff."""
+    cap = e_pts.shape[0]
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    eg = e_pts[jnp.clip(pid, 0, cap - 1)] if cap else \
+        jnp.zeros_like(pid)
+    return jnp.where(pid >= 0, eg, big)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "cap"))
@@ -433,6 +476,30 @@ class KMeansModel:
     # dropped whenever the centers/router drift — see _quant_tables
     _qt: typing.Any = dataclasses.field(default=None, repr=False,
                                         compare=False)
+    # -- streaming / drift (DESIGN.md §14) --------------------------------
+    window: int = 0             # sliding window in stream epochs (0 = off)
+    half_life: float = 0.0      # decay half-life in epochs (0: raw decay)
+    count_floor: float = 0.0    # freeze floor for decayed counts
+    drift_guard: bool = False   # EWMA drift detection + center repair
+    rows_streamed: int = 0      # monotonic live-row clock (ring ids)
+    evicted_rows: int = 0       # rows retired by the sliding window
+    repaired_centers: int = 0   # centers re-seated by the drift guard
+    e_pts: jax.Array | None = None    # (cap,) int32 stream-epoch mirror
+    c_motion: jax.Array | None = None  # (k,) cumulative center drift
+    # drift-guard EWMA state (ft.invariants.DriftGuard) and per-stream
+    # warm-start Hamerly bounds — runtime caches, not checkpointed
+    _dg: typing.Any = dataclasses.field(default=None, repr=False,
+                                        compare=False)
+    _streams: dict = dataclasses.field(default_factory=dict, repr=False,
+                                       compare=False)
+
+    def __post_init__(self):
+        if self.e_pts is None:
+            self.e_pts = jnp.full((self.capacity,), -1, jnp.int32)
+        if self.c_motion is None:
+            self.c_motion = jnp.zeros((self.k,), jnp.float32)
+        if self.rows_streamed < self.n_rows:
+            self.rows_streamed = self.n_rows
 
     # -- construction ------------------------------------------------------
 
@@ -446,7 +513,10 @@ class KMeansModel:
                     router_iters: int = 8,
                     refresh_every: int = 8, decay: float = 1.0,
                     bn: int | None = None,
-                    precision: str = "f32") -> "KMeansModel":
+                    precision: str = "f32",
+                    window: int = 0, half_life: float = 0.0,
+                    count_floor: float = 0.0,
+                    drift_guard: bool = False) -> "KMeansModel":
         """Build a model from any :class:`KMeansResult`.
 
         Without ``x`` the model is predict-only plus stats-only
@@ -460,6 +530,9 @@ class KMeansModel:
         if precision not in _PRECISIONS:
             raise ValueError(f"unknown precision {precision!r}; "
                              f"expected one of {_PRECISIONS}")
+        if window < 0 or half_life < 0 or count_floor < 0:
+            raise ValueError("window, half_life and count_floor must be "
+                             ">= 0")
         c = jnp.asarray(result.centers, jnp.float32)
         k, d = c.shape
         kn = min(kn, k)
@@ -474,7 +547,9 @@ class KMeansModel:
                       backend=backend, bkn=bkn, interpret=interpret,
                       route_probes=route_probes, router_iters=router_iters,
                       refresh_every=refresh_every, decay=decay,
-                      precision=precision, batches_seen=0)
+                      precision=precision, batches_seen=0,
+                      window=window, half_life=half_life,
+                      count_floor=count_floor, drift_guard=drift_guard)
         if x is None:
             zerod = jnp.zeros((0, d), jnp.float32)
             zero1 = jnp.zeros((0,), jnp.float32)
@@ -499,6 +574,8 @@ class KMeansModel:
         x_pts = jnp.zeros((cap, d), jnp.float32).at[:n].set(x)
         a_pts = jnp.zeros((cap,), jnp.int32).at[:n].set(a0)
         w_pts = jnp.zeros((cap,), jnp.float32).at[:n].set(1.0)
+        # training rows enter the stream clock at epoch 0
+        e_pts = jnp.full((cap,), -1, jnp.int32).at[:n].set(0)
         xg, pid, wg, b2c, fill, openb = _arena_resort(
             x_pts, a_pts, w_pts, k=k, bn=bn, nbt=nbt)
         zero_s = jnp.zeros((pid.shape[0],), jnp.float32)
@@ -508,7 +585,7 @@ class KMeansModel:
             xg=xg, pid=pid, ug=zero_s, lo_g=zero_s, wg=wg, b2c=b2c,
             fill=fill, openb=openb)
         return cls(state=state, x_pts=x_pts, a_pts=a_pts, w_pts=w_pts,
-                   bn=bn, n_rows=n, **common)
+                   bn=bn, n_rows=n, e_pts=e_pts, rows_streamed=n, **common)
 
     # -- read-side properties ---------------------------------------------
 
@@ -545,8 +622,25 @@ class KMeansModel:
         return self.state.pid.shape[0] > 0
 
     def assignment(self) -> jax.Array:
-        """Insertion-order assignment of every streamed row, (n_rows,)."""
+        """Insertion-order assignment of every streamed row, (n_rows,).
+        Windowed models park evicted rows at weight 0 in cluster 0 —
+        filter by ``w_pts > 0`` (or :meth:`live_rows`) to see only the
+        surviving window."""
         return self.a_pts[:self.n_rows]
+
+    @property
+    def stream_decay(self) -> float:
+        """Effective per-epoch forgetting factor: ``2^(-1/half_life)``
+        when a half-life (in stream epochs) is set, else the raw
+        ``decay`` field (DESIGN.md §14)."""
+        if self.half_life > 0:
+            return float(2.0 ** (-1.0 / self.half_life))
+        return self.decay
+
+    def live_rows(self) -> int:
+        """Rows currently alive in the mirrors (streamed and not yet
+        evicted by the sliding window)."""
+        return int(jnp.sum(self.w_pts > 0))
 
     @property
     def route_groups(self) -> int:
@@ -641,6 +735,67 @@ class KMeansModel:
                 bkn=self.bkn, interpret=self.interpret)
         return _resolve_xla(qb, self.state.c, self.state.prev_nb, routed)
 
+    def _resolve_top2(self, qb: jax.Array, routed: jax.Array):
+        """Resolution with the two best squared distances (the Hamerly
+        bound pair): ``(a, d1_sq, d2_sq)`` over the routed center's
+        kn-neighborhood. Pallas returns squared distances natively; the
+        XLA twin returns true distances, squared here so both backends
+        share one unit."""
+        if self.backend == "pallas":
+            from ..kernels.ops import (bounded_predict_assign_top2,
+                                       choose_group_bn)
+            bn = choose_group_bn(qb.shape[0], self.k, self.d, bkn=self.bkn)
+            return bounded_predict_assign_top2(
+                qb, self.state.c, self.state.prev_nb, routed, bn=bn,
+                bkn=self.bkn, interpret=self.interpret)
+        cand = self.state.prev_nb[routed]
+        a, d1, d2 = chunked_candidate_top2(qb, self.state.c, cand)
+        return a, d1 * d1, d2 * d2
+
+    def _assign_stream(self, qb: jax.Array, stream):
+        """Bounded assignment with per-stream warm-start Hamerly bounds
+        (DESIGN.md §14): correlated query streams (KV decode) carry
+        ``(a, u, lo)`` across batches keyed by stream id. On re-contact
+        the bounds are inflated by the query's own motion ``‖q − q_prev‖``
+        and the centers' accumulated drift since last contact
+        (``c_motion`` deltas — a triangle-inequality upper bound); rows
+        whose inflated ``u < lo`` provably keep their previous center
+        *within the kn-restricted contract* (the second-best center is
+        tracked over the routed neighborhood, the same approximation the
+        router already makes) and charge 1 distance (the ‖Δq‖ norm).
+        Cold rows pay the full bounded route + top-2 resolution and
+        re-arm the bounds exactly. Returns (a, d1_sq, n_counted)."""
+        m = qb.shape[0]
+        routed, u_routed, n_scan = _route(qb, self.state.c, self.router,
+                                          self.route_probes)
+        a, d1_sq, d2_sq = self._resolve_top2(qb, routed)
+        u_new = jnp.sqrt(d1_sq)
+        lo_new = jnp.sqrt(d2_sq)
+        n_nb = jnp.maximum(
+            jnp.sum(self.nb_dist[routed] < 2.0 * u_routed[:, None],
+                    axis=1) - 1, 0)
+        n_cold = n_scan + n_nb
+        rec = self._streams.get(stream)
+        if rec is not None and rec["a"].shape[0] == m \
+                and rec["q"].shape == qb.shape:
+            drift = self.c_motion - rec["motion"]
+            dq = jnp.linalg.norm(qb - rec["q"], axis=1)
+            a_prev = rec["a"]
+            u_b = rec["u"] + dq + drift[a_prev]
+            lo_b = rec["lo"] - dq - jnp.max(
+                drift[self.state.prev_nb[a_prev]], axis=1)
+            warm = u_b < lo_b
+            a = jnp.where(warm, a_prev, a)
+            d1_sq = jnp.where(warm, u_b * u_b, d1_sq)
+            u_new = jnp.where(warm, u_b, u_new)
+            lo_new = jnp.where(warm, jnp.maximum(lo_b, 0.0), lo_new)
+            n_counted = jnp.where(warm, 1, n_cold)
+        else:
+            n_counted = n_cold
+        self._streams[stream] = {"q": qb, "a": a, "u": u_new,
+                                 "lo": lo_new, "motion": self.c_motion}
+        return a, d1_sq, n_counted
+
     def _predict_batch(self, qb: jax.Array, probes: int | None = None,
                        precision: str | None = None):
         """Route + resolve one batch. Returns (a, sqdist, routed,
@@ -689,7 +844,8 @@ class KMeansModel:
     def predict(self, queries: jax.Array, *, batch_size: int = 8192,
                 counter: OpCounter | None = None,
                 return_sqdist: bool = False, validate: str = "raise",
-                retries: int = 3, precision: str | None = None):
+                retries: int = 3, precision: str | None = None,
+                stream: str | None = None):
         """Bounded nearest-center assignment of ``queries``.
 
         Processes ``batch_size`` queries at a time (one compiled program:
@@ -719,6 +875,12 @@ class KMeansModel:
         upcast to f32 once, here at the boundary, so the kernel path
         never relies on silent promotion (and integer inputs are
         rejected rather than promoted).
+
+        ``stream`` names a correlated query stream (DESIGN.md §14): the
+        f32 path then carries warm-start Hamerly bounds across calls
+        (:meth:`_assign_stream`) so repeat regions skip the router for
+        1 counted distance per warm row. The int8 path ignores it (the
+        quantized scan has its own charge model).
         """
         q = jnp.asarray(queries)
         if not jnp.issubdtype(q.dtype, jnp.floating):
@@ -747,13 +909,19 @@ class KMeansModel:
             if pad:                          # pad the tail batch
                 qb = jnp.pad(qb, ((0, pad), (0, 0)))
 
+            warm_key = (stream, lo // bs) \
+                if stream is not None and prec == "f32" else None
+
             def _one_batch(qb=qb):
                 inj = _chaos.active()
                 if inj is not None:
                     inj.maybe_fail("predict")
-                return self._predict_batch(qb, precision=prec)
+                if warm_key is not None:
+                    return self._assign_stream(qb, warm_key)
+                a_b, d_b, _, n_c = self._predict_batch(qb, precision=prec)
+                return a_b, d_b, n_c
 
-            a_b, d_b, routed, n_c = retry_transient(
+            a_b, d_b, n_c = retry_transient(
                 _one_batch, retries=retries, counter=counter)
             a_parts.append(a_b[:m])
             d_parts.append(d_b[:m])
@@ -783,7 +951,8 @@ class KMeansModel:
     def partial_fit(self, batch: jax.Array, w: jax.Array | None = None,
                     *, counter: OpCounter | None = None,
                     validate: str = "raise",
-                    on_full: str = "raise") -> jax.Array:
+                    on_full: str = "raise",
+                    stream: str | None = None) -> jax.Array:
         """Fold one streamed mini-batch into the served clustering.
 
         Assigns the batch by the bounded route, applies the incremental
@@ -806,6 +975,23 @@ class KMeansModel:
         stream, member rows are dropped — and surfaces the degradation
         on ``self.degraded_folds`` / ``counter.degraded_folds``
         (DESIGN.md §11.5).
+
+        Streaming semantics (DESIGN.md §14): every batch is one *stream
+        epoch*. With ``window = W`` set, rows older than the W newest
+        epochs are retired from the resident arena before the append —
+        their (decayed) contribution is subtracted from the center
+        sums/counts as an incremental delta, so at ``decay = 1`` the
+        statistics bit-match a from-scratch fold of the surviving window
+        — and ring ids recycle mirror slots modulo the capacity. With a
+        ``half_life`` set the Sculley statistics decay by
+        ``2^(-1/half_life)`` per epoch, clamped at ``count_floor``. With
+        ``drift_guard`` on, per-center EWMA bands over effective counts
+        and within-cluster energy flag dying/starved centers each batch,
+        and at refresh cadence the worst one is re-seated by one GDI
+        Lemma-1 split of the highest-energy donor
+        (``ft.invariants.repair_dying_centers``). ``stream`` names a
+        correlated stream and carries warm-start Hamerly bounds across
+        folds (:meth:`_assign_stream`).
         """
         if on_full not in ("raise", "degrade"):
             raise ValueError(f"on_full must be 'raise' or 'degrade', "
@@ -839,23 +1025,71 @@ class KMeansModel:
                 if counter is not None:
                     counter.count_sanitized_rows(n_bad)
 
-        ab, _, _, n_counted = self._predict_batch(xb)
+        if stream is not None:
+            ab, d1_sq, n_counted = self._assign_stream(xb, ("fit", stream))
+        else:
+            ab, d1_sq, _, n_counted = self._predict_batch(xb)
 
+        c_entry = self.state.c
+        decay = jnp.float32(self.stream_decay)
+        floor = jnp.float32(self.count_floor)
         c2, sums2, counts2 = _delta_update(
             self.state.c, self.state.sums, self.state.counts, xb, wb, ab,
-            jnp.float32(self.decay))
+            decay, floor)
         st = self.state._replace(c=c2, sums=sums2, counts=counts2,
                                  it=self.state.it + 1)
 
+        # sliding-window eviction (DESIGN.md §14): the fold above already
+        # applied this epoch's decay, so a row folded at epoch e carries
+        # weight w·decay^(epoch_now − e) — resident_evict subtracts
+        # exactly that, keeping the stats equal to a fold of the window
+        epoch_now = self.batches_seen
+        m_live = int(jnp.sum(wb > 0))
+        n_ev = 0
+        if self.window and self.has_arena and m_live:
+            cutoff = epoch_now - self.window + 1
+            if cutoff > 0:
+                eg = _slot_epochs(st.pid, self.e_pts)
+                pid_old = st.pid
+                st, evict, n_ev_a = resident_evict(
+                    st, eg, jnp.int32(cutoff), jnp.int32(epoch_now),
+                    decay, floor, masters=self.x_pts)
+                n_ev = int(n_ev_a)
+                if n_ev:
+                    self.a_pts, self.w_pts = _evict_mirrors(
+                        self.a_pts, self.w_pts, pid_old, evict)
+                    self.evicted_rows += n_ev
+                    if counter is not None:
+                        counter.count_evicted_rows(n_ev)
+                        # subtracting the delta re-reduces sums/counts
+                        counter.add_additions(2 * n_ev)
+                        # pid + wg lanes cleared per retired slot
+                        counter.add_scatter_bytes(n_ev * 8)
+
         resorted = False
         degraded = False
-        m_live = int(jnp.sum(wb > 0))
+        ids = None
         if self.has_arena and m_live:
-            if self.n_rows + m_live > self.capacity:
+            if self.window:
+                ids = _batch_ids(wb, self.rows_streamed, cap=self.capacity)
+                # a recycled ring id whose previous occupant is still live
+                # means the window outgrew the capacity
+                clash = int(jnp.sum(jnp.where(
+                    ids >= 0,
+                    self.w_pts[jnp.clip(ids, 0, self.capacity - 1)] > 0,
+                    False)))
+                full = clash > 0
+                full_msg = (
+                    f"arena ring full: {clash} of {m_live} batch rows "
+                    f"would overwrite live rows (window {self.window} "
+                    f"epochs x batch size > capacity {self.capacity})")
+            else:
+                full = self.n_rows + m_live > self.capacity
+                full_msg = (f"arena full: {self.n_rows} rows + batch "
+                            f"{m_live} > capacity {self.capacity}")
+            if full:
                 if on_full == "raise":
-                    raise ValueError(
-                        f"arena full: {self.n_rows} rows + batch "
-                        f"{m_live} > capacity {self.capacity}")
+                    raise ValueError(full_msg)
                 # graceful degradation: the Sculley stats fold above
                 # already absorbed the batch; skip the member append
                 degraded = True
@@ -863,9 +1097,13 @@ class KMeansModel:
                 if counter is not None:
                     counter.count_degraded_fold()
         if self.has_arena and m_live and not degraded:
-            ids = _batch_ids(wb, self.n_rows)
-            self.x_pts, self.a_pts, self.w_pts = _update_mirrors(
-                self.x_pts, self.a_pts, self.w_pts, xb, wb, ab, ids)
+            if ids is None:
+                ids = _batch_ids(wb, self.n_rows)
+            self.x_pts, self.a_pts, self.w_pts, self.e_pts = \
+                _update_mirrors(self.x_pts, self.a_pts, self.w_pts,
+                                self.e_pts, xb, wb, ab, ids, epoch_now)
+            if inj is not None:
+                st = inj.corrupt_arena(st)
             xg, pid, wg, b2c, fill, openb, ok = _arena_try_append(
                 st, xb, wb, ab, ids, bn=self.bn, cap=self.capacity)
             if not bool(ok):
@@ -875,19 +1113,42 @@ class KMeansModel:
                     bn=self.bn, nbt=st.b2c.shape[0])
             st = st._replace(xg=xg, pid=pid, wg=wg, b2c=b2c, fill=fill,
                              openb=openb)
-            self.n_rows += m_live
+            self.n_rows = min(self.rows_streamed + m_live, self.capacity) \
+                if self.window else self.n_rows + m_live
+        self.rows_streamed += m_live
 
         self.batches_seen += 1
+        self.state = st
+
+        dying = None
+        if self.drift_guard and m_live:
+            from ..ft import invariants as _inv
+            if self._dg is None:
+                self._dg = _inv.init_drift_guard(self.k)
+            eb = jax.ops.segment_sum(jnp.maximum(d1_sq, 0.0) * wb, ab,
+                                     num_segments=self.k)
+            self._dg, dying = _inv.drift_guard_step(
+                self._dg, self.state.counts, eb, floor)
+
         refreshed = self.batches_seen % self.refresh_every == 0
+        if refreshed and dying is not None and bool(jnp.any(dying)):
+            from ..ft.invariants import repair_dying_centers
+            self.repaired_centers += repair_dying_centers(
+                self, dying, counter=counter)
         if refreshed:
             # center-derived structures re-sync with the drifted centers:
             # the kNN graph (resolution) and the closure router (routing)
-            nb, self.nb_dist = _graph_with_dists(st.c, self.kn)
-            st = st._replace(prev_nb=nb)
+            nb, self.nb_dist = _graph_with_dists(self.state.c, self.kn)
+            self.state = self.state._replace(prev_nb=nb)
             self.router = _build_router(
-                st.c, self.route_groups, self.route_cap, self.router_iters)
-        self.state = st
+                self.state.c, self.route_groups, self.route_cap,
+                self.router_iters)
         self._qt = None     # centers drifted: quantized tables are stale
+        # accumulated per-center drift: one net-displacement increment per
+        # fold (a triangle-inequality upper bound on total motion) — the
+        # warm-start stream bounds inflate by deltas of this clock
+        self.c_motion = self.c_motion + jnp.linalg.norm(
+            self.state.c - c_entry, axis=1)
 
         if counter is not None:
             # w=0 padding rows (the fixed-batch-size idiom) charge nothing
@@ -898,7 +1159,7 @@ class KMeansModel:
                 counter.add_distances(
                     self.k * self.k
                     + (self.router_iters + 1) * self.route_groups * self.k)
-            if self.has_arena and not degraded:
+            if self.has_arena and m_live and not degraded:
                 moved = self.capacity if resorted else m_live
                 row_bytes = (self.d + LAYOUT_STATE_LANES) * 4
                 counter.add_gather_bytes(moved * row_bytes)
@@ -920,12 +1181,26 @@ class KMeansModel:
                 "router_iters": self.router_iters,
                 "refresh_every": self.refresh_every, "decay": self.decay,
                 "precision": self.precision,
-                "n_rows": self.n_rows, "batches_seen": self.batches_seen}
+                "n_rows": self.n_rows, "batches_seen": self.batches_seen,
+                # streaming config + decay clock (DESIGN.md §14); the
+                # stream_v2 flag gates the extra tree leaves so pre-§14
+                # checkpoints keep their leaf count and restore unchanged
+                "stream_v2": True,
+                "window": self.window, "half_life": self.half_life,
+                "count_floor": self.count_floor,
+                "drift_guard": self.drift_guard,
+                "rows_streamed": self.rows_streamed,
+                "evicted_rows": self.evicted_rows,
+                "repaired_centers": self.repaired_centers,
+                "degraded_folds": self.degraded_folds}
 
     def _tree(self) -> dict:
         tree = {"state": self.state, "router": self.router,
                 "nb_dist": self.nb_dist, "x_pts": self.x_pts,
-                "a_pts": self.a_pts, "w_pts": self.w_pts}
+                "a_pts": self.a_pts, "w_pts": self.w_pts,
+                # stream_v2 leaves: the per-row epoch mirror (the decay /
+                # eviction clock) and the cumulative center-drift clock
+                "stream": {"e_pts": self.e_pts, "c_motion": self.c_motion}}
         if self.precision == "int8":
             # quantization scales ride the checkpoint (DESIGN.md §13):
             # restore recomputes the tables from the centers and verifies
@@ -961,6 +1236,9 @@ class KMeansModel:
                 "x_pts": jnp.zeros((cap, d), f32),
                 "a_pts": jnp.zeros((cap,), i32),
                 "w_pts": jnp.zeros((cap,), f32)}
+        if cfg.get("stream_v2"):
+            tree["stream"] = {"e_pts": jnp.zeros((cap,), i32),
+                              "c_motion": jnp.zeros((k,), f32)}
         if cfg.get("precision", "f32") == "int8":
             tree["qscale"] = {"c": jnp.zeros((k,), f32),
                               "gc": jnp.zeros((g,), f32)}
@@ -981,6 +1259,7 @@ class KMeansModel:
                 raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
         cfg = load_meta(ckpt_dir, step)["extra"]["kmeans_model"]
         tree = restore_checkpoint(ckpt_dir, step, cls._like_tree(cfg))
+        stream = tree.get("stream", {})
         model = cls(state=tree["state"], router=tree["router"],
                     nb_dist=tree["nb_dist"], x_pts=tree["x_pts"],
                     a_pts=tree["a_pts"], w_pts=tree["w_pts"],
@@ -991,7 +1270,17 @@ class KMeansModel:
                     decay=cfg["decay"],
                     precision=cfg.get("precision", "f32"),
                     n_rows=cfg["n_rows"],
-                    batches_seen=cfg["batches_seen"])
+                    batches_seen=cfg["batches_seen"],
+                    window=cfg.get("window", 0),
+                    half_life=cfg.get("half_life", 0.0),
+                    count_floor=cfg.get("count_floor", 0.0),
+                    drift_guard=cfg.get("drift_guard", False),
+                    rows_streamed=cfg.get("rows_streamed", cfg["n_rows"]),
+                    evicted_rows=cfg.get("evicted_rows", 0),
+                    repaired_centers=cfg.get("repaired_centers", 0),
+                    degraded_folds=cfg.get("degraded_folds", 0),
+                    e_pts=stream.get("e_pts"),
+                    c_motion=stream.get("c_motion"))
         if "qscale" in tree:
             # rebuild the quantized tables from the restored centers and
             # verify the checkpointed scales (see _tree)

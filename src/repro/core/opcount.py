@@ -61,6 +61,9 @@ class OpCounter:
     degraded_folds: float = 0.0
     retries: float = 0.0
     sanitized_rows: float = 0.0
+    # streaming lane (DESIGN.md §14): rows retired by sliding-window
+    # eviction (their subtraction deltas charge ``additions`` as usual)
+    evicted_rows: float = 0.0
     # serving-plane graceful-degradation lane (DESIGN.md §12): one counter
     # per rung of the executor's degradation ladder — probe-shrunk routing,
     # route-only assignment, and load-shed requests (typed Overloaded)
@@ -159,6 +162,9 @@ class OpCounter:
     def count_sanitized_rows(self, n: int) -> None:
         self.sanitized_rows += int(n)
 
+    def count_evicted_rows(self, n: int) -> None:
+        self.evicted_rows += int(n)
+
     def snapshot(self) -> float:
         return self.total
 
@@ -185,6 +191,7 @@ class OpCounter:
             "total_degrades": self.total_degrades,
             "retries": self.retries,
             "sanitized_rows": self.sanitized_rows,
+            "evicted_rows": self.evicted_rows,
             "wall_s": self.wall,
         }
 

@@ -58,6 +58,29 @@ Fault taxonomy (one knob per failure mode the guards must survive):
     paths (``KMeansModel.partial_fit``), counted by ``corrupt_batch``
     calls rather than fit iterations.
 
+Stream-shaped faults for the drift-robust streaming path (DESIGN.md
+§14 — keyed by ``corrupt_batch`` call index, like ``nan_batches``):
+
+``drift_burst``
+    {batch_index: magnitude} — shift every row of that batch by a
+    seeded random unit direction × magnitude (a sudden mean shift
+    mid-stream). Not an invariant violation: the windowed/decayed
+    statistics must *track* it and the drift guard must repair any
+    centers the burst strands.
+``dup_flood``
+    {batch_index: count} — overwrite that many rows with copies of one
+    seeded row of the batch (repeated identical batches skewing the
+    per-center counts).
+``epoch_skew``
+    {batch_index: lag} — deliver the batch that arrived ``lag`` calls
+    ago instead of this one (out-of-order epoch delivery): the stale
+    rows are stamped with the *current* epoch, exactly what a late
+    network delivery does to a window.
+``exhaust_arena``
+    iterable of batch indices — the streaming twin of ``exhaust_pool``:
+    mark every free arena block owned right before that batch's append,
+    forcing ``partial_fit``'s full re-sort fallback.
+
 Traffic-shaped faults for the serving executor (DESIGN.md §12 — these
 key on *request ids* and *executed-batch indices*, the serving plane's
 natural coordinates, and all stay deterministic under the same seed):
@@ -113,7 +136,8 @@ def active() -> "FaultInjector | None":
 
 # kind tags folded into the per-event RNG seed
 _TAGS = {"nan": 1, "inf": 2, "dup": 3, "centers": 4, "bounds": 5,
-         "slots": 6, "batch": 7, "query": 8, "trace": 9}
+         "slots": 6, "batch": 7, "query": 8, "trace": 9, "burst": 10,
+         "flood": 11, "skew": 12}
 
 
 def _norm(sched: Mapping[int, int] | None) -> dict[int, int]:
@@ -143,7 +167,11 @@ class FaultInjector:
                  fail_calls: Mapping[str, Iterable[int]] | None = None,
                  nan_batches: Mapping[int, int] | None = None,
                  poison_queries: Mapping[int, int] | None = None,
-                 slow_consumer: Mapping[int, float] | None = None):
+                 slow_consumer: Mapping[int, float] | None = None,
+                 drift_burst: Mapping[int, float] | None = None,
+                 dup_flood: Mapping[int, int] | None = None,
+                 epoch_skew: Mapping[int, int] | None = None,
+                 exhaust_arena: Iterable[int] = ()):
         self.seed = int(seed)
         self.nan_rows = _norm(nan_rows)
         self.inf_rows = _norm(inf_rows)
@@ -161,10 +189,16 @@ class FaultInjector:
         self.poison_queries = _norm(poison_queries)
         self.slow_consumer = {int(k): float(v)
                               for k, v in (slow_consumer or {}).items()}
+        self.drift_burst = {int(k): float(v)
+                            for k, v in (drift_burst or {}).items()}
+        self.dup_flood = _norm(dup_flood)
+        self.epoch_skew = _norm(epoch_skew)
+        self.exhaust_arena = {int(i) for i in exhaust_arena}
         self.events: list[tuple[int, str, int | float]] = []
         self._calls: dict[str, int] = {}
         self._batches = 0
         self._last_rows: list[int] = []
+        self._recent_batches: list = []
 
     # -- context manager ---------------------------------------------------
 
@@ -249,10 +283,37 @@ class FaultInjector:
         return state._replace(xg=xg)
 
     def corrupt_batch(self, xb):
-        """Per-call streaming-batch corruption (``nan_batches`` keyed by
-        the corrupt_batch call index, starting at 0)."""
+        """Per-call streaming-batch corruption, keyed by the
+        corrupt_batch call index (starting at 0): out-of-order delivery
+        (``epoch_skew``), sudden mean shift (``drift_burst``), identical
+        -row floods (``dup_flood``) and NaN poisoning (``nan_batches``),
+        in that order — a skewed batch can still be burst/poisoned, like
+        a real late delivery riding a drifted stream."""
         b = self._batches
         self._batches += 1
+        orig = xb
+        lag = self.epoch_skew.get(b, 0)
+        if lag and self._recent_batches:
+            old = self._recent_batches[max(len(self._recent_batches)
+                                           - lag, 0)]
+            if old.shape == xb.shape:
+                xb = old
+                self.events.append((b, "epoch_skew", int(lag)))
+        mag = self.drift_burst.get(b, 0.0)
+        if mag:
+            rng = self._rng("burst", b)
+            direction = rng.standard_normal(xb.shape[1])
+            direction /= max(float(np.linalg.norm(direction)), 1e-9)
+            xb = xb + jnp.asarray((mag * direction).astype(np.float32))
+            self.events.append((b, "drift_burst", float(mag)))
+        cnt = self.dup_flood.get(b, 0)
+        if cnt:
+            rng = self._rng("flood", b)
+            src = int(rng.integers(xb.shape[0]))
+            idx = rng.choice(xb.shape[0], size=min(cnt, xb.shape[0]),
+                             replace=False)
+            xb = xb.at[jnp.asarray(idx)].set(xb[src])
+            self.events.append((b, "dup_flood", int(cnt)))
         count = self.nan_batches.get(b, 0)
         if count:
             rng = self._rng("batch", b)
@@ -260,7 +321,24 @@ class FaultInjector:
                              replace=False)
             xb = xb.at[jnp.asarray(idx)].set(jnp.nan)
             self.events.append((b, "nan_batch", int(count)))
+        # epoch_skew replays *as-delivered* batches (pre-corruption)
+        self._recent_batches.append(orig)
+        del self._recent_batches[:-16]
         return xb
+
+    def corrupt_arena(self, state):
+        """Streaming-path free-pool exhaustion (``exhaust_arena``, keyed
+        by the batch index of the last :meth:`corrupt_batch` call): mark
+        every free arena block owned so this batch's sparse append finds
+        ``n_free == 0`` and ``partial_fit`` must take its full re-sort
+        fallback. Invariant-clean, like ``exhaust_pool``."""
+        b = self._batches - 1
+        if b in self.exhaust_arena and state.b2c.shape[0]:
+            n_free = int(jnp.sum(state.b2c < 0))
+            state = state._replace(
+                b2c=jnp.where(state.b2c < 0, 0, state.b2c))
+            self.events.append((b, "exhaust_arena", n_free))
+        return state
 
     def corrupt_queries(self, rid: int, x: "np.ndarray") -> "np.ndarray":
         """Serving-plane poisoned query batch: NaN ``poison_queries[rid]``

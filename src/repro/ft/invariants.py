@@ -52,6 +52,7 @@ seeded at the healed (centers, assignment).
 from __future__ import annotations
 
 import functools
+import typing
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +62,7 @@ from ..core.distance import chunked_argmin_sqdist, sqnorm
 from ..core.engine import K2State, ResidentState, init_state
 
 VIOLATION_LANES = ("centers", "sums", "bounds", "arena")
+STREAM_LANES = ("stale", "occupancy", "floor")
 
 
 # ---------------------------------------------------------------------------
@@ -68,9 +70,16 @@ VIOLATION_LANES = ("centers", "sums", "bounds", "arena")
 # ---------------------------------------------------------------------------
 
 
-def resident_violations(state: ResidentState, *, n: int) -> jax.Array:
+def resident_violations(state: ResidentState, *, n: int,
+                        owned: jax.Array | None = None) -> jax.Array:
     """(4,) int32 violation counters of a (local) resident state; ``n``
-    is the local point count the arena must cover exactly once."""
+    is the local point count the arena must cover exactly once.
+
+    ``owned`` ((n,) bool, optional) marks the ids expected to own a slot
+    — the sliding-window case (DESIGN.md §14), where evicted ids must
+    own *zero* slots (their slot became a hole) while live ids still own
+    exactly one. Default: every id owns exactly one (the append-only
+    contract)."""
     k = state.fill.shape[0]
     s_total = state.pid.shape[0]
     nbt = state.b2c.shape[0]
@@ -88,10 +97,16 @@ def resident_violations(state: ResidentState, *, n: int) -> jax.Array:
     arena = jnp.sum((state.b2c < -1) | (state.b2c >= k)).astype(i32)
     arena += jnp.sum((state.fill < 0) | (state.fill > bn)).astype(i32)
     arena += jnp.sum(state.pid >= n).astype(i32)
-    # slot ownership: every local point owns exactly one slot
+    # slot ownership: every local point owns exactly one slot. Under a
+    # sliding window (`owned` = live mask) an evicted id legally owns 0
+    # (its slot is a hole) or 1 (re-parked by a re-sort) — never more;
+    # live ids still own exactly one.
     occ = jnp.zeros((n,), i32).at[jnp.clip(state.pid, 0, n - 1)] \
         .add((state.pid >= 0).astype(i32))
-    arena += jnp.sum(occ != 1).astype(i32)
+    if owned is None:
+        arena += jnp.sum(occ != 1).astype(i32)
+    else:
+        arena += jnp.sum(jnp.where(owned, occ != 1, occ > 1)).astype(i32)
     # free blocks own nothing
     freeb = jnp.repeat(state.b2c < 0, bn)
     arena += jnp.sum(freeb & (state.pid >= 0)).astype(i32)
@@ -110,6 +125,40 @@ def resident_violations(state: ResidentState, *, n: int) -> jax.Array:
                                    >= state.fill[:, None])
     arena += jnp.sum(in_tail & (tail_pid >= 0)).astype(i32)
     return jnp.stack([centers, sums, bounds, arena])
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def streaming_violations(state: ResidentState, e_pts, w_pts, epoch_now,
+                         floor, *, window: int) -> jax.Array:
+    """(3,) int32 streaming-invariant counters (DESIGN.md §14), the
+    eviction-side extension of :func:`resident_violations`:
+
+    ``stale``
+        live arena slots whose stream epoch fell out of the window
+        (older than the ``window`` newest epochs) — eviction missed them
+    ``occupancy``
+        live arena slots whose mirror row is dead (weight 0), plus the
+        absolute difference between the live-slot and live-mirror-row
+        counts — the hole population must exactly mirror the evicted
+        rows
+    ``floor``
+        decayed per-center counts below the freeze floor
+    """
+    i32 = jnp.int32
+    cap = e_pts.shape[0]
+    live = (state.pid >= 0) & (state.wg > 0)
+    idx = jnp.clip(state.pid, 0, max(cap - 1, 0))
+    if window:
+        eg = jnp.where(live, e_pts[idx], epoch_now)
+        stale = jnp.sum(live & (eg < epoch_now - window + 1)).astype(i32)
+    else:
+        stale = jnp.zeros((), i32)
+    mirror_live = jnp.where(live, w_pts[idx] > 0, True)
+    occ = jnp.sum(~mirror_live).astype(i32)
+    occ += jnp.abs(jnp.sum(live.astype(i32))
+                   - jnp.sum((w_pts > 0).astype(i32)))
+    under = jnp.sum(state.counts < floor - 1e-6 * (1.0 + floor))
+    return jnp.stack([stale, occ, under.astype(i32)])
 
 
 def k2_violations(state: K2State, *, n: int) -> jax.Array:
@@ -222,6 +271,135 @@ def split_repair(x, w, a, c, bad: np.ndarray, key, counter=None):
 
 
 # ---------------------------------------------------------------------------
+# Drift guard: EWMA bands + center repair for the streaming model (§14)
+# ---------------------------------------------------------------------------
+
+
+class DriftGuard(typing.NamedTuple):
+    """Per-center EWMA bands the streaming drift detector tracks: the
+    effective (decayed) count and the within-cluster energy folded per
+    ``partial_fit`` batch. ``it`` is the batches-observed clock that
+    gates the warm-up period."""
+    cnt_ewma: jax.Array   # (k,)
+    en_ewma: jax.Array    # (k,)
+    it: jax.Array         # () int32
+
+
+def init_drift_guard(k: int) -> DriftGuard:
+    return DriftGuard(cnt_ewma=jnp.zeros((k,), jnp.float32),
+                      en_ewma=jnp.zeros((k,), jnp.float32),
+                      it=jnp.zeros((), jnp.int32))
+
+
+@jax.jit
+def drift_guard_step(dg: DriftGuard, counts, energy, floor,
+                     beta=0.2, dying_frac=0.05, warmup=8):
+    """One drift-guard observation (jitted, runs every fold).
+
+    ``counts`` are the decayed per-center counts after the fold,
+    ``energy`` the batch's within-cluster energy per center
+    (``Σ w·d²(x, c_a)``). A center is flagged *starved* when its decayed
+    mass sits at the freeze floor (``counts <= 2·floor``, or exactly
+    empty at floor 0) and *dying* when its count has both collapsed
+    under its own EWMA band (``< 0.5·cnt_ewma``) and fallen under
+    ``dying_frac`` of the mean center mass. Flags are suppressed for the
+    first ``warmup`` observations while the bands settle. The energy
+    EWMA is not a flag source — it ranks donors for
+    :func:`repair_dying_centers` (split where the error concentrates).
+    Returns ``(dg', flags (k,) bool)``."""
+    b = jnp.float32(beta)
+    first = dg.it == 0
+    cnt2 = jnp.where(first, counts, (1.0 - b) * dg.cnt_ewma + b * counts)
+    en2 = jnp.where(first, energy, (1.0 - b) * dg.en_ewma + b * energy)
+    starved = counts <= 2.0 * floor + 1e-30
+    dying = (counts < 0.5 * dg.cnt_ewma) \
+        & (counts < dying_frac * jnp.mean(counts))
+    flags = (starved | dying) & (dg.it >= warmup)
+    return DriftGuard(cnt2, en2, dg.it + 1), flags
+
+
+def repair_dying_centers(model, dying, *, counter=None, key=None,
+                         max_repairs: int = 4) -> int:
+    """Re-seat the worst drift-guard-flagged centers (DESIGN.md §14).
+
+    Each repair is one GDI Lemma-1 ``projective_split`` of the
+    highest-energy donor cluster (by the guard's energy EWMA — split
+    where the error concentrates): the donor keeps side A, the victim
+    (the flagged center with the smallest effective count) takes side B
+    and its member rows. The touched centers get their decayed counts
+    recomputed exactly from the mirrors (``w·decay^age``, clamped at the
+    floor) with sums re-anchored to ``c·counts`` (the freeze
+    convention). Up to ``max_repairs`` victims are re-seated per call
+    (each donor is used at most once — its energy EWMA is stale after a
+    split; the monitor cadence retries next refresh), then the arena is
+    rebuilt by one full re-sort, counted on the same ``split`` repair
+    rung as the fit-time healer. Returns the number of centers re-seated
+    (0 when the model has no member arena or no donor has ≥ 2 live
+    members)."""
+    from ..core.gdi import projective_split
+    from ..core.model import _arena_resort
+    if not model.has_arena:
+        return 0
+    dying_idx = list(np.flatnonzero(np.asarray(jax.device_get(dying))))
+    if not dying_idx:
+        return 0
+    st = model.state
+    k = model.k
+    if key is None:
+        key = jax.random.PRNGKey(model.batches_seen)
+    counts_h = np.asarray(jax.device_get(st.counts), dtype=np.float64)
+    a_h = np.asarray(jax.device_get(model.a_pts)).astype(np.int64)
+    w_h = np.asarray(jax.device_get(model.w_pts)).astype(np.float64)
+    live = w_h > 0
+    # exact decayed member mass: a row folded at epoch e carries
+    # w·decay^(epoch_now − e) (mirror epoch clock)
+    decay = model.stream_decay
+    age = np.maximum(model.batches_seen - 1
+                     - np.asarray(jax.device_get(model.e_pts)), 0)
+    w_eff = np.where(live, w_h * np.power(decay, age), 0.0)
+    en = np.asarray(jax.device_get(model._dg.en_ewma), np.float64).copy() \
+        if model._dg is not None else counts_h.copy()
+    en[np.asarray(dying_idx, np.int64)] = -np.inf
+    c2, sums2, counts2 = st.c, st.sums, st.counts
+    repaired = 0
+    while dying_idx and repaired < max_repairs:
+        member_cnt = np.bincount(a_h[live], minlength=k)
+        en_now = en.copy()
+        en_now[member_cnt < 2] = -np.inf
+        donor = int(np.argmax(en_now))
+        if not np.isfinite(en_now[donor]):
+            break
+        victim = int(min(dying_idx, key=lambda j: counts_h[j]))
+        dying_idx.remove(victim)
+        key, sub = jax.random.split(key)
+        mask = jnp.asarray(live & (a_h == donor))
+        _ma, mb, ca, cb, _pa, _pb = projective_split(
+            model.x_pts, mask, sub)
+        mb_h = np.asarray(jax.device_get(mb))
+        a_h = np.where(mb_h, victim, a_h)
+        en[donor] = -np.inf          # stale after the split: use once
+        for j, cj in ((donor, ca), (victim, cb)):
+            cnt_j = max(float(w_eff[(a_h == j) & live].sum()),
+                        model.count_floor)
+            counts2 = counts2.at[j].set(jnp.float32(cnt_j))
+            sums2 = sums2.at[j].set(cj * jnp.float32(cnt_j))
+        c2 = c2.at[donor].set(ca).at[victim].set(cb)
+        repaired += 1
+        if counter is not None:
+            counter.count_repair("split")
+    if not repaired:
+        return 0
+    model.a_pts = jnp.asarray(a_h.astype(np.int32))
+    xg, pid, wg, b2c, fill, openb = _arena_resort(
+        model.x_pts, model.a_pts, model.w_pts, k=k, bn=model.bn,
+        nbt=st.b2c.shape[0])
+    model.state = st._replace(c=c2, sums=sums2, counts=counts2, xg=xg,
+                              pid=pid, wg=wg, b2c=b2c, fill=fill,
+                              openb=openb)
+    return repaired
+
+
+# ---------------------------------------------------------------------------
 # Heal orchestration (driver hook)
 # ---------------------------------------------------------------------------
 
@@ -327,6 +505,8 @@ def heal_fit(x, w, state, sb, n: int, counter, key, vio):
     return x_dev, w_dev, state
 
 
-__all__ = ["VIOLATION_LANES", "resident_violations", "k2_violations",
-           "make_guard", "recover_assignment_np", "split_repair",
+__all__ = ["VIOLATION_LANES", "STREAM_LANES", "resident_violations",
+           "streaming_violations", "k2_violations", "make_guard",
+           "recover_assignment_np", "split_repair", "DriftGuard",
+           "init_drift_guard", "drift_guard_step", "repair_dying_centers",
            "heal_fit"]

@@ -281,6 +281,34 @@ def plan_layout_repair(b2c: jax.Array, fill: jax.Array, openb: jax.Array,
     return dst_slot, b2c2, fill2, openb2, total_new, n_free
 
 
+@functools.partial(jax.jit, static_argnames=())
+def plan_layout_evict(pid: jax.Array, wg: jax.Array, eg: jax.Array,
+                      cutoff: jax.Array):
+    """Sliding-window eviction plan over the resident arena (DESIGN.md
+    §14): retire every *live* slot whose stream epoch predates
+    ``cutoff``.
+
+    ``pid``/``wg`` are the arena slot arrays, ``eg`` (S,) the per-slot
+    stream epoch (any value on free/parked slots — only live slots,
+    ``pid >= 0 and wg > 0``, are eligible). Eviction rides
+    :func:`plan_layout_repair`'s hole machinery in reverse: a retired
+    slot becomes a hole below its cluster's watermark (``pid = -1``,
+    ``wg = 0``) exactly like a departing row of a sparse repair, so
+    nothing else moves — ``b2c``/``fill``/``openb`` are untouched and
+    the holes are reclaimed only by the next full
+    :func:`resident_regroup`. Returns ``(evict (S,) bool, pid2, wg2,
+    n_evicted)``; the caller subtracts the evicted rows from the center
+    sums/counts as an incremental delta (``core.engine.resident_evict``)
+    so the fit trajectory matches a from-scratch fit on the surviving
+    window."""
+    live = (pid >= 0) & (wg > 0)
+    evict = live & (eg < cutoff)
+    pid2 = jnp.where(evict, -1, pid).astype(jnp.int32)
+    wg2 = jnp.where(evict, 0.0, wg).astype(wg.dtype)
+    n_evicted = jnp.sum(evict.astype(jnp.int32))
+    return evict, pid2, wg2, n_evicted
+
+
 def k2_bounded_assign(x: jax.Array, c: jax.Array, neighbors: jax.Array,
                       a: jax.Array, u: jax.Array, lo: jax.Array,
                       need: jax.Array, *, bn: int, bkn: int = 8,
@@ -344,6 +372,27 @@ def bounded_predict_assign(q: jax.Array, c: jax.Array, neighbors: jax.Array,
                                  routed.astype(jnp.int32), zeros, zeros,
                                  bn=bn, bkn=bkn, interpret=interpret)
     return a, d1
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bkn", "interpret"))
+def bounded_predict_assign_top2(q: jax.Array, c: jax.Array,
+                                neighbors: jax.Array, routed: jax.Array,
+                                *, bn: int = 128, bkn: int = 8,
+                                interpret: bool | None = None):
+    """:func:`bounded_predict_assign` that also returns the second-best
+    squared distance within the resolved k_n-neighborhood — the Hamerly
+    lower bound the per-stream warm-start machinery carries across
+    batches (DESIGN.md §14). Returns (assignment (m,), best sqdist (m,),
+    second-best sqdist (m,)) in query order."""
+    m = q.shape[0]
+    k = c.shape[0]
+    perm, b2c = group_by_cluster_device(routed, k, bn)
+    nb = perm.shape[0] // bn
+    skip = (~jnp.any((perm >= 0).reshape(nb, bn), axis=1)).astype(jnp.int32)
+    zeros = jnp.zeros((m,), jnp.float32)
+    return k2_assign_grouped(q, c, neighbors, perm, b2c, skip,
+                             routed.astype(jnp.int32), zeros, zeros,
+                             bn=bn, bkn=bkn, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bkn", "r", "backend",
@@ -497,7 +546,8 @@ def k2_assign_grouped(x: jax.Array, c: jax.Array, neighbors: jax.Array,
 
 
 __all__ = ["assign_nearest_pallas", "bounded_predict_assign",
-           "bounded_predict_assign_int8", "candidate_assign",
+           "bounded_predict_assign_int8", "bounded_predict_assign_top2",
+           "candidate_assign",
            "candidate_assign_int8_tiled",
            "candidate_assign_rowwise", "candidate_assign_tiled",
            "candidate_tables", "center_knn", "center_sqdist",
@@ -505,7 +555,8 @@ __all__ = ["assign_nearest_pallas", "bounded_predict_assign",
            "cluster_major_pack", "distance_argmin", "group_by_cluster",
            "group_by_cluster_device", "grouped_capacity",
            "k2_assign_grouped", "k2_bounded_assign", "pad_candidates",
-           "plan_layout_repair", "quant", "quantized_scan_rerank",
+           "plan_layout_evict", "plan_layout_repair", "quant",
+           "quantized_scan_rerank",
            "resident_capacity", "resident_regroup",
            "rowwise_grid_steps",
            "scatter_from_grouped", "segmented_scan", "select_clusters",

@@ -212,9 +212,10 @@ def main():
           f"rejected={st['rejected']} "
           f"max_depth={st['max_queue_depth']}/{st['queue_bound']}")
     print(f"ft counters: retries={int(prof['retries'])} "
-          f"(budget {args.retries}/call) repairs={prof['repairs']} "
-          f"degraded_folds={int(prof['degraded_folds'])} "
-          f"sanitized_rows={int(prof['sanitized_rows'])} "
+          f"(budget {args.retries}/call) repairs={st['repairs']} "
+          f"degraded_folds={st['degraded_folds']} "
+          f"evicted_rows={st['evicted_rows']} "
+          f"sanitized_rows={st['sanitized_rows']} "
           f"sheds={prof['degrades']['shed']}")
 
 

@@ -364,9 +364,14 @@ class ServeExecutor:
             inj = _chaos.active()
             if inj is not None:
                 inj.maybe_fail("serve_partial_fit")
+            # per-bucket stream tag: successive folds of one padded shape
+            # carry warm-start Hamerly bounds across batches (DESIGN.md
+            # §14) — correlated decode streams skip the router on repeat
+            # regions, uncorrelated rows just fail the warm test
             return self.model.partial_fit(
                 jnp.asarray(xb), jnp.asarray(wb), counter=self.counter,
-                validate="sanitize", on_full="degrade")
+                validate="sanitize", on_full="degrade",
+                stream=f"bucket{bucket}")
 
         ab = np.asarray(retry_transient(_one, retries=self.cfg.retries,
                                         counter=self.counter))
@@ -432,7 +437,10 @@ class ServeExecutor:
         m = self.model
         if m.has_arena:
             from ..ft.invariants import resident_violations
-            vio = np.asarray(resident_violations(m.state, n=m.capacity))
+            # windowed models: evicted ids legally own 0 slots (§14)
+            owned = (m.w_pts > 0) if getattr(m, "window", 0) else None
+            vio = np.asarray(resident_violations(m.state, n=m.capacity,
+                                                 owned=owned))
         else:
             st = m.state
             vio = np.array([
@@ -489,20 +497,26 @@ class ServeExecutor:
         and the fold schedule are restored)."""
         if self.model is None:
             return
-        d = self.model.d
-        seen = self.model.batches_seen
-        folds = self.model.degraded_folds
+        m = self.model
+        d = m.d
+        # the weight-0 folds are a no-op for the member arena, but a
+        # decayed/windowed model still ticks its epoch clock and decays
+        # its stats per fold — snapshot and restore everything they touch
+        seen, folds = m.batches_seen, m.degraded_folds
+        st0, router0, nbd0 = m.state, m.router, m.nb_dist
+        cm0, dg0 = m.c_motion, m._dg
         for b in self.buckets.rungs:
             qb = jnp.zeros((b, d), jnp.float32)
-            self.model._predict_batch(qb)
-            self.model._predict_batch(qb, precision="int8")
-            self.model._predict_batch(qb, probes=1, precision="int8")
-            self.model.route_batch(qb, probes=1, precision="int8")
-            self.model.partial_fit(qb, jnp.zeros((b,), jnp.float32),
-                                   validate="none")
+            m._predict_batch(qb)
+            m._predict_batch(qb, precision="int8")
+            m._predict_batch(qb, probes=1, precision="int8")
+            m.route_batch(qb, probes=1, precision="int8")
+            m.partial_fit(qb, jnp.zeros((b,), jnp.float32),
+                          validate="none")
             self.compiled_shapes.add((b, d))
-        self.model.batches_seen = seen
-        self.model.degraded_folds = folds
+        m.batches_seen, m.degraded_folds = seen, folds
+        m.state, m.router, m.nb_dist = st0, router0, nbd0
+        m.c_motion, m._dg = cm0, dg0
 
     def jit_cache_sizes(self) -> dict[str, int]:
         """Per-function jit cache sizes of the model's compiled entry
@@ -539,6 +553,13 @@ class ServeExecutor:
             "degrades": dict(self.counter.degrades),
             "compiled_shapes": len(self.compiled_shapes),
             "bucket_ladder": list(self.buckets.rungs),
+            # ft / streaming counters (DESIGN.md §11.5, §14): the fold
+            # path's degradations and the sliding window's evictions
+            "degraded_folds": int(self.counter.degraded_folds),
+            "evicted_rows": int(self.counter.evicted_rows),
+            "repairs": dict(self.counter.repairs),
+            "retries": int(self.counter.retries),
+            "sanitized_rows": int(self.counter.sanitized_rows),
         }
 
 

@@ -22,3 +22,69 @@ def test_repair_sequence_matches_from_scratch(n, k, bn, seed, rounds):
     resident_regroup of the same assignment, falling back to the re-sort
     exactly when the plan reports it must."""
     run_repair_sequence(n, k, bn, seed, rounds)
+
+
+# -- streaming churn (DESIGN.md §14) ----------------------------------------
+# Fixed shapes (n=64, d=4, k=4, batch=16, capacity=256) so every example
+# reuses the same compiled programs; hypothesis varies only the stream.
+
+_CHURN = {}
+
+
+def _churn_seed_model(window, half_life, count_floor):
+    """Windowed model over duplicated integer rows: the fitted centers
+    are exact integer means, so ``sums = c * counts`` seeds the exact
+    member sum and f32 integer arithmetic stays bit-exact."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import fit
+    from repro.core.model import KMeansModel
+
+    if "res" not in _CHURN:
+        base = np.random.default_rng(3).integers(-8, 8, size=(4, 4))
+        x = jnp.repeat(jnp.asarray(base, jnp.float32), 16, axis=0)
+        _CHURN["x"] = x
+        _CHURN["res"] = fit(x, 4, kn=3, max_iters=8,
+                            key=jax.random.PRNGKey(3), init="kmeanspp")
+    return KMeansModel.from_result(
+        _CHURN["res"], _CHURN["x"], kn=3, capacity=256, window=window,
+        half_life=half_life, count_floor=count_floor)
+
+
+@pytest.mark.stream
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(2, 8),
+       st.sampled_from([0.0, 2.0]), st.sampled_from([0.0, 0.25]))
+def test_stream_churn_keeps_invariants(seed, window, nb, half_life,
+                                       count_floor):
+    """Arbitrary append/evict/decay interleavings keep every resident
+    and streaming invariant clean, and at decay=1 the statistics stay
+    bit-equal to a from-scratch fold of the surviving window."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.ft.invariants import (resident_violations,
+                                     streaming_violations)
+
+    m = _churn_seed_model(window, half_life, count_floor)
+    rng = np.random.default_rng(seed)
+    for _ in range(nb):
+        xb = rng.integers(-8, 8, size=(16, m.d)).astype(np.float32)
+        m.partial_fit(jnp.asarray(xb), on_full="degrade")
+    owned = m.w_pts > 0
+    v = np.asarray(resident_violations(m.state, n=m.capacity,
+                                       owned=owned))
+    assert v.tolist() == [0, 0, 0, 0]
+    sv = np.asarray(streaming_violations(
+        m.state, m.e_pts, m.w_pts, jnp.int32(m.batches_seen - 1),
+        jnp.float32(m.count_floor), window=m.window))
+    assert sv.tolist() == [0, 0, 0]
+    if half_life == 0.0 and count_floor == 0.0:
+        live = np.asarray(m.w_pts > 0)
+        a = np.asarray(m.a_pts)
+        xs = np.asarray(m.x_pts)
+        counts_ref = np.bincount(a[live], minlength=m.k) \
+            .astype(np.float32)
+        sums_ref = np.zeros((m.k, m.d), np.float32)
+        np.add.at(sums_ref, a[live], xs[live])
+        assert (np.asarray(m.counts) == counts_ref).all()
+        assert (np.asarray(m.sums) == sums_ref).all()

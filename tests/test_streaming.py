@@ -1,0 +1,235 @@
+"""Drift-robust streaming clustering (DESIGN.md §14): sliding-window
+eviction parity, decayed statistics, drift-guard center repair,
+warm-start Hamerly bounds, checkpoint round-trips of the stream clocks
+and the streaming chaos faults."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OpCounter, fit
+from repro.core.model import KMeansModel
+from repro.data import gmm_blobs
+from repro.ft.chaos import FaultInjector
+from repro.ft.invariants import resident_violations, streaming_violations
+
+pytestmark = pytest.mark.stream
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _windowed_model(n=256, d=8, k=8, cap=512, window=4, **kw):
+    """A small windowed streaming model over integer-valued blobs
+    (integer coordinates make segment-sum folds bit-exact, so eviction
+    parity can be asserted with == rather than allclose)."""
+    x = jnp.round(gmm_blobs(KEY, n, d, true_k=k) * 4.0)
+    res = fit(x, k, kn=4, max_iters=10, key=KEY, init="random")
+    m = KMeansModel.from_result(res, x, kn=4, capacity=cap,
+                                window=window, **kw)
+    return x, m
+
+
+def _batches(seed, nb, bs, d, scale=4.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), nb)
+    return [jnp.round(jax.random.normal(kb, (bs, d)) * scale)
+            for kb in ks]
+
+
+def test_eviction_parity_bit_exact():
+    """At decay=1 on integer data, after streaming past the window the
+    model's sums/counts bit-match a from-scratch fold over exactly the
+    surviving (live) rows: eviction's incremental subtraction loses
+    nothing.
+
+    The seed fit runs on duplicated integer rows so the fitted centers
+    are exact integer means — ``from_result``'s ``sums = c * counts``
+    seed is then the exact member sum and the whole trajectory stays in
+    the f32-exact integer range."""
+    d, k = 8, 8
+    base = jnp.asarray(
+        np.random.default_rng(0).integers(-8, 8, size=(k, d)),
+        jnp.float32)
+    x = jnp.repeat(base, 32, axis=0)                     # n = 256
+    res = fit(x, k, kn=4, max_iters=10, key=KEY, init="kmeanspp")
+    m = KMeansModel.from_result(res, x, kn=4, capacity=512, window=4)
+    for xb in _batches(1, 10, 32, m.d):
+        m.partial_fit(xb)
+    assert m.evicted_rows > 0
+    assert m.live_rows() == 4 * 32            # window x batch rows only
+    live = np.asarray(m.w_pts > 0)
+    a = np.asarray(m.a_pts)
+    xs = np.asarray(m.x_pts)
+    counts_ref = np.bincount(a[live], minlength=m.k).astype(np.float32)
+    sums_ref = np.zeros((m.k, m.d), np.float32)
+    np.add.at(sums_ref, a[live], xs[live])
+    assert (np.asarray(m.counts) == counts_ref).all()
+    assert (np.asarray(m.sums) == sums_ref).all()
+
+
+def test_streaming_invariants_clean():
+    """The §9.1 invariant checker extended for eviction: live ids own
+    exactly one slot, evicted ids at most one (re-parked by a re-sort),
+    no live slot is older than the window, the hole population mirrors
+    the evicted rows, and no center count sits below the floor."""
+    x, m = _windowed_model(count_floor=0.5)
+    for xb in _batches(2, 12, 32, m.d):
+        m.partial_fit(xb)
+    owned = m.w_pts > 0
+    v = resident_violations(m.state, n=m.capacity, owned=owned)
+    assert np.asarray(v).tolist() == [0, 0, 0, 0]
+    sv = streaming_violations(m.state, m.e_pts, m.w_pts,
+                              jnp.int32(m.batches_seen - 1),
+                              jnp.float32(m.count_floor), window=m.window)
+    assert np.asarray(sv).tolist() == [0, 0, 0]
+
+
+def test_half_life_decay_and_floor():
+    """half_life sets the effective per-epoch forgetting factor
+    2^(-1/half_life); with a count_floor the decayed counts freeze at
+    the floor instead of collapsing to 0 (centers stay finite)."""
+    x, m = _windowed_model(window=0, half_life=2.0, count_floor=0.25)
+    assert m.stream_decay == pytest.approx(2.0 ** -0.5)
+    # stream batches that all land far from most centers: untouched
+    # centers decay toward the floor but never through it
+    far = jnp.full((16, m.d), 40.0)
+    for _ in range(30):
+        m.partial_fit(far, on_full="degrade")
+    counts = np.asarray(m.counts)
+    assert np.isfinite(np.asarray(m.centers)).all()
+    assert (counts >= m.count_floor - 1e-6).all()
+    assert counts.min() == pytest.approx(m.count_floor)
+
+
+def test_drift_guard_repairs_dying_centers():
+    """Under sustained drift the EWMA drift guard flags starved/dying
+    centers and repair re-seats them by splitting the highest-energy
+    donor — repaired_centers advances and the repaired clustering stays
+    invariant-clean."""
+    x, m = _windowed_model(window=6, drift_guard=True, count_floor=0.25,
+                           half_life=8.0, cap=1024)
+    shift = jnp.linspace(0.0, 30.0, 40)
+    for i, xb in enumerate(_batches(3, 40, 32, m.d)):
+        m.partial_fit(xb + shift[i], on_full="degrade")
+    assert m.repaired_centers > 0
+    owned = m.w_pts > 0
+    v = resident_violations(m.state, n=m.capacity, owned=owned)
+    assert np.asarray(v).tolist() == [0, 0, 0, 0]
+
+
+def test_warm_start_stream_bounds():
+    """A repeated query batch on a named stream reuses its Hamerly
+    bounds: identical assignments to a cold predict at a fraction of
+    the counted distance charge (1 per warm row)."""
+    x, m = _windowed_model()
+    q = gmm_blobs(jax.random.PRNGKey(9), 64, m.d, true_k=m.k)
+    c_cold = OpCounter()
+    a_cold = m.predict(q, counter=c_cold, stream="s0")
+    c_warm = OpCounter()
+    a_warm = m.predict(q, counter=c_warm, stream="s0")
+    a_ref = m.predict(q)
+    assert (np.asarray(a_warm) == np.asarray(a_ref)).all()
+    assert (np.asarray(a_cold) == np.asarray(a_ref)).all()
+    assert c_warm.total == q.shape[0]          # 1 distance per warm row
+    assert c_warm.total < c_cold.total
+
+
+def test_warm_bounds_survive_center_motion():
+    """partial_fit folds move the centers; the stream bounds inflate by
+    the per-center motion clock, so post-fold warm predicts stay exact
+    (match a fresh cold predict)."""
+    x, m = _windowed_model()
+    q = gmm_blobs(jax.random.PRNGKey(11), 64, m.d, true_k=m.k)
+    m.predict(q, stream="s1")
+    for xb in _batches(4, 3, 32, m.d):
+        m.partial_fit(xb)
+    a_warm = m.predict(q, stream="s1")
+    a_ref = m.predict(q)
+    assert (np.asarray(a_warm) == np.asarray(a_ref)).all()
+
+
+def test_checkpoint_roundtrip_stream_state(tmp_path):
+    """Checkpoints carry the stream config, decay clock (e_pts), center
+    -motion clock and eviction counters, and the restored model's
+    partial_fit trajectory is bit-identical to the original's."""
+    x, m = _windowed_model(half_life=4.0, count_floor=0.1,
+                           drift_guard=True)
+    warm = _batches(5, 6, 32, m.d)
+    for xb in warm:
+        m.partial_fit(xb)
+    m.save(str(tmp_path), step=3)
+    r = KMeansModel.restore(str(tmp_path))
+    assert (r.window, r.half_life, r.count_floor, r.drift_guard) == \
+        (m.window, m.half_life, m.count_floor, m.drift_guard)
+    assert r.rows_streamed == m.rows_streamed
+    assert r.evicted_rows == m.evicted_rows
+    assert (np.asarray(r.e_pts) == np.asarray(m.e_pts)).all()
+    assert (np.asarray(r.c_motion) == np.asarray(m.c_motion)).all()
+    for xb in _batches(6, 4, 32, m.d):
+        a1 = m.partial_fit(xb)
+        a2 = r.partial_fit(xb)
+        assert (np.asarray(a1) == np.asarray(a2)).all()
+    assert (np.asarray(r.counts) == np.asarray(m.counts)).all()
+    assert (np.asarray(r.sums) == np.asarray(m.sums)).all()
+    assert r.evicted_rows == m.evicted_rows
+
+
+def test_stream_chaos_faults_deterministic():
+    """The streaming chaos faults fire as scheduled, record events, and
+    are reproducible: the same seed corrupts two identical batch
+    streams identically."""
+    d = 8
+
+    def run(seed):
+        inj = FaultInjector(seed, drift_burst={2: 5.0}, dup_flood={3: 8},
+                            epoch_skew={4: 2}, nan_batches={5: 3})
+        outs = []
+        for xb in _batches(7, 6, 16, d):
+            outs.append(np.asarray(inj.corrupt_batch(xb)))
+        return inj.events, outs
+
+    ev1, out1 = run(0)
+    ev2, out2 = run(0)
+    _, out3 = run(1)
+    kinds = [k for _, k, _ in ev1]
+    assert kinds == ["drift_burst", "dup_flood", "epoch_skew", "nan_batch"]
+    assert ev1 == ev2
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(a, b)
+    # a different seed picks different rows/directions for the same plan
+    assert any(not np.array_equal(a, b) for a, b in zip(out1, out3))
+
+
+def test_chaos_heals_through_streaming_faults():
+    """A windowed streaming model rides out a drift burst, a poisoned
+    batch and arena-pool exhaustion: the faults fire, partial_fit
+    absorbs them (sanitize + re-sort fallback) and the invariants stay
+    clean afterwards."""
+    x, m = _windowed_model(cap=1024, window=6)
+    ctr = OpCounter()
+    with FaultInjector(0, drift_burst={2: 8.0}, nan_batches={4: 4},
+                       exhaust_arena=(6,)) as inj:
+        for xb in _batches(8, 9, 32, m.d):
+            m.partial_fit(xb, validate="sanitize", counter=ctr,
+                          on_full="degrade")
+    kinds = {k for _, k, _ in inj.events}
+    assert {"drift_burst", "nan_batch", "exhaust_arena"} <= kinds
+    assert ctr.sanitized_rows == 4
+    owned = m.w_pts > 0
+    v = resident_violations(m.state, n=m.capacity, owned=owned)
+    assert np.asarray(v).tolist() == [0, 0, 0, 0]
+    sv = streaming_violations(m.state, m.e_pts, m.w_pts,
+                              jnp.int32(m.batches_seen - 1),
+                              jnp.float32(m.count_floor), window=m.window)
+    assert np.asarray(sv).tolist() == [0, 0, 0]
+
+
+def test_evicted_rows_counted_and_surfaced():
+    """Eviction is visible to the op-accounting plane: the counter's
+    evicted_rows lane matches the model's cumulative counter and rides
+    the profile dict."""
+    x, m = _windowed_model()
+    ctr = OpCounter()
+    for xb in _batches(9, 8, 32, m.d):
+        m.partial_fit(xb, counter=ctr)
+    assert ctr.evicted_rows == m.evicted_rows > 0
+    assert ctr.profile()["evicted_rows"] == ctr.evicted_rows
