@@ -33,7 +33,24 @@ BENCH_SCHEMAS = {
     "BENCH_quant.json": ("fast", "runs", "summary"),
     "BENCH_drift.json": ("fast", "runs", "summary"),
     "BENCH_perf.json": ("fast", "sections", "summary_ok", "total_wall_s"),
+    "k2lint_report.json": ("schema", "version", "passes", "counts",
+                           "findings", "ok"),
 }
+
+
+def _k2lint_section(out_path: str):
+    """Run the k2lint static analyzer end to end and validate the report
+    it writes — the smoke-mode guarantee that the CI lint tier's tooling
+    itself has not rotted (gating happens in scripts/lint.sh)."""
+    from repro.analysis import cli, report as _rep
+    rc = cli.run(out=out_path, quiet=True)
+    if not os.path.isabs(out_path):      # cli.run writes repo-root-relative
+        out_path = os.path.join(cli._repo_root(), out_path)
+    with open(out_path) as fh:
+        rep = json.load(fh)
+    _rep.validate_report(rep)
+    print(f"# k2lint summary: exit={rc} counts={rep['counts']}")
+    return {"exit": rc, "counts": rep["counts"], "ok": rep["ok"]}
 
 
 def _jsonable(v):
@@ -130,6 +147,9 @@ def _sections(args, outdir=None):
             ("fig23_convergence",
              "Fig 2/3 (smoke)",
              lambda: convergence_curves.run(k=8, max_iters=3)),
+            ("k2lint",
+             "k2lint static analysis (smoke) -> k2lint_report.json",
+             lambda: _k2lint_section(out("k2lint_report.json"))),
             ("roofline",
              "Roofline (from dry-run artifacts, if present)",
              lambda: roofline.run()),
@@ -187,6 +207,9 @@ def _sections(args, outdir=None):
         ("fig23_convergence",
          "Fig 2/3: convergence curves (energy vs counted ops)",
          lambda: convergence_curves.run(max_iters=15 if args.fast else 30)),
+        ("k2lint",
+         "k2lint static analysis (-> k2lint_report.json)",
+         lambda: _k2lint_section("k2lint_report.json")),
         ("roofline",
          "Roofline (from dry-run artifacts, if present)",
          lambda: roofline.run()),

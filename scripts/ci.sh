@@ -1,5 +1,9 @@
 #!/usr/bin/env bash
 # CI gate, cheapest first:
+#   0. k2lint: the trace-level static analysis gate (scripts/lint.sh) —
+#      jaxpr hot-path audit, Pallas kernel contracts, counted-op
+#      coverage; blocks on any error finding not in the committed
+#      baseline
 #   1. tier-1: the fast suite (everything not slow-marked) — includes
 #      the -m faults fault-injection / self-healing recovery tests, the
 #      -m serve serving-plane executor tests (admission control,
@@ -13,6 +17,9 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src
+
+echo "== tier 0: k2lint static analysis gate =="
+scripts/lint.sh
 
 echo "== tier 1: fast suite (incl. -m faults and -m stream tests) =="
 python -m pytest -x -q -m "not slow"

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# k2lint: the trace-level static analysis gate (DESIGN.md §15).
+#
+# Runs all three passes — the jaxpr hot-path auditor, the Pallas kernel
+# contract checker and the counted-op coverage lint — writes
+# k2lint_report.json at the repo root and exits non-zero on any error
+# finding not in the committed baseline
+# (src/repro/analysis/baseline.json). Extra args pass through, e.g.:
+#
+#   scripts/lint.sh                     # the CI gate
+#   scripts/lint.sh --update-baseline   # accept current findings (then
+#                                       # edit in per-finding justifications)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src
+exec python -m repro.analysis "$@"

@@ -1,0 +1,26 @@
+"""k2lint: trace-level static analysis of the k²-means hot paths.
+
+DESIGN.md §15. Three passes, all runnable on CPU-only CI with no Pallas
+execution (pure ``jax.make_jaxpr`` abstract evaluation + ``ast`` walks):
+
+``jaxpr_audit``
+    traces every registered jitted entry point (``analysis.registry``)
+    and checks the §3 deferred-host-read contract, dtype discipline
+    (no f64, no unsanctioned dequantization inside int8-scan regions),
+    trace determinism (recompile hazards) and collective placement.
+
+``kernel_contracts``
+    intercepts ``pl.pallas_call`` during abstract tracing to capture
+    each kernel's *real* grid/BlockSpecs and checks tile divisibility,
+    MXU alignment, the VMEM budget and index-map coverage.
+
+``opcount_lint``
+    walks the source for distance-computation idioms and flags any site
+    not paired with an ``OpCounter`` charge (the §2 counted-op
+    methodology).
+
+Findings carry stable fingerprints (``analysis.report``); the committed
+``analysis/baseline.json`` suppresses accepted findings while any new
+``error`` finding fails CI (``scripts/lint.sh``).
+"""
+from .report import Finding, fingerprint  # noqa: F401

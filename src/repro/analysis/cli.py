@@ -1,0 +1,93 @@
+"""k2lint CLI: run all three passes, write ``k2lint_report.json``,
+apply the committed baseline and gate CI (DESIGN.md §15.6).
+
+Exit codes: 0 — no new blocking findings; 1 — new ``error`` findings
+(printed with fingerprints so they can be fixed or, with an audited
+justification, baselined); 2 — the analyzer itself failed.
+
+Usage (see ``scripts/lint.sh``)::
+
+    python -m repro.analysis [--out k2lint_report.json]
+                             [--baseline src/repro/analysis/baseline.json]
+                             [--update-baseline] [--quiet]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from . import jaxpr_audit, kernel_contracts, opcount_lint, report
+
+DEFAULT_BASELINE = "src/repro/analysis/baseline.json"
+
+
+def _repo_root() -> str:
+    """src/repro/analysis/cli.py -> the repo checkout root."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def run(out: str = "k2lint_report.json",
+        baseline: str | None = None,
+        update_baseline: bool = False,
+        quiet: bool = False,
+        repo_root: str | None = None) -> int:
+    root = _repo_root() if repo_root is None else repo_root
+    base_path = os.path.join(root, baseline or DEFAULT_BASELINE)
+
+    findings = []
+    passes = {}
+    for name, pass_run in (("jaxpr_audit", jaxpr_audit.run),
+                           ("kernel_contracts", kernel_contracts.run),
+                           ("opcount_lint", opcount_lint.run)):
+        fs, stats = pass_run(repo_root=root)
+        findings.extend(fs)
+        passes[name] = stats
+        if not quiet:
+            print(f"k2lint: {name}: {stats}")
+
+    report.finalize_findings(findings)
+    baseline_map = report.load_baseline(base_path) \
+        if os.path.exists(base_path) else {}
+    blocking = report.apply_baseline(findings, baseline_map)
+
+    if update_baseline:
+        report.write_baseline(
+            base_path, blocking,
+            "UNREVIEWED (--update-baseline): replace with a per-finding "
+            "justification before committing")
+        if not quiet:
+            print(f"k2lint: wrote {len(blocking)} accepted findings to "
+                  f"{base_path}")
+        blocking = []
+
+    rep = report.make_report(findings, passes, blocking)
+    out_path = out if os.path.isabs(out) else os.path.join(root, out)
+    report.write_report(out_path, rep)
+
+    if not quiet:
+        c = rep["counts"]
+        print(f"k2lint: {c['error']} error / {c['warn']} warn / "
+              f"{c['info']} info findings "
+              f"({c['baselined']} baselined) -> {out_path}")
+        for f in blocking:
+            print(f"k2lint: NEW {f.rule} [{f.fingerprint}] "
+                  f"{f.file}:{f.line} ({f.entry or f.site}): {f.message}")
+    return 1 if blocking else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(prog="k2lint", description=__doc__)
+    p.add_argument("--out", default="k2lint_report.json")
+    p.add_argument("--baseline", default=None)
+    p.add_argument("--update-baseline", action="store_true")
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args(argv)
+    try:
+        return run(out=args.out, baseline=args.baseline,
+                   update_baseline=args.update_baseline, quiet=args.quiet)
+    except Exception as e:  # noqa: BLE001 — analyzer crash != clean tree
+        print(f"k2lint: analyzer failure: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        return 2

@@ -1,0 +1,314 @@
+"""Pass 2 — the Pallas kernel contract checker (DESIGN.md §15.4, K2L20x).
+
+No kernel executes and no BlockSpec is re-declared here: the checker
+monkeypatches ``pl.pallas_call`` while abstract-tracing each registered
+kernel wrapper (``analysis.registry.kernel_entries``), so it captures
+the kernel's *real* grid, BlockSpecs, scratch shapes and operand
+avals — the exact objects Mosaic would lower — and then checks them
+declaratively:
+
+``K2L200``  the kernel failed to trace, or no ``pallas_call`` was
+            observed (registry rot guard).
+``K2L201``  tile divisibility: a block shape that does not divide its
+            operand (Mosaic would pad the remainder tile and the kernel
+            body would read garbage lanes) unless the entry declares
+            ``pad_ok`` — every repo kernel pads or asserts upstream.
+``K2L202``  MXU alignment: matmul-operand blocks whose lane (last) dim
+            is not a multiple of 128 are an ``error`` (the MXU is
+            128×128; a misaligned contraction re-lays-out every tile);
+            sublane (second-minor) dims off the dtype-preferred
+            multiple (f32 8, bf16 16, int8 32 — the pallas guide's tile
+            table) are a ``warn`` (correct but padded in VMEM/VREGs);
+            non-matmul multi-dim blocks with unpadded lanes are
+            ``info``.
+``K2L203``  VMEM footprint: Σ blocked operand bytes ×2 (double
+            buffering) + scratch bytes must fit the same budget
+            ``kernels.ops.choose_group_bn`` sizes against
+            (``ops._VMEM_BUDGET * 4`` bytes) — importing the budget
+            keeps kernel checks and block-size selection in lockstep.
+``K2L204``  index-map discipline: every index map is evaluated over the
+            whole grid in row-major order with the entry's concrete
+            scalar-prefetch values — block indices must stay in range,
+            and every *output* block must be written by exactly one
+            contiguous run of grid steps (an output block revisited
+            after the kernel moved away is re-fetched, silently
+            discarding the earlier partial result) while covering the
+            whole output.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+import math
+import typing
+
+import numpy as np
+
+from .report import Finding
+from .registry import KernelEntry, kernel_entries
+
+# dtype-preferred minimum sublane counts (pallas guide tile table)
+_SUBLANE = {1: 32, 2: 16, 4: 8}
+_LANE = 128
+
+
+@dataclasses.dataclass
+class PallasCallRecord:
+    grid: tuple
+    in_specs: list
+    out_specs: list
+    scratch_shapes: list
+    num_scalar_prefetch: int
+    out_shapes: list          # [(shape, dtype)] per output
+    operands: list            # [(shape, dtype)] per call operand
+
+
+def _as_list(x):
+    if x is None:
+        return []
+    return list(x) if isinstance(x, (tuple, list)) else [x]
+
+
+@contextlib.contextmanager
+def record_pallas_calls(records: list):
+    """Swap ``pl.pallas_call`` for a recording shim for the duration of
+    an abstract trace. The shim still calls through to the real
+    ``pallas_call`` so the trace (and pallas' own trace-time
+    validation) proceeds unchanged — but nothing executes under
+    ``jax.make_jaxpr``."""
+    import jax.experimental.pallas as pl
+    real = pl.pallas_call
+
+    def shim(kernel, *args, **kwargs):
+        inner = real(kernel, *args, **kwargs)
+
+        def wrapped(*ops):
+            import jax.numpy as jnp
+            gs = kwargs.get("grid_spec")
+            if gs is not None:
+                grid = gs.grid
+                in_specs = _as_list(gs.in_specs)
+                out_specs = _as_list(gs.out_specs)
+                scratch = _as_list(getattr(gs, "scratch_shapes", ()))
+                nsp = getattr(gs, "num_scalar_prefetch", 0)
+            else:
+                grid = kwargs.get("grid", ())
+                in_specs = _as_list(kwargs.get("in_specs"))
+                out_specs = _as_list(kwargs.get("out_specs"))
+                scratch = _as_list(kwargs.get("scratch_shapes", ()))
+                nsp = 0
+            out_shape = kwargs.get("out_shape",
+                                   args[0] if args else None)
+            outs = [(tuple(o.shape), np.dtype(o.dtype))
+                    for o in _as_list(out_shape)]
+            grid = (grid,) if isinstance(grid, int) else tuple(grid)
+            records.append(PallasCallRecord(
+                grid=grid, in_specs=in_specs, out_specs=out_specs,
+                scratch_shapes=scratch, num_scalar_prefetch=int(nsp),
+                out_shapes=outs,
+                operands=[(tuple(np.shape(o)),
+                           np.dtype(jnp.result_type(o))) for o in ops]))
+            return inner(*ops)
+        return wrapped
+
+    pl.pallas_call = shim
+    try:
+        yield
+    finally:
+        pl.pallas_call = real
+
+
+def _block_shape(spec, dims):
+    bs = getattr(spec, "block_shape", None)
+    if bs is None:
+        return tuple(dims)
+    return tuple(d if b is None else int(b) for b, d in zip(bs, dims))
+
+
+def _nblocks(dims, block):
+    return tuple(max(1, -(-d // b)) for d, b in zip(dims, block))
+
+
+def _scratch_bytes(s) -> int:
+    shape = getattr(s, "shape", None)
+    dtype = getattr(s, "dtype", None)
+    if shape is None:
+        return 0
+    itemsize = np.dtype(dtype).itemsize if dtype is not None else 4
+    return math.prod(shape) * itemsize
+
+
+def _eval_index_map(spec, step, scalars):
+    fn = getattr(spec, "index_map", None)
+    if fn is None:
+        return None
+    idx = fn(*step, *scalars)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return tuple(int(v) for v in idx)
+
+
+def check_record(entry: KernelEntry,
+                 rec: PallasCallRecord) -> list[Finding]:
+    from ..kernels import ops as kops
+    findings: list[Finding] = []
+
+    def add(rule, site, message, severity="error"):
+        findings.append(Finding(rule=rule, severity=severity,
+                                file=entry.file, line=0,
+                                entry=entry.name, site=site,
+                                message=message))
+
+    data_ops = rec.operands[rec.num_scalar_prefetch:]
+    if len(data_ops) != len(rec.in_specs):
+        add("K2L200", "arity",
+            f"{len(data_ops)} data operands vs {len(rec.in_specs)} "
+            "in_specs — cannot check contracts")
+        return findings
+
+    labeled = (
+        [(f"in[{i}]", spec, shape, dt, i in entry.matmul_operands)
+         for i, (spec, (shape, dt)) in
+         enumerate(zip(rec.in_specs, data_ops))]
+        + [(f"out[{i}]", spec, shape, dt, False)
+           for i, (spec, (shape, dt)) in
+           enumerate(zip(rec.out_specs, rec.out_shapes))])
+
+    # --- K2L201 tile divisibility + K2L202 MXU alignment ----------------
+    vmem_bytes = 0
+    for label, spec, dims, dtype, is_matmul in labeled:
+        block = _block_shape(spec, dims)
+        if len(block) != len(dims):
+            add("K2L201", f"{label}-rank",
+                f"{label}: block rank {len(block)} != operand rank "
+                f"{len(dims)} (shape {dims})")
+            continue
+        vmem_bytes += math.prod(block) * np.dtype(dtype).itemsize * 2
+        for ax, (d, b) in enumerate(zip(dims, block)):
+            if b > d:
+                add("K2L201", f"{label}-ax{ax}",
+                    f"{label}: block dim {b} exceeds operand dim {d} "
+                    f"on axis {ax}")
+            elif d % b and not entry.pad_ok:
+                add("K2L201", f"{label}-ax{ax}",
+                    f"{label}: block dim {b} does not divide operand "
+                    f"dim {d} on axis {ax} and the entry declares no "
+                    "padding")
+        if len(block) >= 2:
+            lane, sub = block[-1], block[-2]
+            sub_min = _SUBLANE.get(np.dtype(dtype).itemsize, 8)
+            if is_matmul:
+                if lane % _LANE:
+                    add("K2L202", f"{label}-lane",
+                        f"{label}: matmul-operand lane dim {lane} is "
+                        f"not a multiple of {_LANE} (MXU tile)")
+                if sub % sub_min and sub != dims[-2]:
+                    add("K2L202", f"{label}-sublane",
+                        f"{label}: matmul-operand sublane dim {sub} "
+                        f"off the {np.dtype(dtype).name}-preferred "
+                        f"multiple of {sub_min} — tiles are padded in "
+                        "VMEM", severity="warn")
+            elif lane % _LANE and lane != dims[-1]:
+                add("K2L202", f"{label}-lane",
+                    f"{label}: tiled lane dim {lane} is lane-padded "
+                    f"(not a multiple of {_LANE})", severity="info")
+
+    # --- K2L203 VMEM footprint vs the choose_group_bn budget ------------
+    vmem_bytes += sum(_scratch_bytes(s) for s in rec.scratch_shapes)
+    budget = kops._VMEM_BUDGET * 4
+    if vmem_bytes > budget:
+        add("K2L203", "vmem",
+            f"per-step VMEM footprint {vmem_bytes} B (blocks double-"
+            f"buffered + scratch) exceeds the choose_group_bn budget "
+            f"{budget} B")
+
+    # --- K2L204 index-map coverage / contiguity / bounds ----------------
+    steps = list(itertools.product(*(range(g) for g in rec.grid)))
+    scalars = entry.scalar_values
+    if rec.num_scalar_prefetch and len(scalars) != rec.num_scalar_prefetch:
+        add("K2L200", "scalar-prefetch",
+            f"kernel prefetches {rec.num_scalar_prefetch} scalar "
+            f"operands but the registry supplies {len(scalars)} "
+            "concrete values — index maps cannot be evaluated")
+        return findings
+
+    for label, spec, dims, dtype, _ in labeled:
+        block = _block_shape(spec, dims)
+        if len(block) != len(dims):
+            continue
+        nblocks = _nblocks(dims, block)
+        seq = []
+        try:
+            for step in steps:
+                idx = _eval_index_map(spec, step, scalars)
+                if idx is None:
+                    break
+                if len(idx) != len(nblocks) or any(
+                        not (0 <= v < nb) for v, nb in zip(idx, nblocks)):
+                    add("K2L204", f"{label}-bounds",
+                        f"{label}: index map returns {idx} at grid step "
+                        f"{step}, outside the {nblocks} block grid")
+                    seq = None
+                    break
+                seq.append(idx)
+        except Exception as e:  # noqa: BLE001
+            add("K2L204", f"{label}-eval",
+                f"{label}: index map failed to evaluate with the "
+                f"registry's scalar values: {type(e).__name__}: {e}")
+            seq = None
+        if not seq or not label.startswith("out"):
+            continue
+        runs: dict[tuple, int] = {}
+        prev = None
+        for idx in seq:
+            if idx != prev:
+                runs[idx] = runs.get(idx, 0) + 1
+                prev = idx
+        split = sorted(i for i, n in runs.items() if n > 1)
+        if split:
+            add("K2L204", f"{label}-revisit",
+                f"{label}: output blocks {split} are written by "
+                "non-contiguous grid steps — the earlier partial "
+                "result is re-fetched stale (accumulate-then-flush "
+                "kernels must keep a block resident for one run)")
+        missing = (set(itertools.product(*(range(nb) for nb in nblocks)))
+                   - set(runs))
+        if missing:
+            add("K2L204", f"{label}-coverage",
+                f"{label}: output blocks {sorted(missing)[:8]} are "
+                "never written by any grid step")
+    return findings
+
+
+def check_kernel(entry: KernelEntry) -> list[Finding]:
+    import jax
+    records: list[PallasCallRecord] = []
+    try:
+        fn, args = entry.build()
+        with record_pallas_calls(records):
+            jax.make_jaxpr(fn)(*args)
+    except Exception as e:  # noqa: BLE001
+        return [Finding(rule="K2L200", severity="error", file=entry.file,
+                        line=0, entry=entry.name, site="trace",
+                        message=f"kernel failed to trace: "
+                                f"{type(e).__name__}: {e}")]
+    if not records:
+        return [Finding(rule="K2L200", severity="error", file=entry.file,
+                        line=0, entry=entry.name, site="no-pallas-call",
+                        message="no pallas_call observed while tracing "
+                                "the kernel entry (wrapper renamed or "
+                                "jit cache bypassed the shim?)")]
+    findings: list[Finding] = []
+    for rec in records:
+        findings.extend(check_record(entry, rec))
+    return findings
+
+
+def run(entries: list[KernelEntry] | None = None,
+        repo_root: str = "") -> tuple[list[Finding], dict]:
+    entries = kernel_entries() if entries is None else entries
+    findings: list[Finding] = []
+    for entry in entries:
+        findings.extend(check_kernel(entry))
+    return findings, {"kernels": len(entries), "findings": len(findings)}

@@ -1,0 +1,320 @@
+"""Pass 3 — counted-op coverage lint (DESIGN.md §15.5, rule K2L301).
+
+The paper's speedup tables are *counted* vector ops (§2): every
+distance-shaped computation must land on an ``OpCounter`` lane or the
+tables silently understate work. This pass walks the AST of every
+module under ``src/repro`` matching distance-computation idioms:
+
+- calls to the distance/assignment helpers (``pairwise_sqdist``,
+  ``chunked_candidate_*``, the kernel wrappers, ``rerank_exact``, ...),
+- ``-2·x@cᵀ``-style norm expansions (a ×2 constant over an
+  einsum/dot/``@`` contraction),
+- residual/energy folds (``sqnorm(a - b)``, ``linalg.norm(a - b)``).
+
+A site passes when any of these hold, otherwise it is a ``K2L301``
+error:
+
+1. its enclosing function also calls an ``OpCounter`` charge method
+   (``add_distances`` / ``add_inner`` / ``add_int8_ops`` /
+   ``add_additions`` / ``add_sort`` / ``charge_iteration`` ...);
+2. its enclosing function (or whole module) appears in
+   :data:`CHARGING_MAP` naming the documented charging caller — the
+   paper methodology charges the *serial algorithm's* op count at the
+   driver layer, so primitive/kernel layers are charged where the
+   count is known (e.g. ``charge_iteration`` reads device StepStats);
+3. the site line or its ``def`` line carries a
+   ``# k2lint: charged-by(<who>)`` or ``# k2lint: ignore[K2L301]``
+   pragma with the reason inline.
+
+Adding a new distance site: either charge it in-function, or register
+it here with the caller that charges it — an unexplained site fails CI.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from .report import Finding
+
+DISTANCE_CALLS = frozenset({
+    # core.distance primitives
+    "pairwise_sqdist", "chunked_argmin_sqdist", "chunked_candidate_argmin",
+    "chunked_candidate_top2", "gather_candidate_sqdist",
+    "clustering_energy",
+    # quantized-scan stages (kernels.quant)
+    "rerank_exact", "approx_scan", "full_candidate_top2_sq",
+    "quantized_scan_rerank",
+    # kernel wrappers (kernels.*)
+    "candidate_assign", "candidate_assign_tiled",
+    "candidate_assign_int8_tiled", "k2_assign_grouped",
+    "k2_bounded_assign", "assign_nearest_pallas", "distance_argmin",
+    "center_sqdist", "center_knn", "center_knn_graph",
+    "bounded_predict_assign", "bounded_predict_assign_top2",
+    "bounded_predict_assign_int8",
+})
+
+CHARGE_CALLS = frozenset({
+    "add_distances", "add_inner", "add_additions", "add_int8_ops",
+    "add_sort", "add_scan_bytes", "charge_iteration",
+})
+
+# Documented charging callers (mechanism 2 above). Keys are
+# "<repo-relative file>::<qualname>" ("*" = the whole module). Values
+# name WHO charges the serial-algorithm count for sites in that scope —
+# these are audited statements, reviewed like baseline entries.
+CHARGING_MAP: dict[str, str] = {
+    # Primitive layer: pure distance helpers with no access to a
+    # counter; the §2 methodology charges their serial cost at every
+    # call site (drivers below, or tests/benchmarks outside src/).
+    "src/repro/core/distance.py::*":
+        "distance primitives — charged at each call site (§2)",
+    # Kernel layer: the executed scans are dense by design; the charged
+    # quantity is the *serial bounded algorithm's* count, which only the
+    # drivers know (device StepStats / survivor lanes).
+    "src/repro/kernels/candidate_assign.py::*":
+        "core.opcount.charge_iteration via StepStats (fit), "
+        "KMeansModel._predict_batch (predict)",
+    "src/repro/kernels/center_knn.py::*":
+        "charge_iteration's k·k graph term",
+    "src/repro/kernels/distance_argmin.py::*":
+        "legacy full-scan baseline — charged n·k by its drivers "
+        "(core.lloyd/minibatch)",
+    "src/repro/kernels/quant.py::*":
+        "int8 lanes: KMeansModel._route_int8 / _predict_batch and "
+        "charge_iteration(precision='int8') charge int8_ops + reranked",
+    "src/repro/kernels/ops.py::*":
+        "fit: charge_iteration via StepStats; predict: "
+        "KMeansModel._predict_batch n_scanned/survivor lanes",
+    "src/repro/kernels/ref.py::*":
+        "interpret-mode oracles for tests — never on a counted path",
+    # Engine layer: iteration bodies emit device StepStats; the host
+    # driver charges them (core.api.fit / streaming partial_fit).
+    "src/repro/core/engine.py::*":
+        "core.opcount.charge_iteration from StepStats every iteration",
+    "src/repro/core/gdi.py::*":
+        "gdi drivers charge per-round segment-scan cost "
+        "(core.api.fit init accounting)",
+    # Attention workload: scores/attends are FLOP-counted by the serve
+    # benchmark, not the clustering op metric (DESIGN §10).
+    "src/repro/models/kv_cluster.py::*":
+        "serve-side FLOP accounting (benchmarks/serve_bench.py); "
+        "router distances charged in KMeansModel.route_batch",
+    "src/repro/kernels/cluster_attend.py::*":
+        "serve-side FLOP accounting (benchmarks/serve_bench.py)",
+    "src/repro/models/attention.py::*":
+        "serve-side FLOP accounting (benchmarks/serve_bench.py); the "
+        "cluster-select scan is the §10 dense-rows-per-query quantity "
+        "KMeansModel.predict charges via dense_distances_per_query",
+    # Baseline algorithms (§2 comparison tables): the jitted step
+    # helpers are charged by their host fit drivers in the same module,
+    # which add the serial algorithm's count every iteration.
+    "src/repro/core/akm.py::_group_centers":
+        "akm() driver: add_distances(3·k·g) coarse-quantiser term",
+    "src/repro/core/akm.py::_akm_assign":
+        "akm() driver: add_distances(n·g + evals + n) per iteration",
+    "src/repro/core/elkan.py::elkan_step":
+        "elkan() driver: add_distances(k²/2 + computed + k) per "
+        "iteration (n·k at init)",
+    "src/repro/core/lloyd.py::lloyd_step":
+        "lloyd() driver: add_distances(n·k) per iteration",
+    "src/repro/core/minibatch.py::minibatch_step":
+        "minibatch() driver: add_distances(batch·k) per step "
+        "(n·k per monitor eval)",
+    "src/repro/core/kmeanspp.py::_ppp_update":
+        "kmeanspp_init() driver: add_distances(n) per sampled center",
+    # Distributed plane: the step closures run under shard_map; the host
+    # fit loop charges the global per-iteration count.
+    "src/repro/core/distributed.py::make_distributed_k2means_step":
+        "distributed_fit: charge_iteration from gathered StepStats",
+    "src/repro/core/distributed.py::make_distributed_lloyd_step":
+        "distributed_fit: add_distances(n·k) per iteration",
+    "src/repro/core/distributed.py::make_distributed_assign":
+        "distributed_fit: final add_distances(n·k) assignment pass",
+    "src/repro/core/distributed.py::_gdi_merge":
+        "_sharded_gdi_seed: add_distances(merge_iters·centers_g·k)",
+    # KMeansModel query plane: the jitted helpers are charged by the
+    # host drivers — predict() charges n_scanned/survivor lanes +
+    # int8_ops/scan_bytes (§2), partial_fit() charges n_counted lanes
+    # and the refresh k² + (iters+1)·g·k graph/router rebuild.
+    "src/repro/core/model.py::_route":
+        "KMeansModel.predict / partial_fit: n_scanned lanes",
+    "src/repro/core/model.py::_route_groups_int8":
+        "KMeansModel.predict: add_int8_ops(nq·dense) + scan_bytes",
+    "src/repro/core/model.py::_route_members_int8":
+        "KMeansModel.predict: add_distances(n_f32 survivors) + "
+        "add_int8_ops(nq·dense)",
+    "src/repro/core/model.py::_resolve":
+        "KMeansModel.predict: add_distances(Σ n_counted)",
+    "src/repro/core/model.py::_resolve_top2":
+        "KMeansModel.partial_fit: add_distances(Σ n_counted live rows)",
+    "src/repro/core/model.py::_resolve_xla":
+        "KMeansModel.predict: add_distances(Σ n_counted)",
+    "src/repro/core/model.py::_assign_stream":
+        "KMeansModel.predict: warm-start rung — n_counted lanes from "
+        "the stream scan",
+    "src/repro/core/model.py::_predict_batch":
+        "KMeansModel.predict: add_distances/add_int8_ops/add_scan_bytes "
+        "from the returned n_counted",
+    "src/repro/core/model.py::_build_router":
+        "KMeansModel.partial_fit refresh: add_distances((iters+1)·g·k); "
+        "the one-time from_result build is model setup outside the §2 "
+        "per-query/per-iteration tables",
+    "src/repro/core/model.py::_graph_with_dists":
+        "KMeansModel.partial_fit refresh: add_distances(k²); fit-side "
+        "graph maintenance charged by charge_iteration's k·k term",
+}
+
+_PRAGMA = re.compile(r"#\s*k2lint:\s*(charged-by\([^)]*\)|ignore\[[A-Z0-9,]+\])")
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _has_contraction(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.MatMult):
+            return True
+        if isinstance(sub, ast.Call) and _call_name(sub) in (
+                "einsum", "dot", "dot_general", "matmul", "tensordot"):
+            return True
+    return False
+
+
+def _is_two(node: ast.AST) -> bool:
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        node = node.operand
+    return isinstance(node, ast.Constant) and node.value in (2, 2.0)
+
+
+def _expansion_site(node: ast.AST) -> bool:
+    """``2 * <contraction>`` — the -2·x@cᵀ norm-expansion idiom."""
+    if not (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult)):
+        return False
+    pairs = ((node.left, node.right), (node.right, node.left))
+    return any(_is_two(a) and _has_contraction(b) for a, b in pairs)
+
+
+def _residual_norm_site(node: ast.Call) -> bool:
+    """``sqnorm(a - b)`` / ``linalg.norm(a - b)`` energy/residual folds."""
+    if _call_name(node) not in ("sqnorm", "norm"):
+        return False
+    return any(isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Sub)
+               for arg in node.args for sub in ast.walk(arg))
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self):
+        self.stack: list[str] = []
+        self.charges: dict[str, bool] = {"<module>": False}
+        self.def_lines: dict[str, int] = {}
+        self.sites: list[tuple[str, int, str, str]] = []
+        # (qualname, line, idiom, token)
+
+    def _qual(self) -> str:
+        return ".".join(self.stack) if self.stack else "<module>"
+
+    def visit_FunctionDef(self, node):
+        self.stack.append(node.name)
+        q = self._qual()
+        self.charges.setdefault(q, False)
+        self.def_lines[q] = node.lineno
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _mark_charge(self):
+        if self.stack:
+            self.charges[self._qual()] = True
+        else:
+            self.charges["<module>"] = True
+
+    def visit_Call(self, node):
+        name = _call_name(node)
+        if name in CHARGE_CALLS:
+            self._mark_charge()
+        elif name in DISTANCE_CALLS:
+            self.sites.append((self._qual(), node.lineno, "call", name))
+        elif _residual_norm_site(node):
+            self.sites.append((self._qual(), node.lineno,
+                               "residual-norm", name))
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node):
+        if _expansion_site(node):
+            self.sites.append((self._qual(), node.lineno, "expansion",
+                               "2*contraction"))
+        self.generic_visit(node)
+
+
+def _charged_by_map(rel: str, qual: str,
+                    charging_map: dict[str, str]) -> str | None:
+    for key in (f"{rel}::{qual}", f"{rel}::{qual.split('.')[0]}",
+                f"{rel}::*"):
+        if key in charging_map:
+            return charging_map[key]
+    return None
+
+
+def lint_source(src: str, rel: str,
+                charging_map: dict[str, str] | None = None
+                ) -> list[Finding]:
+    charging_map = CHARGING_MAP if charging_map is None else charging_map
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding(rule="K2L300", severity="error", file=rel,
+                        line=e.lineno or 0, entry="", site="parse",
+                        message=f"unparseable module: {e.msg}")]
+    lines = src.splitlines()
+    pragma_lines = {i + 1 for i, ln in enumerate(lines)
+                    if _PRAGMA.search(ln)}
+    v = _Visitor()
+    v.visit(tree)
+    findings: list[Finding] = []
+    ordinals: dict[tuple, int] = {}
+    for qual, line, idiom, token in v.sites:
+        if v.charges.get(qual, False):
+            continue
+        if _charged_by_map(rel, qual, charging_map):
+            continue
+        if line in pragma_lines or v.def_lines.get(qual) in pragma_lines:
+            continue
+        key = (qual, idiom, token)
+        ordinals[key] = ordinals.get(key, 0) + 1
+        findings.append(Finding(
+            rule="K2L301", severity="error", file=rel, line=line,
+            entry="", site=f"{qual}:{idiom}:{token}",
+            message=f"distance-computation site ({idiom} '{token}') in "
+                    f"'{qual}' has no OpCounter charge in-function, no "
+                    "CHARGING_MAP entry and no pragma — the §2 counted-"
+                    "op tables would understate this work"))
+    return findings
+
+
+def run(root: str = "src/repro",
+        charging_map: dict[str, str] | None = None,
+        repo_root: str = "") -> tuple[list[Finding], dict]:
+    base = os.path.join(repo_root, root) if repo_root else root
+    findings: list[Finding] = []
+    nfiles = 0
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__", "analysis"))
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, repo_root) if repo_root else path
+            rel = rel.replace(os.sep, "/")
+            nfiles += 1
+            with open(path) as fh:
+                findings.extend(lint_source(fh.read(), rel, charging_map))
+    return findings, {"files": nfiles, "findings": len(findings)}

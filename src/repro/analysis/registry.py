@@ -1,0 +1,430 @@
+"""k2lint registries: the repo's real jitted entry points and Pallas
+kernels (DESIGN.md §15.2).
+
+``audit_entries()`` returns every hot-path entry the jaxpr auditor
+traces — the :class:`core.engine.K2Step` build products across
+backend × residency × precision × placement, the query-time stages of
+:class:`core.model.KMeansModel` (``predict``/``partial_fit`` internals
+and the serve ladder's rungs), the streaming eviction step and the GDI
+round step. ``kernel_entries()`` returns one entry per Pallas kernel
+under ``kernels/`` with a grid/BlockSpec, invoked at MXU-shaped
+representative sizes.
+
+Registering a new entry point: append an :class:`EntryPoint` whose
+``build()`` returns ``(fn, args)`` — ``fn`` is traced with
+``jax.make_jaxpr(fn)(*args)`` (never executed), so tiny shapes are
+fine. Declare ``collective_free=False`` only for sharded entries,
+``int8_region=True`` + ``sanctioned_dequants`` for quantized-scan
+entries (the count of int8→float dequantizations the §13 design
+sanctions — the exact-residual-norm computations and re-rank reads).
+Registering a new kernel: append a :class:`KernelEntry` whose
+``build()`` returns ``(fn, args)`` for the *unjitted* wrapper
+(``fn.__wrapped__``) so repeated runs in one process retrace through
+the ``pl.pallas_call`` interception shim, plus the concrete
+scalar-prefetch values its index maps read.
+
+All builders run on CPU: interpret mode is forced and tracing never
+executes a kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import typing
+
+import numpy as np
+
+# representative trace shapes for the jaxpr audit (tiny: tracing only)
+_N, _D, _K, _KN, _M = 256, 32, 16, 4, 64
+_BN, _BKN = 64, 4
+# representative shapes for the kernel contract pass (MXU-shaped)
+_KD = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    name: str
+    file: str                       # repo-relative file the entry lives in
+    build: typing.Callable          # () -> (fn, args)
+    collective_free: bool = True    # collectives anywhere -> finding
+    int8_region: bool = False       # dtype rule counts dequantizations
+    sanctioned_dequants: int = 0    # allowed int8->float converts (§13)
+    build_alt: typing.Callable | None = None  # args at a 2nd signature
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    name: str
+    file: str
+    build: typing.Callable          # () -> (fn, args); fn unjitted
+    matmul_operands: tuple = ()     # in_spec indices feeding the MXU
+    scalar_values: tuple = ()       # concrete prefetch arrays (index maps)
+    pad_ok: bool = False            # declared padding: divisibility waived
+
+
+def _unjit(fn):
+    """The raw Python function behind a ``jax.jit`` wrapper — retraced on
+    every call, so the pallas_call interception shim always fires."""
+    return getattr(fn, "__wrapped__", fn)
+
+
+def _rng(seed: int = 0):
+    return np.random.default_rng(seed)
+
+
+def _points(n=_N, d=_D, seed=0):
+    import jax.numpy as jnp
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((n, d)), jnp.float32)
+    w = jnp.ones((n,), jnp.float32)
+    return x, w
+
+
+def _seed_centers(x, k=_K):
+    import jax.numpy as jnp
+    c = x[:k]
+    a = (jnp.arange(x.shape[0]) % k).astype(jnp.int32)
+    return c, a
+
+
+def _mesh1():
+    import jax
+    return jax.make_mesh((1,), ("data",))
+
+
+def _k2step(backend, residency, precision="f32", sharded=False, n=_N):
+    from ..core.engine import K2Step
+    return K2Step(k=_K, kn=_KN, backend=backend,
+                  mesh=_mesh1() if sharded else None, bn=_BN, bkn=_BKN,
+                  interpret=True, residency=residency, precision=precision,
+                  regroup_every=4, move_cap=64)
+
+
+def _step_build(backend, residency, precision="f32", sharded=False, n=_N):
+    def build():
+        from ..core import engine
+        x, w = _points(n=n)
+        c, a = _seed_centers(x)
+        step = _k2step(backend, residency, precision, sharded)
+        fn = step.build(n, _D)
+        if residency == "resident":
+            st = step.init_resident(x, w, c, a)
+        else:
+            st = engine.init_state(c, a, _KN)
+        return fn, (x, w, st)
+    return build
+
+
+def _router(c):
+    from ..core.model import _build_router
+    return _build_router(c, g=8, cap=8, iters=2)
+
+
+def _route_build(probes, m=_M):
+    def build():
+        from ..core.model import _route
+        x, _ = _points()
+        c, _ = _seed_centers(x)
+        q, _ = _points(n=m, seed=1)
+        # probes is a static_argnames arg: bind it by keyword so
+        # make_jaxpr does not turn it into a tracer.
+        return functools.partial(_route, probes=probes), (q, c, _router(c))
+    return build
+
+
+def _resolve_build(top2=False, n=_M):
+    def build():
+        import jax.numpy as jnp
+        from ..kernels.ops import (bounded_predict_assign,
+                                   bounded_predict_assign_top2)
+        x, _ = _points()
+        c, _ = _seed_centers(x)
+        q, _ = _points(n=n, seed=1)
+        nb = _neighbors(c)
+        routed = (jnp.arange(n) % _K).astype(jnp.int32)
+        fn = bounded_predict_assign_top2 if top2 else bounded_predict_assign
+        return (functools.partial(fn, bn=_BN, bkn=_BKN, interpret=True),
+                (q, c, nb, routed))
+    return build
+
+
+def _neighbors(c):
+    import jax
+    import jax.numpy as jnp
+    from ..core.distance import pairwise_sqdist
+    _, nb = jax.lax.top_k(-pairwise_sqdist(c, c), _KN)
+    return nb.astype(jnp.int32)
+
+
+def _resolve_int8_build():
+    import jax.numpy as jnp
+    from ..kernels import quant
+    from ..kernels.ops import bounded_predict_assign_int8
+    x, _ = _points()
+    c, _ = _seed_centers(x)
+    q, _ = _points(n=_M, seed=1)
+    routed = (jnp.arange(_M) % _K).astype(jnp.int32)
+    fn = functools.partial(bounded_predict_assign_int8, bn=_BN, bkn=_BKN,
+                           r=4, backend="pallas", interpret=True)
+    return fn, (q, c, quant.center_quant(c), _neighbors(c), routed)
+
+
+def _route_groups_int8_build():
+    from ..core.model import _route_groups_int8
+    from ..kernels import quant
+    q, _ = _points(n=_M, seed=1)
+    gc, _ = _points(n=8, d=_D, seed=2)
+    xq, xsc = quant.quantize_rows(q)
+    return (functools.partial(_route_groups_int8, probes=2),
+            (q, xq, xsc, gc, quant.center_quant(gc)))
+
+
+def _route_members_int8_build():
+    import jax.numpy as jnp
+    from ..core.model import _route_members_int8
+    from ..kernels import quant
+    x, _ = _points()
+    c, _ = _seed_centers(x)
+    q, _ = _points(n=_M, seed=1)
+    xq, xsc = quant.quantize_rows(q)
+    cand = (jnp.arange(_M * 8).reshape(_M, 8) % _K).astype(jnp.int32)
+    return _route_members_int8, (q, xq, xsc, c, quant.center_quant(c), cand)
+
+
+def _delta_update_build():
+    import jax.numpy as jnp
+    from ..core.model import _delta_update
+    x, w = _points(n=_M)
+    c, a = _seed_centers(x, _K)
+    sums = jnp.zeros((_K, _D), jnp.float32)
+    counts = jnp.zeros((_K,), jnp.float32)
+    return _delta_update, (c, sums, counts, x, w,
+                           (jnp.arange(_M) % _K).astype(jnp.int32),
+                           jnp.float32(0.99), jnp.float32(1e-3))
+
+
+def _arena_append_build():
+    import jax.numpy as jnp
+    from ..core.model import _arena_try_append
+    x, w = _points()
+    c, a = _seed_centers(x)
+    step = _k2step("pallas", "resident")
+    st = step.init_resident(x, w, c, a)
+    m = 32
+    xb, wb = _points(n=m, seed=3)
+    ab = (jnp.arange(m) % _K).astype(jnp.int32)
+    ids = jnp.arange(m, dtype=jnp.int32)
+    return (functools.partial(_arena_try_append, bn=_BN, cap=_N),
+            (st, xb, wb, ab, ids))
+
+
+def _evict_build():
+    import jax.numpy as jnp
+    from ..core.engine import resident_evict
+    x, w = _points()
+    c, a = _seed_centers(x)
+    step = _k2step("pallas", "resident")
+    st = step.init_resident(x, w, c, a)
+    eg = jnp.zeros((st.pid.shape[0],), jnp.int32)
+    return resident_evict, (st, eg, jnp.int32(1), jnp.int32(2),
+                            jnp.float32(1.0), jnp.float32(0.0))
+
+
+def _gdi_build():
+    import jax
+    import jax.numpy as jnp
+    from ..core.gdi import gdi_round_step
+    x, _ = _points()
+    nleaf = 4
+    a = (jnp.arange(_N) % nleaf).astype(jnp.int32)
+    centers = jnp.zeros((_K, _D), jnp.float32).at[:nleaf].set(x[:nleaf])
+    energies = jnp.ones((_K,), jnp.float32)
+    sizes = jnp.full((_K,), _N // nleaf, jnp.int32)
+    fn = functools.partial(gdi_round_step, k=_K, bn=_BN, impl="pallas",
+                           interpret=True)
+    return fn, (x, a, centers, energies, sizes, jnp.int32(nleaf),
+                jax.random.PRNGKey(0))
+
+
+def audit_entries() -> list[EntryPoint]:
+    """Every registered hot-path entry the jaxpr auditor traces (≥10 per
+    the §15 contract; currently 18)."""
+    eng = "src/repro/core/engine.py"
+    mod = "src/repro/core/model.py"
+    ops = "src/repro/kernels/ops.py"
+    ents = [
+        # --- K2Step build products (fit engines, DESIGN §8/§9/§13) -----
+        EntryPoint("step/xla-rebuild-f32", eng,
+                   _step_build("xla", "rebuild"),
+                   build_alt=_step_build("xla", "rebuild", n=2 * _N)),
+        EntryPoint("step/pallas-rebuild-f32", eng,
+                   _step_build("pallas", "rebuild"),
+                   build_alt=_step_build("pallas", "rebuild", n=2 * _N)),
+        EntryPoint("step/xla-resident-f32", eng,
+                   _step_build("xla", "resident")),
+        EntryPoint("step/pallas-resident-f32", eng,
+                   _step_build("pallas", "resident")),
+        # §13 sanctioned dequants, exactly two per step trace: the exact
+        # residual-norm pass (quantized_scan_rerank's xerr, ops.py) and
+        # center_quant's distortion-bound round trip (quant.py, called
+        # per-iteration when the step re-quantizes moved centers). The
+        # resident energy/update masters never dequantize (they read x).
+        EntryPoint("step/pallas-resident-int8", eng,
+                   _step_build("pallas", "resident", "int8"),
+                   int8_region=True, sanctioned_dequants=2),
+        # --- sharded placements (§7: hierarchical psum region) ---------
+        EntryPoint("step/pallas-rebuild-sharded", eng,
+                   _step_build("pallas", "rebuild", sharded=True),
+                   collective_free=False),
+        EntryPoint("step/pallas-resident-sharded", eng,
+                   _step_build("pallas", "resident", sharded=True),
+                   collective_free=False),
+        # --- query-time stages (§10) + serve ladder rungs (§12) --------
+        EntryPoint("model/route", mod, _route_build(probes=2),
+                   build_alt=_route_build(probes=2, m=2 * _M)),
+        EntryPoint("model/route-probe-shrink", mod, _route_build(probes=1)),
+        EntryPoint("model/resolve", ops, _resolve_build(),
+                   build_alt=_resolve_build(n=2 * _M)),
+        EntryPoint("model/resolve-top2", ops, _resolve_build(top2=True)),
+        # §13 sanctioned dequants: one xerr residual-norm pass each.
+        EntryPoint("model/route-groups-int8", mod,
+                   _route_groups_int8_build, int8_region=True,
+                   sanctioned_dequants=1),
+        EntryPoint("model/route-members-int8", mod,
+                   _route_members_int8_build, int8_region=True,
+                   sanctioned_dequants=1),
+        EntryPoint("model/resolve-int8", ops, _resolve_int8_build,
+                   int8_region=True, sanctioned_dequants=1),
+        # --- streaming partial_fit internals (§14) ---------------------
+        EntryPoint("model/delta-update", mod, _delta_update_build),
+        EntryPoint("model/arena-append", mod, _arena_append_build),
+        EntryPoint("step/resident-evict", eng, _evict_build),
+        # --- device-resident GDI init round (§5) -----------------------
+        EntryPoint("init/gdi-round-pallas", "src/repro/core/gdi.py",
+                   _gdi_build),
+    ]
+    return ents
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel registry (pass 2)
+# ---------------------------------------------------------------------------
+
+
+def _np_i32(a):
+    return np.asarray(a, np.int32)
+
+
+def _cand_tiled_build():
+    import jax.numpy as jnp
+    from ..kernels.candidate_assign import candidate_assign_tiled
+    r = _rng(0)
+    n, d, t, knp, bn, bkn = 512, _KD, 8, 16, 128, 8
+    x = jnp.asarray(r.standard_normal((n, d)), jnp.float32)
+    ctab = jnp.asarray(r.standard_normal((t, knp, d)), jnp.float32)
+    csq = jnp.sum(ctab * ctab, -1)
+    cidx = jnp.asarray(r.integers(0, 16, (t, knp)), jnp.int32)
+    rowsel = jnp.arange(n // bn, dtype=jnp.int32) % t
+    skip = jnp.zeros((n // bn,), jnp.int32)
+    pa = jnp.zeros((n,), jnp.int32)
+    pd = jnp.zeros((n,), jnp.float32)
+    fn = functools.partial(_unjit(candidate_assign_tiled), bn=bn, bkn=bkn,
+                           interpret=True)
+    return fn, (x, ctab, csq, cidx, rowsel, skip, pa, pd, pd)
+
+
+def _cand_int8_build():
+    import jax.numpy as jnp
+    from ..kernels.candidate_assign import candidate_assign_int8_tiled
+    r = _rng(0)
+    n, d, t, knp, bn, bkn = 512, _KD, 8, 16, 128, 8
+    xq = jnp.asarray(r.integers(-127, 128, (n, d)), jnp.int8)
+    xsc = jnp.ones((n,), jnp.float32)
+    xerr = jnp.zeros((n,), jnp.float32)
+    qtab = jnp.asarray(r.integers(-127, 128, (t, knp, d)), jnp.int8)
+    qsc = jnp.ones((t, knp), jnp.float32)
+    qerr = jnp.zeros((t, knp), jnp.float32)
+    csq = jnp.ones((t, knp), jnp.float32)
+    rowsel = jnp.arange(n // bn, dtype=jnp.int32) % t
+    skip = jnp.zeros((n // bn,), jnp.int32)
+    fn = functools.partial(_unjit(candidate_assign_int8_tiled), bn=bn,
+                           bkn=bkn, r=8, interpret=True)
+    return fn, (xq, xsc, xerr, qtab, qsc, qerr, csq, rowsel, skip)
+
+
+def _center_sqdist_build():
+    import jax.numpy as jnp
+    from ..kernels.center_knn import _center_sqdist_padded
+    r = _rng(0)
+    c = jnp.asarray(r.standard_normal((256, _KD)), jnp.float32)
+    fn = functools.partial(_unjit(_center_sqdist_padded), bi=128, bj=128,
+                           interpret=True)
+    return fn, (c,)
+
+
+def _distance_argmin_build():
+    import jax.numpy as jnp
+    from ..kernels.distance_argmin import distance_argmin
+    r = _rng(0)
+    x = jnp.asarray(r.standard_normal((512, _KD)), jnp.float32)
+    c = jnp.asarray(r.standard_normal((256, _KD)), jnp.float32)
+    fn = functools.partial(_unjit(distance_argmin), bn=256, bk=128,
+                           interpret=True)
+    return fn, (x, c)
+
+
+_SEG_B2S = _np_i32([0, 0, 1, 1])
+
+
+def _segmented_scan_build():
+    import jax.numpy as jnp
+    from ..kernels.segmented_scan import segmented_scan
+    r = _rng(0)
+    x = jnp.asarray(r.standard_normal((512, _KD)), jnp.float32)
+    w = jnp.ones((512,), jnp.float32)
+    fn = functools.partial(_unjit(segmented_scan), bn=128, interpret=True)
+    return fn, (x, w, jnp.asarray(_SEG_B2S))
+
+
+_ATT_SEL = _np_i32(np.arange(8 * 4).reshape(8, 4) % 16)
+
+
+def _cluster_attend_build():
+    import jax.numpy as jnp
+    from ..kernels.cluster_attend import cluster_attend
+    r = _rng(0)
+    q = jnp.asarray(r.standard_normal((8, _KD)), jnp.float32)
+    kt = jnp.asarray(r.standard_normal((16, 128, _KD)), jnp.float32)
+    vt = jnp.asarray(r.standard_normal((16, 128, _KD)), jnp.float32)
+    valid = jnp.ones((16, 128), jnp.int32)
+    fn = functools.partial(_unjit(cluster_attend), interpret=True)
+    return fn, (q, kt, vt, valid, jnp.asarray(_ATT_SEL))
+
+
+def kernel_entries() -> list[KernelEntry]:
+    """One entry per Pallas kernel under ``src/repro/kernels/`` with a
+    grid/BlockSpec (candidate_assign ×2, center_knn, distance_argmin,
+    segmented_scan, cluster_attend — ``ops.py``/``quant.py`` host no
+    pallas_call of their own)."""
+    ka = "src/repro/kernels/candidate_assign.py"
+    n, bn, t = 512, 128, 8
+    rowsel = _np_i32(np.arange(n // bn) % t)
+    skip = _np_i32(np.zeros(n // bn))
+    return [
+        KernelEntry("candidate_assign_tiled", ka, _cand_tiled_build,
+                    matmul_operands=(0, 1), scalar_values=(rowsel, skip)),
+        KernelEntry("candidate_assign_int8_tiled", ka, _cand_int8_build,
+                    matmul_operands=(0, 3), scalar_values=(rowsel, skip)),
+        KernelEntry("center_sqdist", "src/repro/kernels/center_knn.py",
+                    _center_sqdist_build, matmul_operands=(0, 1)),
+        KernelEntry("distance_argmin",
+                    "src/repro/kernels/distance_argmin.py",
+                    _distance_argmin_build, matmul_operands=(0, 1)),
+        KernelEntry("segmented_scan",
+                    "src/repro/kernels/segmented_scan.py",
+                    _segmented_scan_build, scalar_values=(_SEG_B2S,)),
+        KernelEntry("cluster_attend",
+                    "src/repro/kernels/cluster_attend.py",
+                    _cluster_attend_build, matmul_operands=(0, 1),
+                    scalar_values=(_ATT_SEL,)),
+    ]

@@ -231,6 +231,7 @@ def _fit_k2means_engine(x, centers, assignment, *, kn, max_iters, counter,
     if mon.history and math.isfinite(mon.history[-1][1]):
         energy = mon.history[-1][1]
     else:       # no iterations ran, or the last flush preceded a heal
+        counter.add_distances(x.shape[0])   # n residual distances
         energy = float(jnp.sum(w * sqnorm(x - c[a])))
     return KMeansResult(c, a, energy, mon.it_done, counter.total,
                         mon.history)

@@ -248,6 +248,8 @@ def split_repair(x, w, a, c, bad: np.ndarray, key, counter=None):
     live = np.flatnonzero(np.asarray(w) > 0)
     for i, j in enumerate(sorted(bad_set)):
         d2 = sqnorm(x - c[a])
+        if counter is not None:   # donor-energy scan: n residual distances
+            counter.add_distances(x.shape[0])
         e = np.array(jax.device_get(jax.ops.segment_sum(
             jnp.asarray(w) * d2, a, num_segments=k)))
         cnt = np.array(jax.device_get(jax.ops.segment_sum(
@@ -475,6 +477,7 @@ def heal_fit(x, w, state, sb, n: int, counter, key, vio):
     unc = np.flatnonzero(untrusted & (w_h > 0))
     if unc.size:
         au, _ = chunked_argmin_sqdist(jnp.asarray(x_h[unc]), c_dev)
+        counter.add_distances(int(unc.size) * int(c_dev.shape[0]))
         a_h[unc] = np.asarray(jax.device_get(au))
     a_dev = jnp.asarray(a_h.astype(np.int32))
 

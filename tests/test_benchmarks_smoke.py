@@ -3,7 +3,8 @@ every section at tiny shapes and keep every BENCH_*.json schema intact
 (ISSUE 4; the "predict" section and BENCH_predict.json joined in ISSUE 5,
 the "ft" section and BENCH_ft.json in ISSUE 6, the "serve" section and
 BENCH_serve.json in ISSUE 7, the "quant" section and BENCH_quant.json in
-ISSUE 8, the "drift" section and BENCH_drift.json in ISSUE 9).
+ISSUE 8, the "drift" section and BENCH_drift.json in ISSUE 9, the
+"k2lint" section and k2lint_report.json in ISSUE 10).
 Slow-marked — the full
 suite catches a bench that a refactor broke before the next
 release-grade benchmark run does."""
@@ -25,7 +26,7 @@ def test_benchmarks_smoke_mode():
     assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
     assert "SMOKE OK" in proc.stdout, proc.stdout[-2000:]
     # every section must have reported a wall time
-    assert proc.stdout.count("# section time") >= 14, proc.stdout[-2000:]
+    assert proc.stdout.count("# section time") >= 15, proc.stdout[-2000:]
     # the predict section's acceptance summary line made it out
     assert "# predict summary" in proc.stdout, proc.stdout[-2000:]
     # the ft section's acceptance summary line made it out
@@ -36,3 +37,5 @@ def test_benchmarks_smoke_mode():
     assert "# quant summary" in proc.stdout, proc.stdout[-2000:]
     # the drift section's acceptance summary line made it out
     assert "# drift summary" in proc.stdout, proc.stdout[-2000:]
+    # the k2lint section produced and schema-validated its report
+    assert "# k2lint summary" in proc.stdout, proc.stdout[-2000:]
